@@ -1,0 +1,26 @@
+"""Table 1: channel execution time, original vs aggregated subscriptions
+(population-skewed 50-state subscription set)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plans import ExecutionFlags
+from benchmarks.common import build_drug_engine, emit, exec_time
+
+
+def run(rng) -> None:
+    eng = build_drug_engine(rng, match_rate=0.05)
+    t_orig, i_orig = exec_time(eng, "TweetsAboutDrugs",
+                               ExecutionFlags(scan_mode="window"))
+    t_agg, i_agg = exec_time(eng, "TweetsAboutDrugs",
+                             ExecutionFlags(scan_mode="window", aggregation=True))
+    emit("table1/original", t_orig,
+         f"results={i_orig['results']};bytes={i_orig['bytes']:.0f}")
+    emit("table1/aggregated", t_agg,
+         f"results={i_agg['results']};bytes={i_agg['bytes']:.0f}")
+    emit("table1/speedup", t_orig - t_agg,
+         f"x{t_orig / max(t_agg, 1e-9):.2f} (paper: x4.46)")
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

@@ -1,0 +1,51 @@
+"""Table 2: broker receive / convert-to-wire / send-out timings,
+original vs aggregated result layout."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.broker import fanout_sids, pack_payloads
+from repro.core.plans import ExecutionFlags
+from benchmarks.common import build_drug_engine, emit, timeit
+
+
+def run(rng) -> None:
+    # group_cap ~ per-parameter population: the wire format holds the
+    # actual sID lists (the paper's variable-length records), not a
+    # frame-sized pad
+    eng = build_drug_engine(rng, n_subs=8000, n_new=8192,
+                            match_rate=0.05, states=10, preload=0,
+                            group_cap=512)
+    rows = {}
+    for name, agg in (("original", False), ("optimized", True)):
+        flags = ExecutionFlags(scan_mode="bad_index", aggregation=agg)
+        rep = eng.execute_channel("TweetsAboutDrugs", flags, advance=False)
+        sids = eng.group_sids_array("TweetsAboutDrugs", agg)
+
+        # receive: platform -> broker transfer (device->host of the payloads)
+        payload, count = pack_payloads(rep.result, sids, payload_words=16,
+                                       max_pairs=1 << 13)
+        t_recv = timeit(lambda: np.asarray(payload))
+        # convert: materialize the wire payload rows
+        t_conv = timeit(lambda: pack_payloads(rep.result, sids,
+                                              payload_words=16,
+                                              max_pairs=1 << 13)[0])
+        # send: per-subscriber dispatch list (identical volume both layouts)
+        t_send = timeit(lambda: fanout_sids(rep.result, sids,
+                                            max_notify=1 << 15)[0])
+        rows[name] = (t_recv, t_conv, t_send)
+        emit(f"table2/{name}/receive", t_recv,
+             f"rows={int(count)};bytes={rep.broker_bytes.sum():.0f}")
+        emit(f"table2/{name}/convert", t_conv, f"rows={int(count)}")
+        emit(f"table2/{name}/send", t_send, f"notified={rep.num_notified}")
+    o, p = rows["original"], rows["optimized"]
+    emit("table2/ratio", 0.0,
+         f"recv_x{o[0]/max(p[0],1e-9):.2f};conv_x{o[1]/max(p[1],1e-9):.2f};"
+         f"send_x{o[2]/max(p[2],1e-9):.2f} (paper: 5.1/1.9/1.0)")
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

@@ -1,0 +1,72 @@
+"""Shared benchmark scaffolding: CPU-scaled BAD workloads + timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import records as R
+from repro.core.channel import tweets_about_drugs
+from repro.core.engine import BADEngine
+from repro.core.plans import ExecutionFlags
+from repro.data.synthetic import drug_tweak, subscriptions_by_population, tweet_batch
+
+# CPU-scale factors vs the paper (§5.1): 1M subs -> 50k, 1.2M tweets/period ->
+# 32k. Structure (selectivities, skew, group caps) is unchanged.
+N_SUBS = 50_000
+N_TWEETS_PERIOD = 32_768
+DATASET_CAP = 1 << 17
+PRELOAD = 60_000
+
+
+def timeit(fn: Callable, *args, repeats: int = 3) -> float:
+    fn(*args)                                    # warm (trace+compile)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out) if out is not None else None
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def build_drug_engine(rng, n_subs: int = N_SUBS, n_new: int = N_TWEETS_PERIOD,
+                      match_rate: float = 0.02, group_cap=None,
+                      states: int = 50, preload: int = PRELOAD) -> BADEngine:
+    # engines built repeatedly inside a sweep must see IDENTICAL data
+    rng = np.random.default_rng(4242)
+    eng = BADEngine(dataset_capacity=DATASET_CAP, index_capacity=1 << 15,
+                    max_window=1 << 15, max_candidates=1 << 12,
+                    brokers=("Broker1", "Broker2", "Broker3", "Broker4"),
+                    group_cap=group_cap)
+    eng.create_channel(tweets_about_drugs())
+    params, brokers = subscriptions_by_population(rng, n_subs, 4)
+    params = params % states
+    eng.subscribe_bulk("TweetsAboutDrugs", params, brokers)
+    if preload:
+        b = tweet_batch(rng, preload, t0=0)
+        eng.ingest(b)
+        eng.execute_channel("TweetsAboutDrugs",
+                            ExecutionFlags(scan_mode="bad_index"))  # advance
+    f = tweet_batch(rng, n_new, t0=10_000)
+    fields = drug_tweak(np.asarray(f.fields).copy(), rng, match_rate)
+    eng.ingest(R.RecordBatch.from_numpy(fields, np.asarray(f.location)))
+    return eng
+
+
+def exec_time(eng: BADEngine, channel: str, flags: ExecutionFlags,
+              repeats: int = 3) -> Tuple[float, Dict]:
+    rep = eng.execute_channel(channel, flags, advance=False)   # warm + counts
+    best = float("inf")
+    for _ in range(repeats):
+        r = eng.execute_channel(channel, flags, advance=False, timed=True)
+        best = min(best, r.wall_time_s)
+    return best, {"results": rep.num_results, "notified": rep.num_notified,
+                  "scanned": rep.scanned,
+                  "bytes": float(rep.broker_bytes.sum())}
+
+
+def emit(name: str, seconds: float, derived: str) -> None:
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,38 @@
+"""Figs. 12-13: subgroup size vs execution time (the frame-size trade-off).
+
+All subscriptions ask for the same parameter ("CA"); the group cap sweeps
+from one-giant-group to one-sub-per-group. The paper finds a U-curve with the
+minimum where group record size ~ frame size; on TPU the analogue is the
+lane-aligned cap (128-multiples), and the inefficiency at tiny caps is
+duplicate result computation, at huge caps lost parallelism (here: gather/
+segment work over one huge padded group row).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plans import ExecutionFlags
+from benchmarks.common import build_drug_engine, emit, exec_time
+
+CA = 4  # encoded state id
+N_SUBS = 16_384
+
+
+def run(rng) -> None:
+    caps = [N_SUBS, N_SUBS // 4, N_SUBS // 16, 2048, 512, 128, 32, 8, 1]
+    flags = ExecutionFlags(scan_mode="bad_index", aggregation=True)
+    times = {}
+    for cap in caps:
+        eng = build_drug_engine(rng, n_subs=N_SUBS, n_new=8192,
+                                match_rate=0.02, group_cap=cap, states=1,
+                                preload=0)
+        t, info = exec_time(eng, "TweetsAboutDrugs", flags)
+        times[cap] = t
+        emit(f"group_size/cap_{cap}", t,
+             f"results={info['results']};notified={info['notified']}")
+    best = min(times, key=times.get)
+    emit("group_size/best_cap", times[best], f"argmin_cap={best}")
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

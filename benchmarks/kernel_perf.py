@@ -1,0 +1,39 @@
+"""TPU-substrate kernel microbenchmarks (CPU wall time; interpret-mode Pallas
+is a correctness artifact, not a speed artifact — the TPU perf story lives in
+EXPERIMENTS.md §Roofline). Reports kernel-vs-oracle parity cost and the
+ingest-path throughput of the jnp predicate evaluator the engine actually
+uses on CPU."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.predicates import Predicate, compile_conditions, evaluate_conditions
+from repro.kernels.predicate_filter import ops as pf_ops
+from repro.kernels.spatial_match import ref as sm_ref
+from benchmarks.common import emit, timeit
+
+
+def run(rng) -> None:
+    fields = jnp.asarray(rng.integers(0, 100, (16_384, 10)).astype(np.int32))
+    chans = [[Predicate.parse(3, "==", 10), Predicate.parse(6, "==", 3)],
+             [Predicate.parse(3, "==", 10)],
+             [Predicate.parse(1, "==", 0), Predicate.parse(2, ">", 10_000),
+              Predicate.parse(4, ">", 5)]]
+    conds = compile_conditions(chans)
+    t_ref = timeit(lambda: evaluate_conditions(fields, conds))
+    emit("kernels/conditions_eval_jnp_16k", t_ref,
+         f"records_per_s={16_384/max(t_ref,1e-9):.2e}")
+    t_canon = timeit(lambda: pf_ops.predicate_filter_ref(fields, conds))
+    emit("kernels/conditions_eval_interval_16k", t_canon,
+         f"records_per_s={16_384/max(t_canon,1e-9):.2e}")
+
+    t = jnp.asarray((rng.normal(size=(1024, 2)) * 30).astype(np.float32))
+    u = jnp.asarray((rng.normal(size=(8192, 2)) * 30).astype(np.float32))
+    t_sm = timeit(lambda: sm_ref.spatial_match(t, u, 10.0))
+    emit("kernels/spatial_match_1kx8k", t_sm,
+         f"pairs_per_s={1024*8192/max(t_sm,1e-9):.2e}")
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

@@ -1,0 +1,49 @@
+"""Fig. 17: maximum subscriptions supportable within the period deadline.
+
+For each optimization combo, double the subscription count until channel
+execution exceeds the (CPU-scaled) deadline; report the largest passing
+count. Mirrors the paper's 'max subscriptions within the 10-minute period'.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plans import ExecutionFlags
+from benchmarks.common import build_drug_engine, emit, exec_time
+
+DEADLINE_S = 0.250   # CPU-scaled period budget
+COMBOS = {
+    "original": ExecutionFlags(scan_mode="window"),
+    "index_only": ExecutionFlags(scan_mode="bad_index"),
+    "agg_only": ExecutionFlags(scan_mode="window", aggregation=True),
+    "push_only": ExecutionFlags(scan_mode="window", param_pushdown=True),
+    "full": ExecutionFlags.fully_optimized(),
+}
+
+
+def max_subs(rng, flags) -> int:
+    n = 2048
+    best = 0
+    while n <= 262_144:
+        eng = build_drug_engine(rng, n_subs=n, n_new=8192, match_rate=0.02,
+                                preload=0)
+        t, _ = exec_time(eng, "TweetsAboutDrugs", flags, repeats=2)
+        if t > DEADLINE_S:
+            break
+        best = n
+        n *= 2
+    return best
+
+
+def run(rng) -> None:
+    results = {}
+    for name, flags in COMBOS.items():
+        m = max_subs(rng, flags)
+        results[name] = m
+        emit(f"fig17/{name}", DEADLINE_S, f"max_subs={m}")
+    emit("fig17/gain", 0.0,
+         f"full_vs_original_x{results['full']/max(results['original'],1):.1f}")
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

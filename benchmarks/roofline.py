@@ -1,0 +1,125 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+  compute term    = per-device FLOPs / peak FLOP/s        (197e12 bf16, v5e)
+  memory term     = per-device HLO bytes / HBM bandwidth  (819e9 B/s)
+  collective term = per-device collective bytes / link bw (50e9 B/s per the
+                    task formula: collective_bytes / (chips x link_bw), with
+                    collective_bytes summed per device from partitioned HLO)
+
+plus MODEL_FLOPS = 6*N(_active)*D and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs x devices).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+
+SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                "decode_32k": 128, "long_500k": 1}
+
+
+def analyze(rec: Dict[str, Any]) -> Dict[str, Any]:
+    t = rec["totals"]
+    n_dev = rec["devices"]
+    compute_s = t["flops"] / PEAK_FLOPS
+    memory_s = t["bytes"] / HBM_BW
+    coll_s = t["collective_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    # MODEL_FLOPS: 6*N*D for train; 2*N*D for inference (fwd only).
+    # Enc-dec: encoder params see src tokens, decoder params see tgt=src/4
+    # (cross-attn K/V projections of encoder memory charged to the decoder).
+    n_act = rec["active_param_count"]
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    factor = 6.0 if rec["kind"] == "train" else 2.0
+    if rec.get("n_enc_layers"):
+        n_layers_total = rec["n_enc_layers"] + rec["superlayer_repeat"]
+        n_enc = n_act * rec["n_enc_layers"] / n_layers_total
+        n_dec = n_act - n_enc
+        model_flops = factor * (n_enc * tokens + n_dec * tokens / 4)
+    else:
+        model_flops = factor * n_act * tokens
+    hlo_global = t["flops"] * n_dev
+    useful = model_flops / hlo_global if hlo_global else 0.0
+    mfu = model_flops / (step_s * n_dev * PEAK_FLOPS) if step_s else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "bottleneck": bottleneck, "step_s": step_s,
+        "model_flops": model_flops, "useful_ratio": useful, "mfu_bound": mfu,
+        "peak_gib": rec["full"]["memory"]["peak_estimate_bytes"] / 2 ** 30,
+        "fits_16g": rec["full"]["memory"]["peak_estimate_bytes"] <= 16 * 2 ** 30,
+        "grad_accum": rec.get("grad_accum", 1),
+        "seq_shard": rec.get("seq_shard", False),
+    }
+
+
+def load(dir_: str) -> List[Dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") == "ok":
+            rows.append(analyze(rec))
+        else:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh", "-"), "skipped": True,
+                         "reason": rec.get("skip_reason", "?")})
+    return rows
+
+
+def fmt_md(rows: List[Dict[str, Any]]) -> str:
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | useful | MFU-bound | peak GiB | fits16G |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                       f"| SKIP | — | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['bottleneck']}** "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} "
+            f"| {r['peak_gib']:.2f} | {'Y' if r['fits_16g'] else 'N'} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.mesh:
+        rows = [r for r in rows if r.get("mesh") == args.mesh]
+    if args.md:
+        print(fmt_md(rows))
+        return
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
+          "useful_ratio,mfu_bound,peak_gib,fits")
+    for r in rows:
+        if r.get("skipped"):
+            print(f"{r['arch']},{r['shape']},{r['mesh']},,,,SKIP,,,,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['compute_s']:.4e},"
+              f"{r['memory_s']:.4e},{r['collective_s']:.4e},{r['bottleneck']},"
+              f"{r['useful_ratio']:.3f},{r['mfu_bound']:.4f},"
+              f"{r['peak_gib']:.2f},{int(r['fits_16g'])}")
+
+
+if __name__ == "__main__":
+    main()

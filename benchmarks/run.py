@@ -1,0 +1,49 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: python -m benchmarks.run [--only fig16,table1,...]
+
+CPU-scaled versions of every paper experiment (structure preserved, counts
+shrunk — see benchmarks/common.py). The paper's *ratios* are the validation
+target; each derived column quotes the paper's number where applicable.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import (aggregation, bad_index, broker_ops, group_size,
+                        kernel_perf, max_subscriptions, query_plan,
+                        real_world, scaling)
+
+SUITES = {
+    "fig12_13_group_size": group_size.run,
+    "table1_aggregation": aggregation.run,
+    "table2_broker_ops": broker_ops.run,
+    "fig14_query_plan": query_plan.run,
+    "fig16_bad_index": bad_index.run,
+    "fig17_max_subscriptions": max_subscriptions.run,
+    "fig18_19_scaling": scaling.run,
+    "fig21_real_world": real_world.run,
+    "kernel_perf": kernel_perf.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite substrings")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in SUITES.items():
+        if args.only and not any(s in name for s in args.only.split(",")):
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn(np.random.default_rng(0))
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

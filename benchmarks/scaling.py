@@ -1,0 +1,45 @@
+"""Figs. 18-19: speed-up and scale-up of the optimized pipeline.
+
+One CPU core cannot time real multi-node execution, so the cluster dimension
+is modeled the way the paper's experiments scale *work per node*:
+
+- speed-up (Fig 18): total load fixed; per-node work = load / nodes. We time
+  the optimized channel on load/nodes records for nodes in {2,4,8} and report
+  T(2)/T(n) (ideal: n/2).
+- scale-up (Fig 19): per-node work fixed; we time a fixed-size per-node slice
+  for each cluster size and rate (ideal: flat).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plans import ExecutionFlags
+from benchmarks.common import build_drug_engine, emit, exec_time
+
+TOTAL = 32_768
+FLAGS = ExecutionFlags.fully_optimized()
+
+
+def run(rng) -> None:
+    times = {}
+    for nodes in (2, 4, 8):
+        eng = build_drug_engine(rng, n_subs=20_000, n_new=TOTAL // nodes,
+                                match_rate=0.03, preload=0)
+        t, _ = exec_time(eng, "TweetsAboutDrugs", FLAGS)
+        times[nodes] = t
+        emit(f"fig18/speedup/nodes{nodes}", t,
+             f"speedup_x{times[2]/max(t,1e-9):.2f} (ideal x{nodes/2:.0f})")
+    for rate in (1000, 2000):
+        per_node = rate * 8        # 8s of CPU-scaled ingest per node
+        base = None
+        for nodes in (2, 4, 8):
+            eng = build_drug_engine(rng, n_subs=20_000, n_new=per_node,
+                                    match_rate=0.03, preload=0)
+            t, _ = exec_time(eng, "TweetsAboutDrugs", FLAGS)
+            base = base or t
+            emit(f"fig19/scaleup/rate{rate}/nodes{nodes}", t,
+                 f"vs_base_x{t/max(base,1e-9):.2f} (ideal x1.0)")
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

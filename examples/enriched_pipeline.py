@@ -1,0 +1,89 @@
+"""END-TO-END DRIVER: serve a model inside the Big Active Data loop.
+
+The paper's EnrichedTweets are produced by an upstream enrichment job (its
+ref [32]); here the enrichment IS the framework's analytical engine: raw
+tweet token payloads are scored by a (reduced) qwen2-family LM in batched
+requests, the scores become predicate fields (threatening_rate proxy), the
+records flow through ingestion-time BAD indexing, channel execution and
+broker fan-out — the full Fig. 1 pipeline with a model in the loop.
+
+    PYTHONPATH=src python examples/enriched_pipeline.py [--periods 3]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import records as R
+from repro.core.channel import most_threatening_tweets, tweets_about_drugs
+from repro.core.engine import BADEngine
+from repro.core.plans import ExecutionFlags
+from repro.data.synthetic import tweet_batch
+from repro.models.model import ModelApi
+
+
+def build_scorer():
+    """Reduced-config LM scoring head: tokens -> 0..10 'threatening' rate."""
+    cfg = configs.get_reduced("qwen2-1.5b")
+    api = ModelApi(cfg)
+    params = api.init(jax.random.key(0))
+
+    @jax.jit
+    def score(tokens):
+        from repro.models import lm
+        logits, _ = lm.forward(params, cfg, tokens=tokens)
+        # pool last-position logits into an 11-bucket score
+        pooled = jnp.mean(logits[:, -1, :64], axis=-1)
+        return (jnp.clip(jnp.abs(pooled) * 40.0, 0, 10)).astype(jnp.int32)
+
+    return score, cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--periods", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=2048)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    score, cfg = build_scorer()
+
+    eng = BADEngine(dataset_capacity=1 << 15, index_capacity=1 << 14,
+                    max_window=1 << 14, max_candidates=1 << 11,
+                    brokers=("BrokerA", "BrokerB"))
+    eng.create_channel(tweets_about_drugs())
+    eng.create_channel(most_threatening_tweets())
+    params, brokers = (rng.integers(0, 50, 2000).astype(np.int32),
+                       rng.integers(0, 2, 2000).astype(np.int32))
+    eng.subscribe_bulk("TweetsAboutDrugs", params, brokers)
+    eng.subscribe_bulk("MostThreateningTweets", params, brokers)
+    print(f"2 channels, {2*len(params)} subscriptions, enrichment model "
+          f"{cfg.name}-reduced ({ModelApi(cfg).param_count():,} params)")
+
+    for period in range(args.periods):
+        t0 = time.perf_counter()
+        # 1. raw feed: tweets with token payloads, no enrichment fields yet
+        raw = tweet_batch(rng, args.batch, t0=1 + period * 600)
+        payload = rng.integers(0, cfg.vocab_size,
+                               (args.batch, 32)).astype(np.int32)
+        # 2. enrichment: batched model requests score the payloads
+        rates = np.asarray(score(jnp.asarray(payload)))
+        fields = np.asarray(raw.fields).copy()
+        fields[:, R.THREATENING_RATE] = rates
+        fields[rates == 10, R.DRUG_ACTIVITY] = 3     # flag manufacturing
+        t_enrich = time.perf_counter() - t0
+        # 3. ingestion: conditionsList eval + BAD-index maintenance
+        eng.ingest(R.RecordBatch.from_numpy(fields, np.asarray(raw.location)))
+        # 4. channel execution + broker fan-out
+        for chan in ("TweetsAboutDrugs", "MostThreateningTweets"):
+            rep = eng.execute_channel(chan, ExecutionFlags.fully_optimized())
+            print(f"period {period} {chan}: matched={rep.scanned} "
+                  f"groups={rep.num_results} notified={rep.num_notified} "
+                  f"exec={rep.wall_time_s*1e3:.1f}ms enrich={t_enrich*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

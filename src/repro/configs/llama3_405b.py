@@ -1,0 +1,22 @@
+"""llama3-405b [dense] — 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256. GQA, 128k vocab. [arXiv:2407.21783; unverified]
+
+Memory plan for 256 x v5e-16GB: bf16 params (810 GB -> 3.2 GB/chip with
+TP x FSDP), Adafactor (factored 2nd moment + bf16 1st moment), remat per
+layer, 8-way gradient accumulation (microbatch 32 x 4096).
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b", family="dense",
+        n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, d_ff=53248,
+        vocab_size=128256, head_dim=128, qkv_bias=False, rope_theta=5e5,
+        block_pattern=("dense",), superlayer_repeat=126,
+        param_dtype=jnp.bfloat16, grad_accum=16, optimizer="adafactor",
+        adafactor_beta1=0.0,
+        remat=True, sub_quadratic=False, seq_shard_activations=True,
+    ).validate()

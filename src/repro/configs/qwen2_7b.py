@@ -1,0 +1,16 @@
+"""qwen2-7b [dense] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+GQA with QKV bias. [arXiv:2407.10671; hf]"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-7b", family="dense",
+        n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+        vocab_size=152064, head_dim=128, qkv_bias=True, rope_theta=1e6,
+        block_pattern=("dense",), superlayer_repeat=28,
+        param_dtype=jnp.bfloat16, grad_accum=16, optimizer="adamw",
+        sub_quadratic=False,
+    ).validate()

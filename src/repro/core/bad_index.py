@@ -1,0 +1,136 @@
+"""The BAD index (paper §4.3): a PK-only partial index fed at ingestion time.
+
+Per channel we keep an append-only buffer of row ids (primary keys) of records
+that satisfied *all* of the channel's fixed predicates when they were
+ingested, plus a watermark: the buffer length at the previous channel
+execution. Entries in ``[watermark, count)`` are exactly the "new since last
+execution" records — the LSM time-filter realization of ``is_new``.
+
+Everything here is functional and jit-compatible (fixed-capacity buffers,
+masked windows). The ingestion-side predicate evaluation itself lives in
+``predicates.evaluate_conditions`` (oracle) / ``kernels.predicate_filter``
+(Pallas); this module consumes the (N, C) match bitmap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BADIndexState:
+    """Stacked per-channel index buffers.
+
+    row_ids:    (C, cap) int32 -- appended PKs, -1 padded
+    counts:     (C,) int32     -- live entries per channel
+    watermarks: (C,) int32     -- counts at last execution (time filter)
+    overflowed: (C,) bool      -- capacity exceeded since last execution
+    """
+
+    row_ids: jnp.ndarray
+    counts: jnp.ndarray
+    watermarks: jnp.ndarray
+    overflowed: jnp.ndarray
+
+    @property
+    def num_channels(self) -> int:
+        return self.row_ids.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.row_ids.shape[1]
+
+    def tree_flatten(self):
+        return (self.row_ids, self.counts, self.watermarks, self.overflowed), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def create(num_channels: int, capacity: int) -> "BADIndexState":
+        return BADIndexState(
+            row_ids=jnp.full((num_channels, capacity), -1, dtype=jnp.int32),
+            counts=jnp.zeros((num_channels,), dtype=jnp.int32),
+            watermarks=jnp.zeros((num_channels,), dtype=jnp.int32),
+            overflowed=jnp.zeros((num_channels,), dtype=jnp.bool_),
+        )
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def insert(state: BADIndexState, row_ids: jnp.ndarray,
+           matches: jnp.ndarray) -> BADIndexState:
+    """Append matching row ids to every channel's buffer (Algorithm 2).
+
+    row_ids: (N,) int32 of the just-ingested records
+    matches: (N, C) bool from the conditionsList evaluation
+    """
+    cap = state.capacity
+
+    def one_channel(buf, count, mask):
+        # Stable compaction: position of each match among matches.
+        pos = jnp.cumsum(mask.astype(jnp.int32)) - 1          # (N,)
+        dest = jnp.where(mask, count + pos, cap)              # cap = dropped
+        n_new = jnp.sum(mask.astype(jnp.int32))
+        overflow = count + n_new > cap
+        dest = jnp.minimum(dest, cap)                          # clamp for scatter-drop
+        buf = buf.at[dest].set(jnp.where(mask, row_ids, -1), mode="drop")
+        return buf, jnp.minimum(count + n_new, cap), overflow
+
+    bufs, counts, over = jax.vmap(one_channel)(
+        state.row_ids, state.counts, matches.T)
+    return BADIndexState(bufs, counts, state.watermarks,
+                         state.overflowed | over)
+
+
+def new_entries(state: BADIndexState, channel: int,
+                max_new: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Window of entries since the watermark for one channel.
+
+    Returns (row_ids (max_new,) int32, valid (max_new,) bool). max_new is a
+    static bound (the per-period ingest budget); excess entries beyond it are
+    reported via count so callers can iterate.
+    """
+    wm = state.watermarks[channel]
+    count = state.counts[channel]
+    idx = wm + jnp.arange(max_new, dtype=jnp.int32)
+    valid = idx < count
+    rows = jnp.where(valid, state.row_ids[channel][jnp.minimum(idx, state.capacity - 1)], -1)
+    return rows, valid
+
+
+def advance_watermark(state: BADIndexState, channel: int) -> BADIndexState:
+    """Mark the channel as executed: future reads see only newer entries."""
+    return BADIndexState(
+        state.row_ids,
+        state.counts,
+        state.watermarks.at[channel].set(state.counts[channel]),
+        state.overflowed.at[channel].set(False),
+    )
+
+
+def compact(state: BADIndexState) -> BADIndexState:
+    """Drop already-delivered entries (host-side maintenance between periods).
+
+    Shifts each channel's live window ``[watermark, count)`` to the front so
+    the fixed-capacity buffer behaves like the paper's LSM merge of old
+    components. Not jitted (runs in the engine's maintenance slot).
+    """
+    import numpy as np
+
+    bufs = np.asarray(state.row_ids).copy()
+    counts = np.asarray(state.counts).copy()
+    wms = np.asarray(state.watermarks).copy()
+    for c in range(bufs.shape[0]):
+        live = bufs[c, wms[c]:counts[c]].copy()
+        bufs[c] = -1
+        bufs[c, : live.shape[0]] = live
+        counts[c] = live.shape[0]
+        wms[c] = 0
+    return BADIndexState(jnp.asarray(bufs), jnp.asarray(counts),
+                         jnp.asarray(wms), state.overflowed)

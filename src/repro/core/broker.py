@@ -1,0 +1,93 @@
+"""Broker subsystem (paper §3.2, §4.1.2, Table 2).
+
+Brokers are HTTP endpoints in the real platform; here they are simulated but
+their *work* is real and measurable, mirroring Table 2's three stages:
+
+  receive  -- proportional to platform->broker bytes (ChannelResult.broker_bytes)
+  convert  -- "converting to JSON": materialize a wire payload buffer. For the
+              original layout that is one record copy per subscription; for the
+              aggregated layout one record copy per group + the sID list.
+  send     -- per-subscriber dispatch; identical between layouts (Table 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plans import ChannelResult
+
+HEADER_WORDS = 4  # [row_id, target_idx, member_count, payload_words]
+
+
+@dataclasses.dataclass
+class BrokerRegistry:
+    names: Dict[str, int]
+
+    @staticmethod
+    def create(*names: str) -> "BrokerRegistry":
+        return BrokerRegistry({n: i for i, n in enumerate(names)})
+
+    @property
+    def num_brokers(self) -> int:
+        return len(self.names)
+
+
+def pack_payloads(result: ChannelResult, group_sids: jnp.ndarray,
+                  payload_words: int, max_pairs: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize the wire payload: (max_pairs, HEADER + cap + payload_words).
+
+    One row per *result pair* (group or subscription). This is the broker's
+    "convert" work: in the aggregated layout there are far fewer rows, each
+    carrying its sID list; in the original layout there is one row per
+    subscription with cap == 1.
+    """
+    cap = group_sids.shape[1] if group_sids.ndim == 2 else 1
+    rows = result.pair_rows.ravel()
+    tgts = result.pair_targets.ravel()
+    valid = result.pair_valid.ravel()
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dest = jnp.where(valid, jnp.minimum(pos, max_pairs - 1), max_pairs)
+    width = HEADER_WORDS + cap + payload_words
+    out = jnp.zeros((max_pairs + 1, width), dtype=jnp.int32)
+    tgt_safe = jnp.maximum(tgts, 0)
+    sids = group_sids[tgt_safe] if group_sids.ndim == 2 else tgt_safe[:, None]
+    members = jnp.sum((sids >= 0).astype(jnp.int32), axis=-1)
+    header = jnp.stack([rows, tgts, members,
+                        jnp.full_like(rows, payload_words)], axis=-1)
+    payload = jnp.broadcast_to(rows[:, None], (rows.shape[0], payload_words))
+    line = jnp.concatenate([header, sids, payload], axis=-1)
+    out = out.at[dest].set(jnp.where(valid[:, None], line, 0), mode="drop")
+    count = jnp.sum(valid.astype(jnp.int32))
+    return out[:max_pairs], count
+
+
+def fanout_sids(result: ChannelResult, group_sids: jnp.ndarray,
+                max_notify: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The broker's "send" stage: the flat list of end subscribers to notify.
+    Identical volume for original and aggregated layouts (Table 2, row 3)."""
+    tgts = result.pair_targets.ravel()
+    valid = result.pair_valid.ravel()
+    tgt_safe = jnp.maximum(tgts, 0)
+    sids = group_sids[tgt_safe] if group_sids.ndim == 2 else tgt_safe[:, None]
+    member_valid = (sids >= 0) & valid[:, None]
+    flat = jnp.where(member_valid, sids, -1).ravel()
+    mask = flat >= 0
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    dest = jnp.where(mask, jnp.minimum(pos, max_notify - 1), max_notify)
+    out = jnp.full((max_notify + 1,), -1, dtype=jnp.int32)
+    out = out.at[dest].set(flat, mode="drop")
+    return out[:max_notify], jnp.sum(mask.astype(jnp.int32))
+
+
+def broker_traffic_summary(result: ChannelResult) -> Dict[str, np.ndarray]:
+    return {
+        "bytes_per_broker": np.asarray(result.broker_bytes),
+        "results_per_broker": np.asarray(result.broker_results),
+        "total_bytes": np.asarray(result.broker_bytes.sum()),
+        "total_results": np.asarray(result.num_results),
+        "total_notified": np.asarray(result.num_notified),
+    }

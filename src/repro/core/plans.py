@@ -1,0 +1,244 @@
+"""Executable channel plans: original vs the three optimizations (paper §4).
+
+All plan functions are pure and jit-compatible (static shapes, masked
+windows). The engine binds them with static ``ExecutionFlags``:
+
+scan_mode (how candidate records are found)          -- paper Fig. 11
+  "full"       full dataset scan + is_new timestamp filter   (original, no index)
+  "window"     delta scan of records since last execution    (ts-ordered storage)
+  "trad_index" traditional secondary index on the single most selective fixed
+               predicate: candidates = that predicate's matches, remaining
+               predicates evaluated at query time
+  "bad_index"  the BAD index: precomputed full-conjunction matches + watermark
+aggregation     join against subscription-groups instead of raw subscriptions
+param_pushdown  early semi-join with UserParameters           -- paper Fig. 9(b)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bad_index as bidx
+from repro.core import records as R
+from repro.core.predicates import CompiledConditions, apply_op, evaluate_conditions
+from repro.core.user_params import semi_join
+
+SCAN_MODES = ("full", "window", "trad_index", "bad_index")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionFlags:
+    scan_mode: str = "window"
+    aggregation: bool = False
+    param_pushdown: bool = False
+
+    def __post_init__(self):
+        if self.scan_mode not in SCAN_MODES:
+            raise ValueError(f"scan_mode must be one of {SCAN_MODES}")
+
+    @staticmethod
+    def original() -> "ExecutionFlags":
+        return ExecutionFlags(scan_mode="full")
+
+    @staticmethod
+    def fully_optimized() -> "ExecutionFlags":
+        return ExecutionFlags(scan_mode="bad_index", aggregation=True,
+                              param_pushdown=True)
+
+
+class TargetArrays(NamedTuple):
+    """Device-side join targets: either raw subscriptions or groups."""
+
+    params: jnp.ndarray        # (T,) int32
+    brokers: jnp.ndarray       # (T,) int32
+    counts: jnp.ndarray        # (T,) int32  (1 for raw subscriptions)
+    by_param: jnp.ndarray      # (domain, maxT) int32, -1 padded
+    by_param_count: jnp.ndarray  # (domain,) int32
+
+
+class CandidateSet(NamedTuple):
+    rows: jnp.ndarray      # (Rmax,) int32 row ids
+    valid: jnp.ndarray     # (Rmax,) bool
+    scanned: jnp.ndarray   # () int32 -- records examined (cost accounting)
+
+
+class ChannelResult(NamedTuple):
+    pair_rows: jnp.ndarray     # (Rmax, maxT) int32 record row of each result pair
+    pair_targets: jnp.ndarray  # (Rmax, maxT) int32 target (sub or group) index
+    pair_valid: jnp.ndarray    # (Rmax, maxT) bool
+    matched_rows: jnp.ndarray  # (Rmax,) int32 candidate rows that matched preds
+    matched_valid: jnp.ndarray  # (Rmax,) bool
+    num_results: jnp.ndarray   # () int32 -- result records produced (pairs)
+    num_notified: jnp.ndarray  # () int32 -- end subscribers covered
+    scanned: jnp.ndarray       # () int32
+    broker_bytes: jnp.ndarray  # (B,) f32 platform->broker traffic (bytes)
+    broker_results: jnp.ndarray  # (B,) int32 results per broker
+
+
+# ---------------------------------------------------------------------------
+# Step 1: candidate discovery
+# ---------------------------------------------------------------------------
+
+
+def candidates_full_scan(ds: R.ActiveDataset, conds_one: CompiledConditions,
+                         last_ts: jnp.ndarray, max_rows: int) -> CandidateSet:
+    """Original plan: scan the whole dataset, is_new() via timestamp compare,
+    then evaluate every fixed predicate at query time."""
+    cap = ds.capacity
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    row_ids = _slot_row_ids(ds, slots)
+    live = (row_ids >= 0) & (row_ids < ds.size)
+    ts = ds.fields[:, R.TIMESTAMP]
+    is_new = ts > last_ts
+    match = evaluate_conditions(ds.fields, conds_one)[:, 0]
+    keep = live & is_new & match
+    rows, valid = _compact(row_ids, keep, max_rows)
+    return CandidateSet(rows, valid, jnp.asarray(cap, jnp.int32))
+
+
+def candidates_window(ds: R.ActiveDataset, conds_one: CompiledConditions,
+                      last_size: jnp.ndarray, max_rows: int) -> CandidateSet:
+    """Delta scan: only records ingested since last execution (ts-ordered)."""
+    row_ids = last_size + jnp.arange(max_rows, dtype=jnp.int32)
+    in_range = row_ids < ds.size
+    slots = row_ids % ds.capacity
+    fields = ds.fields[slots]
+    match = evaluate_conditions(fields, conds_one)[:, 0]
+    keep = in_range & match
+    return CandidateSet(jnp.where(keep, row_ids, -1), keep,
+                        jnp.minimum(ds.size - last_size, max_rows).astype(jnp.int32))
+
+
+def candidates_trad_index(ds: R.ActiveDataset, conds_one: CompiledConditions,
+                          best_pred: int, last_size: jnp.ndarray,
+                          max_rows: int, max_candidates: int) -> CandidateSet:
+    """Traditional secondary index on the most selective fixed predicate:
+    the index returns rows matching that ONE predicate (compacted — this is
+    the index read), remaining predicates are evaluated on the candidates."""
+    row_ids = last_size + jnp.arange(max_rows, dtype=jnp.int32)
+    in_range = row_ids < ds.size
+    slots = row_ids % ds.capacity
+    fields = ds.fields[slots]
+    fi = conds_one.field_idx[0, best_pred]
+    op = conds_one.op[0, best_pred]
+    val = conds_one.value[0, best_pred]
+    idx_hit = apply_op(fields[:, fi], jnp.asarray(op), jnp.asarray(val)) & in_range
+    cand_rows, cand_valid = _compact(row_ids, idx_hit, max_candidates)
+    # Evaluate the remaining predicates only on index candidates.
+    cfields = ds.fields[jnp.maximum(cand_rows, 0) % ds.capacity]
+    match = evaluate_conditions(cfields, conds_one)[:, 0]
+    keep = cand_valid & match
+    return CandidateSet(jnp.where(keep, cand_rows, -1), keep,
+                        jnp.sum(idx_hit.astype(jnp.int32)))
+
+
+def candidates_bad_index(ds: R.ActiveDataset, index: bidx.BADIndexState,
+                         channel: int, max_rows: int) -> CandidateSet:
+    """BAD-index plan: fixed predicates were already evaluated at ingestion;
+    read only entries newer than the watermark. No re-evaluation."""
+    rows, valid = bidx.new_entries(index, channel, max_rows)
+    return CandidateSet(rows, valid, jnp.sum(valid.astype(jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Step 2+3: (optional) UserParameters semi-join, then the target join
+# ---------------------------------------------------------------------------
+
+
+def join_param_targets(ds: R.ActiveDataset, cand: CandidateSet,
+                       targets: TargetArrays, param_field: int,
+                       payload_bytes: int, num_brokers: int,
+                       up_mask: Optional[jnp.ndarray],
+                       aggregated: bool) -> ChannelResult:
+    """record[param_field] == target.param join via the dense by_param map."""
+    slots = jnp.maximum(cand.rows, 0) % ds.capacity
+    pvals = ds.fields[slots, param_field]                   # (Rm,)
+    valid = cand.valid
+    if up_mask is not None:
+        valid = valid & semi_join(pvals, up_mask)           # Fig. 9(b) early join
+    domain = targets.by_param.shape[0]
+    pv = jnp.clip(pvals, 0, domain - 1)
+    tgt = targets.by_param[pv]                              # (Rm, maxT)
+    tgt_n = targets.by_param_count[pv]                      # (Rm,)
+    maxT = tgt.shape[1]
+    pair_valid = valid[:, None] & (jnp.arange(maxT)[None, :] < tgt_n[:, None]) & (tgt >= 0)
+    tgt_safe = jnp.maximum(tgt, 0)
+    pair_rows = jnp.where(pair_valid, cand.rows[:, None], -1)
+    pair_targets = jnp.where(pair_valid, tgt, -1)
+    members = jnp.where(pair_valid, targets.counts[tgt_safe], 0)  # subscribers per pair
+    num_results = jnp.sum(pair_valid.astype(jnp.int32))
+    num_notified = jnp.sum(members.astype(jnp.int32))
+    # Platform->broker traffic: one payload per result pair; aggregated pairs
+    # additionally carry the member sID list (4 B each) -- paper §4.1.2.
+    per_pair_bytes = payload_bytes + (4 * members if aggregated else jnp.zeros_like(members))
+    pair_bytes = jnp.where(pair_valid, per_pair_bytes, 0).astype(jnp.float32)
+    bids = jnp.where(pair_valid, targets.brokers[tgt_safe], num_brokers)
+    broker_bytes = jax.ops.segment_sum(pair_bytes.ravel(), bids.ravel(),
+                                       num_segments=num_brokers + 1)[:-1]
+    broker_results = jax.ops.segment_sum(pair_valid.astype(jnp.int32).ravel(),
+                                         bids.ravel(),
+                                         num_segments=num_brokers + 1)[:-1]
+    return ChannelResult(pair_rows, pair_targets, pair_valid,
+                         jnp.where(valid, cand.rows, -1), valid,
+                         num_results, num_notified, cand.scanned,
+                         broker_bytes, broker_results)
+
+
+def join_spatial(ds: R.ActiveDataset, cand: CandidateSet,
+                 user_locations: jnp.ndarray, user_brokers: jnp.ndarray,
+                 radius: float, payload_bytes: int, num_brokers: int,
+                 spatial_fn=None) -> ChannelResult:
+    """spatial_distance(user.location, record.location) < radius join
+    (TweetsAboutCrime). ``spatial_fn`` lets the engine swap in the Pallas
+    kernel; default is the pure-jnp oracle."""
+    slots = jnp.maximum(cand.rows, 0) % ds.capacity
+    locs = ds.location[slots]                              # (Rm, 2)
+    if spatial_fn is None:
+        from repro.kernels.spatial_match import ref as spatial_ref
+        hits = spatial_ref.spatial_match(locs, user_locations, radius)
+    else:
+        hits = spatial_fn(locs, user_locations, radius)    # (Rm, U) bool
+    pair_valid = hits & cand.valid[:, None]
+    U = user_locations.shape[0]
+    pair_rows = jnp.where(pair_valid, cand.rows[:, None], -1)
+    pair_targets = jnp.where(pair_valid, jnp.arange(U, dtype=jnp.int32)[None, :], -1)
+    num_results = jnp.sum(pair_valid.astype(jnp.int32))
+    bids = jnp.where(pair_valid, user_brokers[None, :], num_brokers)
+    pair_bytes = jnp.where(pair_valid, payload_bytes, 0).astype(jnp.float32)
+    broker_bytes = jax.ops.segment_sum(pair_bytes.ravel(), bids.ravel(),
+                                       num_segments=num_brokers + 1)[:-1]
+    broker_results = jax.ops.segment_sum(pair_valid.astype(jnp.int32).ravel(),
+                                         bids.ravel(),
+                                         num_segments=num_brokers + 1)[:-1]
+    return ChannelResult(pair_rows, pair_targets, pair_valid,
+                         jnp.where(cand.valid, cand.rows, -1), cand.valid,
+                         num_results, num_results, cand.scanned,
+                         broker_bytes, broker_results)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _slot_row_ids(ds: R.ActiveDataset, slots: jnp.ndarray) -> jnp.ndarray:
+    """Stable row id currently stored in each ring slot (-1 if never used)."""
+    size = ds.size
+    cap = ds.capacity
+    base = (size - 1 - slots) // cap * cap + slots   # largest id == slot (mod cap) and < size
+    return jnp.where(size > slots % cap, base, -1).astype(jnp.int32)
+
+
+def _compact(row_ids: jnp.ndarray, mask: jnp.ndarray,
+             out_size: int):
+    """Stable masked compaction into a fixed-size buffer."""
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    dest = jnp.where(mask, pos, out_size)
+    out = jnp.full((out_size,), -1, dtype=jnp.int32)
+    out = out.at[jnp.minimum(dest, out_size)].set(
+        jnp.where(mask, row_ids, -1), mode="drop")
+    valid = jnp.arange(out_size, dtype=jnp.int32) < jnp.sum(mask.astype(jnp.int32))
+    return out, valid

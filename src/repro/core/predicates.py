@@ -1,0 +1,109 @@
+"""Predicate algebra + the per-dataset conditionsList (paper §4.3.1).
+
+A channel's *fixed* predicates form a conjunction over int32 record fields.
+All channels registered on a dataset are compiled together into a dense,
+padded ``CompiledConditions`` table so that ingestion-time evaluation is one
+vectorized pass (the Pallas ``predicate_filter`` kernel consumes exactly this
+layout; ``evaluate_conditions`` below is the pure-jnp oracle).
+
+Padding uses an always-true predicate (op=GE, value=INT32_MIN on field 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Comparison ops.
+EQ, NE, LT, LE, GT, GE = range(6)
+_OP_NAMES = {"==": EQ, "!=": NE, "<": LT, "<=": LE, ">": GT, ">=": GE}
+
+_INT32_MIN = np.int32(-(2 ** 31))
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """``field <op> value`` over an int32 column."""
+
+    field: int
+    op: int
+    value: int
+
+    @staticmethod
+    def parse(field: int, op: str, value: int) -> "Predicate":
+        return Predicate(field, _OP_NAMES[op], int(value))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledConditions:
+    """conditionsList for one dataset: (num_channels, max_preds) padded.
+
+    field_idx, op, value: (C, P) int32; npreds: (C,) int32.
+    """
+
+    field_idx: np.ndarray
+    op: np.ndarray
+    value: np.ndarray
+    npreds: np.ndarray
+
+    @property
+    def num_channels(self) -> int:
+        return self.field_idx.shape[0]
+
+    @property
+    def max_preds(self) -> int:
+        return self.field_idx.shape[1]
+
+
+def compile_conditions(channels: Sequence[Sequence[Predicate]],
+                       min_preds: int = 1) -> CompiledConditions:
+    """Stack per-channel fixed-predicate conjunctions into one padded table."""
+    num_c = len(channels)
+    max_p = max(min_preds, max((len(c) for c in channels), default=1), 1)
+    field_idx = np.zeros((num_c, max_p), dtype=np.int32)
+    op = np.full((num_c, max_p), GE, dtype=np.int32)
+    value = np.full((num_c, max_p), _INT32_MIN, dtype=np.int32)
+    npreds = np.zeros((num_c,), dtype=np.int32)
+    for ci, preds in enumerate(channels):
+        npreds[ci] = len(preds)
+        for pi, p in enumerate(preds):
+            field_idx[ci, pi] = p.field
+            op[ci, pi] = p.op
+            value[ci, pi] = p.value
+    return CompiledConditions(field_idx, op, value, npreds)
+
+
+def apply_op(lhs: jnp.ndarray, op: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized comparator dispatch; shapes broadcast together."""
+    return jnp.select(
+        [op == EQ, op == NE, op == LT, op == LE, op == GT, op == GE],
+        [lhs == rhs, lhs != rhs, lhs < rhs, lhs <= rhs, lhs > rhs, lhs >= rhs],
+        default=True,
+    )
+
+
+def evaluate_conditions(fields: jnp.ndarray, conds: CompiledConditions) -> jnp.ndarray:
+    """Pure-jnp oracle: (N, F) records x conditionsList -> (N, C) bool matches.
+
+    A record matches channel c iff it satisfies *all* of the channel's fixed
+    predicates (paper Algorithm 2).
+    """
+    field_idx = jnp.asarray(conds.field_idx)      # (C, P)
+    op = jnp.asarray(conds.op)                    # (C, P)
+    value = jnp.asarray(conds.value)              # (C, P)
+    vals = fields[:, field_idx]                   # (N, C, P)
+    ok = apply_op(vals, op[None], value[None])    # (N, C, P)
+    return jnp.all(ok, axis=-1)                   # (N, C)
+
+
+def evaluate_single(fields: jnp.ndarray, preds: Sequence[Predicate]) -> jnp.ndarray:
+    """(N, F) x conjunction -> (N,) bool. Convenience for one channel."""
+    conds = compile_conditions([list(preds)])
+    return evaluate_conditions(fields, conds)[:, 0]
+
+
+def selectivity(fields: np.ndarray, preds: Sequence[Predicate]) -> float:
+    mask = np.asarray(evaluate_single(jnp.asarray(fields), preds))
+    return float(mask.mean()) if mask.size else 0.0

@@ -1,0 +1,185 @@
+"""Record model: fixed-width struct-of-arrays records + the ActiveDataset.
+
+The paper's EnrichedTweets are semi-structured documents in AsterixDB. On TPU
+we encode them columnar / fixed-width: every predicate-addressable field is an
+int32 column (categorical fields are dictionary-encoded on the host), spatial
+locations are a float32 (N, 2) column, and free-text payloads live out-of-band
+(token ids consumed by the enrichment model, never by predicates).
+
+The ActiveDataset is the TPU analogue of an ACTIVE LSM dataset: a preallocated
+ring buffer sharded over the `data` mesh axis. `size` counts records ever
+ingested; `row_id = size_at_ingest + offset` is the stable primary key ("tid")
+used by BAD indexes, and `timestamp` provides the LSM-style time filter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Names -> int-column index. All predicate fields are int32 columns."""
+
+    fields: Tuple[str, ...]
+    has_location: bool = True
+
+    @property
+    def num_fields(self) -> int:
+        return len(self.fields)
+
+    def index(self, name: str) -> int:
+        return self.fields.index(name)
+
+
+# The paper's running example (Fig. 2), dictionary-encoded.
+ENRICHED_TWEET_SCHEMA = Schema(
+    fields=(
+        "state",            # 0..49 (dictionary: US states)
+        "about_country",    # 0 == "US"
+        "retweet_count",
+        "threatening_rate",  # 0..10
+        "hate_speech_rate",  # 0..10
+        "weapon_mentioned",  # 0/1
+        "drug_activity",     # categorical; 3 == "Manufacturing Drugs"
+        "lang",              # 0 en, 1 pt, ... (for the real-world channels)
+        "country",           # world country code (real-world channels)
+        "timestamp",         # ingestion timestamp (seconds)
+    ),
+    has_location=True,
+)
+
+STATE, ABOUT_COUNTRY, RETWEET_COUNT, THREATENING_RATE, HATE_SPEECH_RATE, \
+    WEAPON_MENTIONED, DRUG_ACTIVITY, LANG, COUNTRY, TIMESTAMP = range(10)
+
+
+# ---------------------------------------------------------------------------
+# RecordBatch
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RecordBatch:
+    """A batch of fixed-width records (struct of arrays).
+
+    fields:   (N, F) int32
+    location: (N, 2) float32 (zeros when schema has no location)
+    """
+
+    fields: jnp.ndarray
+    location: jnp.ndarray
+
+    @property
+    def num_records(self) -> int:
+        return self.fields.shape[0]
+
+    def tree_flatten(self):
+        return (self.fields, self.location), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def from_numpy(fields: np.ndarray, location: Optional[np.ndarray] = None) -> "RecordBatch":
+        fields = jnp.asarray(fields, dtype=jnp.int32)
+        if location is None:
+            location = jnp.zeros((fields.shape[0], 2), dtype=jnp.float32)
+        else:
+            location = jnp.asarray(location, dtype=jnp.float32)
+        return RecordBatch(fields, location)
+
+
+# ---------------------------------------------------------------------------
+# ActiveDataset: ring buffer with stable row ids
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ActiveDataset:
+    """Preallocated ring buffer of records.
+
+    fields:   (C, F) int32
+    location: (C, 2) float32
+    size:     () int32 -- total records ever ingested (monotone)
+
+    Row id r lives at slot ``r % C`` and is valid iff ``size - C <= r < size``.
+    """
+
+    fields: jnp.ndarray
+    location: jnp.ndarray
+    size: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return self.fields.shape[0]
+
+    def tree_flatten(self):
+        return (self.fields, self.location, self.size), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def create(capacity: int, schema: Schema = ENRICHED_TWEET_SCHEMA) -> "ActiveDataset":
+        return ActiveDataset(
+            fields=jnp.zeros((capacity, schema.num_fields), dtype=jnp.int32),
+            location=jnp.zeros((capacity, 2), dtype=jnp.float32),
+            size=jnp.zeros((), dtype=jnp.int32),
+        )
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def append(ds: ActiveDataset, batch: RecordBatch) -> Tuple[ActiveDataset, jnp.ndarray]:
+    """Append a batch; returns (new dataset, row_ids of the appended records)."""
+    n = batch.num_records
+    cap = ds.capacity
+    row_ids = ds.size + jnp.arange(n, dtype=jnp.int32)
+    slots = row_ids % cap
+    fields = ds.fields.at[slots].set(batch.fields)
+    location = ds.location.at[slots].set(batch.location)
+    return ActiveDataset(fields, location, ds.size + n), row_ids
+
+
+def gather_rows(ds: ActiveDataset, row_ids: jnp.ndarray) -> RecordBatch:
+    """Gather records by stable row id (caller guarantees ids are live)."""
+    slots = row_ids % ds.capacity
+    return RecordBatch(ds.fields[slots], ds.location[slots])
+
+
+# ---------------------------------------------------------------------------
+# Host-side dictionary encoding helpers (control plane)
+# ---------------------------------------------------------------------------
+
+
+class Dictionary:
+    """String -> dense int code, grown on first sight (host side only)."""
+
+    def __init__(self) -> None:
+        self._codes: Dict[str, int] = {}
+
+    def encode(self, value: str) -> int:
+        if value not in self._codes:
+            self._codes[value] = len(self._codes)
+        return self._codes[value]
+
+    def decode(self, code: int) -> str:
+        for k, v in self._codes.items():
+            if v == code:
+                return k
+        raise KeyError(code)
+
+    def __len__(self) -> int:
+        return len(self._codes)

@@ -1,0 +1,197 @@
+"""Subscriptions + Algorithm 1 subscription aggregation (paper §4.1).
+
+Control plane (this module) is host-side numpy — subscriptions arrive one at a
+time between channel executions, exactly as in the paper ("all grouping is
+completed before the execution of the next channel begins"). The data plane
+consumes the dense, padded arrays produced here.
+
+TPU adaptation of the frame-size rule: AsterixDB frames hold whole records, so
+the paper caps a subscription-group record at the frame size ``f``. Our frames
+are tensor tiles; the analogous rule is a per-group sID capacity ``cap``
+rounded to the 128-lane register width so one group occupies whole vector
+registers. ``cap_from_frame_bytes`` reproduces the paper's rule (group record
+size ~ frame size), ``lane_align`` applies the TPU rounding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+SID_BYTES = 4          # sIDs are int32
+LANE = 128             # TPU vector lane count
+
+
+def cap_from_frame_bytes(frame_bytes: int, align: bool = True) -> int:
+    """Paper rule: optimal subgroup record size == frame size (Figs. 12-13)."""
+    cap = max(1, frame_bytes // SID_BYTES)
+    return lane_align(cap) if align else cap
+
+
+def lane_align(cap: int) -> int:
+    if cap <= LANE:
+        return cap
+    return (cap // LANE) * LANE
+
+
+@dataclasses.dataclass
+class SubscriptionTable:
+    """Flat (un-aggregated) subscriptions — the *original* BAD layout."""
+
+    sids: np.ndarray      # (S,) int32
+    params: np.ndarray    # (S,) int32 -- encoded channel parameter
+    brokers: np.ndarray   # (S,) int32 -- broker id
+
+    @property
+    def num_subscriptions(self) -> int:
+        return int(self.sids.shape[0])
+
+    @staticmethod
+    def empty() -> "SubscriptionTable":
+        z = np.zeros((0,), dtype=np.int32)
+        return SubscriptionTable(z.copy(), z.copy(), z.copy())
+
+    @staticmethod
+    def build(params: np.ndarray, brokers: np.ndarray) -> "SubscriptionTable":
+        params = np.asarray(params, dtype=np.int32)
+        brokers = np.asarray(brokers, dtype=np.int32)
+        sids = np.arange(params.shape[0], dtype=np.int32)
+        return SubscriptionTable(sids, params, brokers)
+
+
+@dataclasses.dataclass
+class SubscriptionGroups:
+    """Aggregated subscription-group records (paper Fig. 7b).
+
+    group_params: (G,) int32     -- the shared parameter
+    group_brokers: (G,) int32
+    group_sids:   (G, cap) int32 -- member sIDs, padded with -1
+    group_counts: (G,) int32
+    """
+
+    group_params: np.ndarray
+    group_brokers: np.ndarray
+    group_sids: np.ndarray
+    group_counts: np.ndarray
+    cap: int
+
+    @property
+    def num_groups(self) -> int:
+        return int(self.group_params.shape[0])
+
+    @property
+    def num_subscriptions(self) -> int:
+        return int(self.group_counts.sum())
+
+
+class Aggregator:
+    """Incremental Algorithm 1: place each arriving subscription in an open
+    group with matching (params, broker), else open a new group."""
+
+    def __init__(self, cap: int):
+        if cap < 1:
+            raise ValueError("group capacity must be >= 1")
+        self.cap = cap
+        # (param, broker) -> list of group indices; groups as python lists.
+        self._by_key: Dict[Tuple[int, int], List[int]] = {}
+        self._params: List[int] = []
+        self._brokers: List[int] = []
+        self._members: List[List[int]] = []
+        self._next_sid = 0
+
+    def add_subscription(self, param: int, broker: int,
+                         sid: Optional[int] = None) -> int:
+        """Paper Algorithm 1. Returns the sID assigned."""
+        if sid is None:
+            sid = self._next_sid
+        self._next_sid = max(self._next_sid, sid + 1)
+        key = (int(param), int(broker))
+        for gi in self._by_key.get(key, ()):           # AddToExistingGroup
+            if len(self._members[gi]) < self.cap:
+                self._members[gi].append(sid)
+                return sid
+        gi = len(self._params)                          # open a new group
+        self._params.append(int(param))
+        self._brokers.append(int(broker))
+        self._members.append([sid])
+        self._by_key.setdefault(key, []).append(gi)
+        return sid
+
+    def remove_subscription(self, param: int, broker: int, sid: int) -> bool:
+        key = (int(param), int(broker))
+        for gi in self._by_key.get(key, ()):
+            if sid in self._members[gi]:
+                self._members[gi].remove(sid)
+                return True
+        return False
+
+    def build(self) -> SubscriptionGroups:
+        live = [i for i, m in enumerate(self._members) if m]
+        g = len(live)
+        group_params = np.zeros((g,), dtype=np.int32)
+        group_brokers = np.zeros((g,), dtype=np.int32)
+        group_sids = np.full((g, self.cap), -1, dtype=np.int32)
+        group_counts = np.zeros((g,), dtype=np.int32)
+        for out, gi in enumerate(live):
+            m = self._members[gi]
+            group_params[out] = self._params[gi]
+            group_brokers[out] = self._brokers[gi]
+            group_sids[out, : len(m)] = m
+            group_counts[out] = len(m)
+        return SubscriptionGroups(group_params, group_brokers, group_sids,
+                                  group_counts, self.cap)
+
+
+def aggregate(table: SubscriptionTable, cap: int) -> SubscriptionGroups:
+    """Bulk aggregation (vectorized equivalent of replaying Algorithm 1)."""
+    if table.num_subscriptions == 0:
+        return SubscriptionGroups(*(np.zeros((0,), np.int32),) * 2,
+                                  np.zeros((0, cap), np.int32),
+                                  np.zeros((0,), np.int32), cap)
+    # Sort by (param, broker) then chop runs into cap-sized subgroups.
+    order = np.lexsort((table.brokers, table.params))
+    p = table.params[order]
+    b = table.brokers[order]
+    s = table.sids[order]
+    new_run = np.empty(p.shape[0], dtype=bool)
+    new_run[0] = True
+    new_run[1:] = (p[1:] != p[:-1]) | (b[1:] != b[:-1])
+    run_id = np.cumsum(new_run) - 1
+    pos_in_run = np.arange(p.shape[0]) - np.maximum.accumulate(
+        np.where(new_run, np.arange(p.shape[0]), 0))
+    sub_id = pos_in_run // cap
+    # group key = (run_id, sub_id)
+    new_group = new_run | ((sub_id != np.roll(sub_id, 1)) & (run_id == np.roll(run_id, 1)))
+    new_group[0] = True
+    gid = np.cumsum(new_group) - 1
+    g = int(gid[-1]) + 1
+    group_params = np.zeros((g,), dtype=np.int32)
+    group_brokers = np.zeros((g,), dtype=np.int32)
+    group_sids = np.full((g, cap), -1, dtype=np.int32)
+    group_counts = np.zeros((g,), dtype=np.int32)
+    group_params[gid[new_group]] = p[new_group]
+    group_brokers[gid[new_group]] = b[new_group]
+    slot = pos_in_run % cap
+    group_sids[gid, slot] = s
+    np.add.at(group_counts, gid, 1)
+    return SubscriptionGroups(group_params, group_brokers, group_sids,
+                              group_counts, cap)
+
+
+def param_to_targets(params: np.ndarray, domain: int,
+                     pad: int = -1) -> Tuple[np.ndarray, np.ndarray]:
+    """Dense join map: param value -> row indices of targets holding it.
+
+    Returns (map (domain, maxd) int32 padded, counts (domain,) int32). This is
+    the TPU realization of the index nested-loop join in the augmented plan —
+    the join against a small categorical domain becomes a gather.
+    """
+    counts = np.bincount(params, minlength=domain).astype(np.int32)
+    maxd = max(1, int(counts.max()) if counts.size else 1)
+    out = np.full((domain, maxd), pad, dtype=np.int32)
+    cursor = np.zeros((domain,), dtype=np.int64)
+    for i, v in enumerate(params):
+        out[v, cursor[v]] = i
+        cursor[v] += 1
+    return out, counts

@@ -1,0 +1,66 @@
+"""UserParameters dataset (paper §4.2).
+
+"a dataset which will be created by the system when a channel is created ...
+includes fields for the channel's parameter(s) and the number of subscriptions
+interested in each. These fields facilitate the dynamic addition or removal of
+parameters as subscriber interests evolve."
+
+Channel parameters come from small categorical domains (states, countries,
+topics), so the TPU-native realization is a dense refcount table over the
+domain: membership tests during the early semi-join become O(1) gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class UserParameters:
+    """refcount[v] = number of live subscriptions with parameter v."""
+
+    refcount: np.ndarray  # (domain,) int64
+
+    @property
+    def domain(self) -> int:
+        return int(self.refcount.shape[0])
+
+    @property
+    def num_distinct(self) -> int:
+        return int((self.refcount > 0).sum())
+
+    @staticmethod
+    def create(domain: int) -> "UserParameters":
+        return UserParameters(np.zeros((domain,), dtype=np.int64))
+
+    @staticmethod
+    def from_params(params: np.ndarray, domain: int) -> "UserParameters":
+        up = UserParameters.create(domain)
+        np.add.at(up.refcount, np.asarray(params, dtype=np.int64), 1)
+        return up
+
+    def add(self, param: int) -> None:
+        self.refcount[param] += 1
+
+    def remove(self, param: int) -> None:
+        if self.refcount[param] <= 0:
+            raise ValueError(f"no live subscription with param {param}")
+        self.refcount[param] -= 1
+
+    def mask(self) -> jnp.ndarray:
+        """(domain,) bool device array for the early semi-join."""
+        return jnp.asarray(self.refcount > 0)
+
+
+def semi_join(param_values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """(N,) record param values x (domain,) membership -> (N,) keep mask.
+
+    The augmented plan's first join (records x UserParameters): prunes every
+    record whose parameter value no subscriber asked for, *before* the wide
+    join with the subscription dataset.
+    """
+    clipped = jnp.clip(param_values, 0, mask.shape[0] - 1)
+    in_domain = (param_values >= 0) & (param_values < mask.shape[0])
+    return mask[clipped] & in_domain

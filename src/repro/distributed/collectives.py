@@ -1,0 +1,57 @@
+"""shard_map collectives: sequence-parallel flash-decode attention.
+
+The KV cache for serving is sharded over the `model` axis on the *sequence*
+dimension (works for every GQA geometry — head counts never need to divide
+the axis). Each model shard computes flash partials (acc, m, l) over its local
+KV slice; the merge is an exact log-sum-exp combine using one pmax + one psum
+of (B, H, D)-sized tensors — O(B·H·D) bytes instead of re-reading the cache.
+
+This is the TPU analogue of FlashDecoding split-KV, expressed as a collective
+schedule instead of a grid.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.partition import Rules, sanitize_spec
+from repro.kernels.flash_decode import ref as fd_ref
+
+
+def sp_decode_attention(rules: Rules, q: jnp.ndarray, k: jnp.ndarray,
+                        v: jnp.ndarray, kv_len: jnp.ndarray,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B, H, D); k/v (B, KH, S, D) seq-sharded; kv_len (B,) -> (B, H, D)."""
+    mesh = rules.mesh
+    m_axis = rules.model_axis
+    if m_axis is None:
+        return fd_ref.decode_attention(q, k, v, kv_len, scale)
+    n_shards = mesh.shape[m_axis]
+    b, h, d = q.shape
+    s = k.shape[2]
+    b_spec = rules.batch_axes if rules.batch_axes else None
+    bq = sanitize_spec(P(b_spec, None, None), q.shape, mesh)
+    bkv = sanitize_spec(P(b_spec, None, m_axis, None), k.shape, mesh)
+    blen = sanitize_spec(P(b_spec), kv_len.shape, mesh)
+    shard_size = s // n_shards
+
+    def local(qs, ks, vs, lens):
+        # Local slice covers absolute kv positions [idx*shard, (idx+1)*shard).
+        idx = jax.lax.axis_index(m_axis)
+        local_len = jnp.clip(lens - idx * shard_size, 0, shard_size)
+        acc, m, l = fd_ref.decode_attention_partial(qs, ks, vs, local_len, scale)
+        m_g = jax.lax.pmax(m, m_axis)
+        m_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+        c = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        acc = jax.lax.psum(acc * c[..., None], m_axis)
+        l = jax.lax.psum(l * c, m_axis)
+        return fd_ref.normalize(acc, l, qs.dtype)
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(bq, bkv, bkv, blen),
+                       out_specs=bq)
+    return fn(q, k, v, kv_len)

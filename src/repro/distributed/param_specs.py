@@ -1,0 +1,129 @@
+"""Parameter PartitionSpec trees (TP over `model`, FSDP over `data`).
+
+Every 2-D weight is sharded on both mesh axes: the "parallel" dim (heads /
+ffn hidden / vocab / experts) over `model` (Megatron TP) and the other dim
+over `data` (FSDP — XLA all-gathers the layer's weights just-in-time inside
+the scan body, which is ZeRO-3 behavior). Axes that do not divide are dropped
+per-array by ``sanitize_spec`` at lowering time, so these trees are safe for
+every architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# FSDP axis spans all data-parallel replicas (pod x data); `pod` is dropped
+# automatically on the single-pod mesh. TP axis is `model`.
+D, M = ("pod", "data"), "model"
+
+
+def _attn_specs(cfg: ModelConfig) -> Dict[str, P]:
+    s = {"wq": P(D, M), "wk": P(D, M), "wv": P(D, M), "wo": P(M, D)}
+    if cfg.qkv_bias:
+        s.update({"bq": P(M), "bk": P(M), "bv": P(M)})
+    return s
+
+
+def _mlp_specs() -> Dict[str, P]:
+    return {"gate": P(D, M), "up": P(D, M), "down": P(M, D)}
+
+
+def _block_specs(kind: str, cfg: ModelConfig) -> Dict[str, Any]:
+    if kind in ("dense", "shared_attn"):
+        return {"norm1": P(None), "attn": _attn_specs(cfg),
+                "norm2": P(None), "mlp": _mlp_specs()}
+    if kind == "moe":
+        return {"norm1": P(None), "attn": _attn_specs(cfg), "norm2": P(None),
+                "moe": {"router": P(None, None),
+                        "gate": P(M, D, None), "up": P(M, D, None),
+                        "down": P(M, None, D)}}
+    if kind == "mamba":
+        return {"norm": P(None),
+                "mamba": {"in_proj": P(D, M), "conv_w": P(None, M),
+                          "conv_b": P(M), "a_log": P(None), "dt_bias": P(None),
+                          "d_skip": P(None), "out_proj": P(M, D),
+                          "norm_w": P(None)}}
+    if kind == "mlstm":
+        return {"norm": P(None),
+                "mlstm": {"up": P(D, M), "wqkv": P(D, M), "wgates": P(D, None),
+                          "gate_b": P(None), "down": P(M, D),
+                          "norm_w": P(None)}}
+    if kind == "slstm":
+        return {"norm": P(None),
+                "slstm": {"wx": P(D, M), "r": P(None, None, None),
+                          "b": P(None), "out": P(None, D), "norm_w": P(None)}}
+    raise ValueError(kind)
+
+
+def _stack(tree):
+    """Prefix specs with the scan (superlayer) dim."""
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lm_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    layers = {f"b{i}": _block_specs(kind, cfg)
+              for i, kind in enumerate(cfg.block_pattern)
+              if kind != "shared_attn"}
+    specs: Dict[str, Any] = {
+        "embed": P(M, D),
+        "layers": _stack(layers),
+        "final_norm": P(None),
+    }
+    if "shared_attn" in cfg.block_pattern:
+        specs["shared"] = _block_specs("shared_attn", cfg)
+    if not cfg.tie_embeddings:
+        specs["head"] = P(D, M)
+    return specs
+
+
+def encdec_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    enc = {"norm1": P(None), "attn": _attn_specs(cfg),
+           "norm2": P(None), "mlp": _mlp_specs()}
+    dec = {"norm1": P(None), "self_attn": _attn_specs(cfg),
+           "norm_c": P(None), "cross_attn": _attn_specs(cfg),
+           "norm2": P(None), "mlp": _mlp_specs()}
+    return {
+        "embed": P(M, D),
+        "enc_layers": _stack(enc),
+        "dec_layers": _stack(dec),
+        "enc_norm": P(None),
+        "final_norm": P(None),
+        "head": P(D, M),
+    }
+
+
+BATCH = ("pod", "data")
+
+
+def batch_specs(batch: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, P]:
+    out = {}
+    for k, v in batch.items():
+        out[k] = P(*((BATCH,) + (None,) * (len(v.shape) - 1)))
+    return out
+
+
+def cache_specs(shapes) -> Any:
+    """Serving-state specs: (R, B, heads/KH, seq, ...) — KV seq over model."""
+    def spec(s: jax.ShapeDtypeStruct) -> P:
+        if len(s.shape) == 5:                  # (R, B, KH, S, hd) kv cache
+            return P(None, BATCH, None, M, None)
+        if len(s.shape) == 4:                  # (R, B, H, state) ssm-ish
+            return P(None, BATCH, M, None)
+        if len(s.shape) == 3:
+            return P(None, BATCH, None)
+        return P(*((None,) * len(s.shape)))
+
+    def spec5(s):
+        if len(s.shape) == 5 and s.shape[3] > s.shape[2]:
+            return P(None, BATCH, None, M, None)
+        if len(s.shape) == 5:                  # (R, B, H, dk, dv) gla state
+            return P(None, BATCH, M, None, None)
+        return spec(s)
+
+    return jax.tree.map(spec5, shapes)

@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules and the `shard` constraint hook.
+
+Model code tags activations with *logical* spec names; this module maps them
+to mesh `PartitionSpec`s via the active rule set. Without an active mesh the
+hook is a no-op, so the identical model code serves smoke tests (1 CPU
+device) and production-mesh lowering (256/512 devices).
+
+Default logical rules (Megatron-style TP + (pod,data) DP):
+  batch   -> ("pod", "data")        activations, inputs
+  heads   -> "model"                attention q heads / ffn hidden / experts
+  vocab   -> "model"                embedding + lm head vocab dim
+  kv_seq  -> "model"                KV cache sequence dim (flash-decode SP)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+# spec name -> PartitionSpec factory given axis rules
+def _specs(batch_axes, model_axis) -> Dict[str, P]:
+    b = batch_axes
+    m = model_axis
+    return {
+        # activations
+        "act_btd": P(b, None, None),          # (batch, seq, d_model)
+        "act_btd_sp": P(b, m, None),          # sequence-parallel variant
+        "act_ff": P(b, None, m),              # (batch, seq, d_ff)
+        "act_heads": P(b, None, m, None),     # (batch, seq, heads, head_dim)
+        "act_bhtd": P(b, m, None, None),      # (batch, heads, seq, head_dim)
+        "act_bhtd_cp": P(b, None, m, None),   # context-parallel q: seq over
+                                              # model (head count need not
+                                              # divide the axis)
+        "act_btv": P(b, None, m),             # logits (batch, seq, vocab)
+        "act_bd": P(b, None),                 # (batch, d_model)
+        "act_bhd": P(b, m, None),             # decode q (batch, heads, head_dim)
+        "act_moe": P(m, None, None),          # (experts, capacity, d_model)
+        # params
+        "p_embed": P(m, None),                # (vocab, d_model)
+        "p_out": P(None, m),                  # (d_model, vocab|ff|heads*hd)
+        "p_in": P(m, None),                   # (ff|heads*hd, d_model)
+        "p_norm": P(None),
+        "p_bias_m": P(m),
+        "p_expert_out": P(m, None, None),     # (E, d_model, d_ff)
+        "p_expert_in": P(m, None, None),      # (E, d_ff, d_model) - dim1 sharded? no: experts
+        "p_router": P(None, m),
+        # kv cache: (batch, kv_heads, seq, head_dim), sequence-sharded on model
+        "kv_cache": P(b, None, m, None),
+        "kv_prefill": P(b, None, None, None),
+        "replicated": P(),
+    }
+
+
+class Rules:
+    def __init__(self, mesh: Mesh, batch_axes, model_axis,
+                 seq_shard: bool = False, ws_decode: bool = False):
+        self.mesh = mesh
+        self.table = _specs(batch_axes, model_axis)
+        if seq_shard:   # Megatron-SP: residual stream seq dim over `model`
+            self.table["act_btd"] = self.table["act_btd_sp"]
+        if ws_decode:   # weight-stationary serving: d_model over FSDP axis
+            self.table["act_bd"] = P(None, batch_axes)
+            # MoE dispatch buffers follow: (experts, capacity, d_model) with
+            # d_model on the FSDP axis so expert GEMMs contract against
+            # resident weight shards (no per-token expert-weight gathers).
+            self.table["act_moe"] = P(model_axis, None, batch_axes)
+        self.batch_axes = batch_axes
+        self.model_axis = model_axis
+        self.seq_shard = seq_shard
+        self.ws_decode = ws_decode
+
+    def spec(self, name: str) -> P:
+        return self.table[name]
+
+    def sharding(self, name: str) -> NamedSharding:
+        return NamedSharding(self.mesh, self.table[name])
+
+
+def active_rules() -> Optional[Rules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def make_rules(mesh: Mesh, seq_shard: bool = False,
+               ws_decode: bool = False) -> Rules:
+    axes = mesh.axis_names
+    model_axis = "model" if "model" in axes else None
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    batch_axes = batch if batch else None
+    return Rules(mesh, batch_axes, model_axis, seq_shard=seq_shard,
+                 ws_decode=ws_decode)
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide the corresponding dim.
+
+    Keeps specs legal for every architecture uniformly (e.g. 28 attention
+    heads or batch=1 on a 16-way axis fall back to replication on that dim
+    instead of relying on GSPMD padding).
+    """
+    out = []
+    for i, entry in enumerate(spec):
+        if i >= len(shape):
+            break                      # spec longer than rank: truncate
+        if entry is None:
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        kept = []
+        for a in axes:
+            if a not in mesh.shape:
+                continue
+            n = mesh.shape[a]
+            if shape[i] % (size * n) == 0:
+                kept.append(a)
+                size *= n
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def shard(x: jnp.ndarray, spec_name: str) -> jnp.ndarray:
+    """with_sharding_constraint under active rules; no-op otherwise."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = sanitize_spec(rules.spec(spec_name), x.shape, rules.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

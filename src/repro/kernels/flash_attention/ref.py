@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: causal GQA attention (training / prefill shapes)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B, H, S, D), k/v (B, KH, S, D), H % KH == 0 -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    # Broadcast KV to full heads and stay 4-D: splitting the (sharded) head
+    # dim into (kv_heads, group) breaks GSPMD propagation (involuntary
+    # remat/replication); the broadcast fuses into the dots. Operands stay in
+    # the input dtype (bf16 on the training path) with f32 accumulation —
+    # f32 operand upcasts double every attention-path collective.
+    kf = jnp.repeat(k, g, axis=1)
+    vf = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhld->bhql", q, kf,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhql,bhld->bhqd", w.astype(v.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for single-token GQA decode attention with a masked cache."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B, H, D), k/v (B, KH, S, D), kv_len (B,) -> (B, H, D)."""
+    out, m, l = decode_attention_partial(q, k, v, kv_len, scale)
+    return (out / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(q.dtype)
+
+
+def decode_attention_partial(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                             kv_len: jnp.ndarray,
+                             scale: Optional[float] = None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unnormalized flash-decode partials for cross-shard merging.
+
+    Returns (acc (B, H, D) f32 = sum_j e^{s_j - m} v_j, m (B, H) f32 running
+    max, l (B, H) f32 = sum_j e^{s_j - m}). Shards holding disjoint kv slices
+    can be merged exactly with ``merge_partials``.
+    """
+    b, h, d = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, kh, g, d)
+    logits = jnp.einsum("bkgd,bkld->bkgl", qf, k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]            # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)                               # (B, KH, G)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - m_safe[..., None])
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgl,bkld->bkgd", p, v.astype(jnp.float32))
+    m_out = jnp.where(jnp.isfinite(m), m, -jnp.inf)
+    return (acc.reshape(b, h, d), m_out.reshape(b, h), l.reshape(b, h))
+
+
+def merge_partials(acc_a, m_a, l_a, acc_b, m_b, l_b):
+    """Exact merge of two disjoint-kv flash partials (log-sum-exp algebra)."""
+    m = jnp.maximum(m_a, m_b)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    ca = jnp.where(jnp.isfinite(m_a), jnp.exp(m_a - m_safe), 0.0)
+    cb = jnp.where(jnp.isfinite(m_b), jnp.exp(m_b - m_safe), 0.0)
+    return (acc_a * ca[..., None] + acc_b * cb[..., None],
+            m, l_a * ca + l_b * cb)
+
+
+def normalize(acc, l, dtype):
+    return (acc / jnp.where(l == 0.0, 1.0, l)[..., None]).astype(dtype)

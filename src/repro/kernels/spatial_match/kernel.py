@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: blocked spatial join via the MXU distance trick.
+
+dist²(t, u) = ‖t‖² + ‖u‖² − 2·t·uᵀ — the cross term is a matmul, so the
+pairwise distance grid runs on the MXU instead of the VPU. Grid tiles
+(tweets × users); each step computes a (TR, TU) boolean tile.
+
+VMEM per step (TR=TU=512): tiles 2*512*2*4 = 8 KB, dist grid 512*512*4 = 1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TR = 256
+DEFAULT_TU = 512
+
+
+def _kernel(r2_ref, t_ref, u_ref, out_ref):
+    t = t_ref[...]                                   # (TR, 2)
+    u = u_ref[...]                                   # (TU, 2)
+    r2 = r2_ref[0, 0]
+    cross = jnp.dot(t, u.T, preferred_element_type=jnp.float32)  # MXU
+    t2 = jnp.sum(t * t, axis=-1)[:, None]
+    u2 = jnp.sum(u * u, axis=-1)[None, :]
+    dist2 = t2 + u2 - 2.0 * cross
+    out_ref[...] = (dist2 < r2).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("tr", "tu", "interpret"))
+def spatial_match_kernel(tweet_locs: jnp.ndarray, user_locs: jnp.ndarray,
+                         radius2: jnp.ndarray, tr: int = DEFAULT_TR,
+                         tu: int = DEFAULT_TU,
+                         interpret: bool = True) -> jnp.ndarray:
+    r, _ = tweet_locs.shape
+    u, _ = user_locs.shape
+    assert r % tr == 0 and u % tu == 0, (r, tr, u, tu)
+    grid = (r // tr, u // tu)
+    r2 = jnp.reshape(radius2.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((tr, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((tu, 2), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, tu), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, u), jnp.int8),
+        interpret=interpret,
+    )(r2, tweet_locs, user_locs)

@@ -1,0 +1,41 @@
+"""Jit'd public wrapper for spatial_match: padding + backend dispatch.
+
+Padding uses +inf sentinel coordinates so padded rows/cols never match.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spatial_match.kernel import (DEFAULT_TR, DEFAULT_TU,
+                                                spatial_match_kernel)
+
+_FAR = 1e30
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spatial_match(tweet_locs: jnp.ndarray, user_locs: jnp.ndarray,
+                  radius) -> jnp.ndarray:
+    """(R, 2) x (U, 2) -> (R, U) bool; drop-in for ref.spatial_match."""
+    return _padded(tweet_locs, user_locs,
+                   jnp.asarray(radius, jnp.float32) ** 2,
+                   interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("tr", "tu", "interpret"))
+def _padded(tweet_locs, user_locs, radius2, tr: int = DEFAULT_TR,
+            tu: int = DEFAULT_TU, interpret: bool = True):
+    r, u = tweet_locs.shape[0], user_locs.shape[0]
+    rp, up = -r % tr, -u % tu
+    if rp:
+        tweet_locs = jnp.pad(tweet_locs, ((0, rp), (0, 0)), constant_values=_FAR)
+    if up:
+        user_locs = jnp.pad(user_locs, ((0, up), (0, 0)), constant_values=-_FAR)
+    out = spatial_match_kernel(tweet_locs, user_locs, radius2, tr=tr, tu=tu,
+                               interpret=interpret)
+    return out[:r, :u].astype(jnp.bool_)

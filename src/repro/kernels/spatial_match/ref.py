@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the spatial_match kernel (TweetsAboutCrime join)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spatial_match(tweet_locs: jnp.ndarray, user_locs: jnp.ndarray,
+                  radius: float) -> jnp.ndarray:
+    """(R, 2) x (U, 2) -> (R, U) bool: euclidean distance < radius."""
+    d = tweet_locs[:, None, :] - user_locs[None, :, :]
+    dist2 = jnp.sum(d * d, axis=-1)
+    return dist2 < jnp.asarray(radius, tweet_locs.dtype) ** 2

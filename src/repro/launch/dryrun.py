@@ -1,0 +1,517 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this compiles the real step function for the production mesh,
+prints/records ``memory_analysis()`` (proves fit) and ``cost_analysis()``
+(FLOPs/bytes for the roofline), parses the collective schedule from the
+partitioned HLO, and compiles one-superlayer probes to scale scan-body costs
+(see launch/probes.py). Results land in experiments/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import param_specs as psp
+from repro.distributed.partition import make_rules, sanitize_spec, use_rules
+from repro.launch import probes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (build_decode_step, build_prefill_step,
+                                build_train_step, default_optimizer)
+from repro.models.model import SHAPES, ModelApi
+from repro.optim import make_optimizer
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def input_specs(arch: str, shape: str = "train_4k") -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    return ModelApi(get_config(arch)).input_specs(shape)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
+                       r"f8e4m3fn|f8e5m2|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m) -> int:
+    dtype, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand bytes of every collective op in partitioned HLO (per device)."""
+    per_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("//"):
+            continue
+        for kind in _COLLECTIVES:
+            token = f" {kind}("
+            alt = f" {kind}-start("
+            idx = ls.find(token)
+            if idx < 0:
+                idx = ls.find(alt)
+            if idx < 0 or "=" not in ls[:idx]:
+                continue
+            operands = ls[idx:]
+            shapes = _SHAPE_RE.finditer(operands)
+            b = sum(_shape_bytes(m) for m in shapes)
+            if b == 0:  # operands printed without types; fall back to result
+                res = _SHAPE_RE.finditer(ls[:idx])
+                b = sum(_shape_bytes(m) for m in res)
+            per_kind[kind] += b
+            counts[kind] += 1
+            break
+    total = sum(per_kind.values())
+    return {"bytes_per_kind": per_kind, "counts": counts, "total_bytes": total}
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def tree_shardings(mesh, spec_tree, shape_tree):
+    is_p = lambda x: isinstance(x, P)
+
+    def mk(spec, aval):
+        return NamedSharding(mesh, sanitize_spec(spec, aval.shape, mesh))
+
+    return jax.tree.map(mk, spec_tree, shape_tree, is_leaf=is_p)
+
+
+def _cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _mem_summary(compiled) -> Dict[str, float]:
+    ms = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ms.argument_size_in_bytes),
+        "output_bytes": float(ms.output_size_in_bytes),
+        "temp_bytes": float(ms.temp_size_in_bytes),
+        "alias_bytes": float(ms.alias_size_in_bytes),
+        "peak_estimate_bytes": float(ms.argument_size_in_bytes
+                                     + ms.temp_size_in_bytes
+                                     + ms.output_size_in_bytes
+                                     - ms.alias_size_in_bytes),
+    }
+
+
+def _compile(fn, in_shardings, args, donate=None) -> Tuple[Any, Dict[str, Any], float]:
+    t0 = time.time()
+    jfn = jax.jit(fn, in_shardings=in_shardings,
+                  donate_argnums=donate or ())
+    lowered = jfn.lower(*args)
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    text = compiled.as_text()
+    info = {
+        "cost": _cost_summary(compiled),
+        "memory": _mem_summary(compiled),
+        "collectives": parse_collectives(text),
+        "compile_s": dt,
+    }
+    return compiled, info, dt
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry-run
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             skip_probes: bool = False,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    import dataclasses as dc
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+    api = ModelApi(cfg)
+    sh = SHAPES[shape]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "kind": sh.kind, "seq_len": sh.seq_len, "global_batch": sh.global_batch,
+        "param_count": api.param_count(),
+        "active_param_count": api.active_param_count(),
+        "superlayer_repeat": cfg.superlayer_repeat,
+        "blocks_per_superlayer": len(cfg.block_pattern),
+        "grad_accum": cfg.grad_accum if sh.kind == "train" else 1,
+        "n_enc_layers": cfg.n_enc_layers,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+    }
+    if not api.supports(shape):
+        result["status"] = "skipped"
+        result["skip_reason"] = ("full-attention architecture: 500k dense "
+                                 "decode out of scope (DESIGN.md §3)")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh,
+                       seq_shard=cfg.seq_shard_activations
+                       and sh.kind in ("train", "prefill"),
+                       ws_decode=cfg.weight_stationary_decode
+                       and sh.kind == "decode")
+    n_dev = mesh.size
+    result["seq_shard"] = rules.seq_shard
+    result["ws_decode"] = rules.ws_decode
+    result["decode_loop"] = cfg.decode_loop
+
+    with use_rules(rules):
+        params_abs = api.abstract_params()
+        params_specs = api.param_pspecs()
+        params_sh = tree_shardings(mesh, params_specs, params_abs)
+        batch_abs = api.input_specs(shape)
+        batch_specs = psp.batch_specs(batch_abs)
+        batch_sh = tree_shardings(mesh, batch_specs, batch_abs)
+
+        if sh.kind == "train":
+            # microbatches must still cover every DP replica
+            dp = mesh.size // mesh.shape.get("model", 1)
+            accum = max(1, min(cfg.grad_accum, sh.global_batch // dp))
+            result["grad_accum"] = accum
+            optimizer = default_optimizer(cfg)
+            opt_abs = jax.eval_shape(optimizer.init, params_abs)
+            opt_specs = optimizer.state_pspecs(params_specs)
+            opt_sh = tree_shardings(mesh, opt_specs, opt_abs)
+            step = build_train_step(api, optimizer, accum=accum)
+            with mesh:
+                compiled, info, _ = _compile(
+                    step, (params_sh, opt_sh, batch_sh),
+                    (params_abs, opt_abs, batch_abs), donate=(0, 1))
+            result["full"] = info
+            with use_rules(rules):
+                if not skip_probes and not cfg.is_encdec:
+                    result["probe"] = _train_probe(api, mesh, rules, params_abs,
+                                                   params_specs, sh, accum)
+                elif not skip_probes:
+                    result["probe"] = _encdec_train_probe(
+                        api, mesh, rules, params_abs, params_specs, sh, accum)
+        elif sh.kind == "prefill":
+            step = build_prefill_step(api)
+            with mesh:
+                compiled, info, _ = _compile(step, (params_sh, batch_sh),
+                                             (params_abs, batch_abs))
+            result["full"] = info
+            if not skip_probes:
+                result["probe"] = _serve_probe(api, mesh, rules, params_abs,
+                                               params_specs, sh, "prefill")
+        else:  # decode
+            caches_abs = api.cache_shapes(shape)
+            cache_specs = api.cache_pspecs(shape)
+            caches_sh = tree_shardings(mesh, cache_specs, caches_abs)
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            pos_sh = NamedSharding(mesh, P())
+            step = build_decode_step(api)
+            with mesh:
+                compiled, info, _ = _compile(
+                    step, (params_sh, caches_sh, pos_sh, batch_sh),
+                    (params_abs, caches_abs, pos_abs, batch_abs), donate=(1,))
+            result["full"] = info
+            if not skip_probes:
+                result["probe"] = _serve_probe(api, mesh, rules, params_abs,
+                                               params_specs, sh, "decode",
+                                               caches_abs, cache_specs)
+
+        result["status"] = "ok"
+        result["devices"] = n_dev
+        result["totals"] = scale_totals(result)
+        return result
+
+
+def _train_probe(api, mesh, rules, params_abs, params_specs, sh, accum):
+    """Compile grad through one superlayer on one microbatch."""
+    cfg = api.cfg
+    b_micro = sh.global_batch // accum
+    layer_abs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                             params_abs["layers"])
+    strip = lambda s: P(*tuple(s)[1:])
+    layer_specs = jax.tree.map(strip, params_specs["layers"],
+                               is_leaf=lambda x: isinstance(x, P))
+    layer_sh = tree_shardings(mesh, layer_specs, layer_abs)
+    x_abs = jax.ShapeDtypeStruct((b_micro, sh.seq_len, cfg.d_model),
+                                 cfg.compute_dtype)
+    x_sh = NamedSharding(mesh, sanitize_spec(rules.spec("act_btd"),
+                                             x_abs.shape, mesh))
+    hd2 = cfg.resolved_head_dim // 2
+    cs_abs = jax.ShapeDtypeStruct((sh.seq_len, hd2), jnp.float32)
+    cs_sh = NamedSharding(mesh, P())
+    shared = params_abs.get("shared")
+    probe = probes.train_body_fn(api)
+    if shared is not None:
+        shared_sh = tree_shardings(mesh, api.param_pspecs()["shared"], shared)
+        args = (layer_abs, shared, x_abs, cs_abs, cs_abs)
+        shardings = (layer_sh, shared_sh, x_sh, cs_sh, cs_sh)
+        fn = probe
+    else:
+        fn = lambda lp, x, c, s: probe(lp, None, x, c, s)
+        args = (layer_abs, x_abs, cs_abs, cs_abs)
+        shardings = (layer_sh, x_sh, cs_sh, cs_sh)
+    with mesh:
+        _, info, _ = _compile(fn, shardings, args)
+    return info
+
+
+def _encdec_train_probe(api, mesh, rules, params_abs, params_specs, sh, accum):
+    cfg = api.cfg
+    b_micro = sh.global_batch // accum
+    enc_probe, dec_probe = probes.encdec_train_bodies(api)
+    strip = lambda s: P(*tuple(s)[1:])
+    out = {}
+    for name, key, fn in (("enc", "enc_layers", enc_probe),
+                          ("dec", "dec_layers", dec_probe)):
+        layer_abs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                                 params_abs[key])
+        layer_specs = jax.tree.map(strip, params_specs[key],
+                                   is_leaf=lambda x: isinstance(x, P))
+        layer_sh = tree_shardings(mesh, layer_specs, layer_abs)
+        s_len = sh.seq_len if name == "enc" else min(sh.seq_len // 4,
+                                                     cfg.max_target_len * 32)
+        x_abs = jax.ShapeDtypeStruct((b_micro, s_len, cfg.d_model),
+                                     cfg.compute_dtype)
+        x_sh = NamedSharding(mesh, sanitize_spec(P(("pod", "data"), None, None),
+                                                 x_abs.shape, mesh))
+        hd2 = cfg.resolved_head_dim // 2
+        cs_abs = jax.ShapeDtypeStruct((s_len, hd2), jnp.float32)
+        cs_sh = NamedSharding(mesh, P())
+        if name == "enc":
+            args = (layer_abs, x_abs, cs_abs, cs_abs)
+            shardings = (layer_sh, x_sh, cs_sh, cs_sh)
+        else:
+            eo_abs = jax.ShapeDtypeStruct((b_micro, sh.seq_len, cfg.d_model),
+                                          cfg.compute_dtype)
+            eo_sh = NamedSharding(mesh, sanitize_spec(
+                P(("pod", "data"), None, None), eo_abs.shape, mesh))
+            args = (layer_abs, x_abs, eo_abs, cs_abs, cs_abs)
+            shardings = (layer_sh, x_sh, eo_sh, cs_sh, cs_sh)
+        with mesh:
+            _, info, _ = _compile(fn, shardings, args)
+        out[name] = info
+    return out
+
+
+def _serve_probe(api, mesh, rules, params_abs, params_specs, sh, mode,
+                 caches_abs=None, cache_specs=None):
+    """Compile one superlayer serving body with identical shardings."""
+    cfg = api.cfg
+    strip = lambda s: P(*tuple(s)[1:])
+    hd2 = max(1, cfg.resolved_head_dim // 2)
+    cs_sh = NamedSharding(mesh, P())
+
+    if cfg.is_encdec:
+        if mode == "prefill":
+            enc_probe, dec_probe = probes.encdec_prefill_bodies(api)
+            out = {}
+            for name, key in (("enc", "enc_layers"), ("dec", "dec_layers")):
+                layer_abs = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                    params_abs[key])
+                layer_sh = tree_shardings(
+                    mesh, jax.tree.map(strip, params_specs[key],
+                                       is_leaf=lambda x: isinstance(x, P)),
+                    layer_abs)
+                s_len = sh.seq_len if name == "enc" else min(sh.seq_len // 4, 1024)
+                x_abs = jax.ShapeDtypeStruct((sh.global_batch, s_len, cfg.d_model),
+                                             cfg.compute_dtype)
+                x_sh = NamedSharding(mesh, sanitize_spec(
+                    P(("pod", "data"), None, None), x_abs.shape, mesh))
+                cs_abs = jax.ShapeDtypeStruct((s_len, hd2), jnp.float32)
+                if name == "enc":
+                    with mesh:
+                        _, info, _ = _compile(enc_probe,
+                                              (layer_sh, x_sh, cs_sh, cs_sh),
+                                              (layer_abs, x_abs, cs_abs, cs_abs))
+                else:
+                    eo_abs = jax.ShapeDtypeStruct(
+                        (sh.global_batch, sh.seq_len, cfg.d_model), cfg.compute_dtype)
+                    eo_sh = NamedSharding(mesh, sanitize_spec(
+                        P(("pod", "data"), None, None), eo_abs.shape, mesh))
+                    with mesh:
+                        _, info, _ = _compile(dec_probe,
+                                              (layer_sh, x_sh, eo_sh, cs_sh, cs_sh),
+                                              (layer_abs, x_abs, eo_abs, cs_abs, cs_abs))
+                out[name] = info
+            return out
+        # enc-dec decode
+        probe = probes.encdec_dec_decode_body(api)
+        layer_abs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                                 params_abs["dec_layers"])
+        layer_sh = tree_shardings(
+            mesh, jax.tree.map(strip, params_specs["dec_layers"],
+                               is_leaf=lambda x: isinstance(x, P)), layer_abs)
+        cache1_abs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                                  caches_abs)
+        cache1_sh = tree_shardings(
+            mesh, jax.tree.map(strip, cache_specs,
+                               is_leaf=lambda x: isinstance(x, P)), cache1_abs)
+        b = sh.global_batch
+        x_abs = jax.ShapeDtypeStruct((b, cfg.d_model), cfg.compute_dtype)
+        x_sh = NamedSharding(mesh, sanitize_spec(P(("pod", "data"), None),
+                                                 x_abs.shape, mesh))
+        i_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        l_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+        l_sh = NamedSharding(mesh, sanitize_spec(P(("pod", "data")),
+                                                 l_abs.shape, mesh))
+        max_pos = cache1_abs["k"].shape[2]
+        cs_abs = jax.ShapeDtypeStruct((max_pos, hd2), jnp.float32)
+        with mesh:
+            _, info, _ = _compile(
+                probe,
+                (layer_sh, x_sh, cache1_sh, NamedSharding(mesh, P()), l_sh,
+                 l_sh, cs_sh, cs_sh),
+                (layer_abs, x_abs, cache1_abs, i_abs, l_abs, l_abs, cs_abs,
+                 cs_abs))
+        return info
+
+    layer_abs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                             params_abs["layers"])
+    layer_sh = tree_shardings(
+        mesh, jax.tree.map(strip, params_specs["layers"],
+                           is_leaf=lambda x: isinstance(x, P)), layer_abs)
+    shared = params_abs.get("shared")
+    shared_sh = (tree_shardings(mesh, api.param_pspecs()["shared"], shared)
+                 if shared is not None else None)
+
+    if mode == "prefill":
+        probe = probes.prefill_body_fn(api, max_len=sh.seq_len)
+        x_abs = jax.ShapeDtypeStruct((sh.global_batch, sh.seq_len, cfg.d_model),
+                                     cfg.compute_dtype)
+        x_sh = NamedSharding(mesh, sanitize_spec(rules.spec("act_btd"),
+                                                 x_abs.shape, mesh))
+        cs_abs = jax.ShapeDtypeStruct((sh.seq_len, hd2), jnp.float32)
+        if shared is not None:
+            args = (layer_abs, shared, x_abs, cs_abs, cs_abs)
+            shardings = (layer_sh, shared_sh, x_sh, cs_sh, cs_sh)
+            fn = probe
+        else:
+            fn = lambda lp, x, c, s: probe(lp, None, x, c, s)
+            args = (layer_abs, x_abs, cs_abs, cs_abs)
+            shardings = (layer_sh, x_sh, cs_sh, cs_sh)
+        with mesh:
+            _, info, _ = _compile(fn, shardings, args)
+        return info
+
+    # decode
+    probe = probes.decode_body_fn(api)
+    cache1_abs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                              caches_abs)
+    cache1_sh = tree_shardings(
+        mesh, jax.tree.map(strip, cache_specs,
+                           is_leaf=lambda x: isinstance(x, P)), cache1_abs)
+    b = sh.global_batch
+    x_abs = jax.ShapeDtypeStruct((b, cfg.d_model), cfg.compute_dtype)
+    x_sh = NamedSharding(mesh, sanitize_spec(P(("pod", "data"), None),
+                                             x_abs.shape, mesh))
+    i_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    l_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+    l_sh = NamedSharding(mesh, sanitize_spec(P(("pod", "data")), l_abs.shape, mesh))
+    cs_abs = jax.ShapeDtypeStruct((sh.seq_len, hd2), jnp.float32)
+    if shared is not None:
+        fn = probe
+        args = (layer_abs, shared, x_abs, cache1_abs, cs_abs, cs_abs, i_abs, l_abs)
+        shardings = (layer_sh, shared_sh, x_sh, cache1_sh, cs_sh, cs_sh,
+                     NamedSharding(mesh, P()), l_sh)
+    else:
+        fn = lambda lp, x, st, c, s, p_, kl: probe(lp, None, x, st, c, s, p_, kl)
+        args = (layer_abs, x_abs, cache1_abs, cs_abs, cs_abs, i_abs, l_abs)
+        shardings = (layer_sh, x_sh, cache1_sh, cs_sh, cs_sh,
+                     NamedSharding(mesh, P()), l_sh)
+    with mesh:
+        _, info, _ = _compile(fn, shardings, args)
+    return info
+
+
+def scale_totals(result: Dict[str, Any]) -> Dict[str, float]:
+    """full + (repeats-1) x probe, x accum for training (DESIGN.md §5)."""
+    full = result["full"]
+    kind = result["kind"]
+    repeat = result["superlayer_repeat"]
+    accum = result.get("grad_accum", 1)
+    probe = result.get("probe")
+
+    def add(a, b, scale):
+        return {k: a[k] + scale * b[k] for k in ("flops", "bytes")}
+
+    totals = dict(full["cost"])
+    coll = float(full["collectives"]["total_bytes"])
+    train = kind == "train"
+    if probe is not None and "cost" in probe:          # decoder-only (any kind)
+        totals = add(totals, probe["cost"], repeat - 1)
+        coll += (repeat - 1) * probe["collectives"]["total_bytes"]
+    elif probe is not None:                             # enc-dec (train/prefill)
+        n_enc = result.get("n_enc_layers", 0)
+        totals = add(totals, probe["enc"]["cost"], max(0, n_enc - 1))
+        totals = add(totals, probe["dec"]["cost"], repeat - 1)
+        coll += (max(0, n_enc - 1) * probe["enc"]["collectives"]["total_bytes"]
+                 + (repeat - 1) * probe["dec"]["collectives"]["total_bytes"])
+    if train:
+        totals = {k: v * accum for k, v in totals.items()}
+        coll *= accum
+    totals["collective_bytes"] = coll
+    return totals
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    res = run_cell(args.arch, args.shape, args.multi_pod,
+                   skip_probes=args.skip_probes)
+    name = f"{args.arch}__{args.shape}__{res['mesh']}.json"
+    path = os.path.join(args.out, name)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    if res["status"] == "ok":
+        mem = res["full"]["memory"]
+        print(f"{args.arch} x {args.shape} x {res['mesh']}: OK  "
+              f"peak/dev={mem['peak_estimate_bytes']/2**30:.2f} GiB  "
+              f"flops/dev={res['totals']['flops']:.3e}  "
+              f"coll/dev={res['totals']['collective_bytes']:.3e} B  "
+              f"compile={res['full']['compile_s']:.1f}s")
+        print("memory_analysis:", {k: round(v / 2**20, 1)
+                                   for k, v in mem.items()}, "MiB")
+        print("cost_analysis:", res["full"]["cost"])
+    else:
+        print(f"{args.arch} x {args.shape}: SKIPPED ({res['skip_reason']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""§Perf hillclimb runner: re-lower a cell with config overrides and record
+the variant next to its baseline.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch dbrx-132b \
+      --shape decode_32k --variant ws+carry \
+      --set weight_stationary_decode=True decode_loop=carry
+"""
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from repro.launch.dryrun import run_cell
+
+_TYPES = {"True": True, "False": False}
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v in _TYPES:
+        return k, _TYPES[v]
+    try:
+        return k, int(v)
+    except ValueError:
+        pass
+    try:
+        return k, float(v)
+    except ValueError:
+        return k, v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+    overrides = dict(parse_override(kv) for kv in args.set)
+    os.makedirs(args.out, exist_ok=True)
+    res = run_cell(args.arch, args.shape, args.multi_pod, overrides=overrides)
+    name = f"{args.arch}__{args.shape}__{res['mesh']}__{args.variant}.json"
+    with open(os.path.join(args.out, name), "w") as f:
+        json.dump(res, f, indent=2)
+    mem = res["full"]["memory"]
+    t = res["totals"]
+    print(f"{args.arch} x {args.shape} [{args.variant}]: "
+          f"peak={mem['peak_estimate_bytes']/2**30:.2f} GiB "
+          f"flops/dev={t['flops']:.3e} bytes/dev={t['bytes']:.3e} "
+          f"coll/dev={t['collective_bytes']:.3e}")
+    print("per-kind:", {k: f"{v:.2e}" for k, v in
+                        res["full"]["collectives"]["bytes_per_kind"].items()
+                        if v})
+    if "probe" in res and "collectives" in res.get("probe", {}):
+        print("probe per-kind:", {k: f"{v:.2e}" for k, v in
+                                  res["probe"]["collectives"]["bytes_per_kind"].items()
+                                  if v})
+
+
+if __name__ == "__main__":
+    main()

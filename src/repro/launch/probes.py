@@ -1,0 +1,139 @@
+"""Single-superlayer probe functions for dry-run cost accounting.
+
+``cost_analysis()`` on this backend counts a scan body once (verified in
+DESIGN.md), so the dry-run compiles (a) the full step — memory analysis,
+collective schedule, multi-pod proof — and (b) these one-superlayer probes
+with identical shardings; per-step totals are  full + (repeats-1) x probe
+(x accum microbatches for training).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, encdec, lm
+from repro.models.config import ModelConfig
+from repro.models.model import ModelApi, SHAPES
+
+
+def _first_layer(tree):
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def train_body_fn(api: ModelApi) -> Callable:
+    """grad through one superlayer on one microbatch of activations."""
+    cfg = api.cfg
+
+    def probe(layer_p, shared_p, x, cos, sin):
+        def f(lp, sp, xx):
+            out, aux = blocks.superlayer_train(lp, sp, xx, cfg, cos, sin)
+            return jnp.sum(out.astype(jnp.float32)) + aux
+
+        if cfg.remat:   # count the remat recompute, as the real step does
+            f = jax.checkpoint(f)
+        g = jax.grad(f, argnums=(0, 1, 2) if shared_p is not None else (0, 2))
+        if shared_p is not None:
+            return g(layer_p, shared_p, x)
+        return g(layer_p, None, x)
+
+    return probe
+
+
+def encdec_train_bodies(api: ModelApi):
+    cfg = api.cfg
+
+    def enc_probe(layer_p, x, cos, sin):
+        def f(lp, xx):
+            from repro.models.attention import attn_apply
+            from repro.models.layers import mlp_apply, rms_norm
+            a = attn_apply(lp["attn"], rms_norm(xx, lp["norm1"], cfg.norm_eps),
+                           cfg, cos, sin, causal=False)
+            h = xx + a
+            m = mlp_apply(lp["mlp"], rms_norm(h, lp["norm2"], cfg.norm_eps),
+                          cfg.compute_dtype)
+            return jnp.sum((h + m).astype(jnp.float32))
+
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        return jax.grad(f, argnums=(0, 1))(layer_p, x)
+
+    def dec_probe(layer_p, x, enc_out, cos, sin):
+        def f(lp, xx, eo):
+            return jnp.sum(encdec._dec_layer(lp, xx, cfg, cos, sin, eo)
+                           .astype(jnp.float32))
+
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        return jax.grad(f, argnums=(0, 1, 2))(layer_p, x, enc_out)
+
+    return enc_probe, dec_probe
+
+
+def prefill_body_fn(api: ModelApi, max_len: int) -> Callable:
+    cfg = api.cfg
+
+    def probe(layer_p, shared_p, x, cos, sin):
+        return blocks.superlayer_prefill(layer_p, shared_p, x, cfg, cos, sin,
+                                         max_len)
+
+    return probe
+
+
+def decode_body_fn(api: ModelApi) -> Callable:
+    cfg = api.cfg
+
+    def probe(layer_p, shared_p, x, states, cos, sin, pos, kv_len):
+        return blocks.superlayer_decode(layer_p, shared_p, x, states, cfg,
+                                        cos, sin, pos, kv_len)
+
+    return probe
+
+
+def encdec_dec_decode_body(api: ModelApi) -> Callable:
+    """One enc-dec decoder layer decode step (self-cached + cross attn)."""
+    cfg = api.cfg
+
+    def probe(p, x, cache, pos, kv_len, enc_len, cos, sin):
+        from repro.kernels.flash_decode import ref as fd_ref
+        from repro.models.attention import attn_decode
+        from repro.models.layers import mlp_apply, rms_norm
+
+        b = x.shape[0]
+        a, new_kv = attn_decode(p["self_attn"],
+                                rms_norm(x, p["norm1"], cfg.norm_eps),
+                                cfg, cos, sin,
+                                {"k": cache["k"], "v": cache["v"]}, pos, kv_len)
+        h = x + a
+        hq = rms_norm(h, p["norm_c"], cfg.norm_eps)
+        q = hq @ p["cross_attn"]["wq"].astype(cfg.compute_dtype)
+        q = q.reshape(b, cfg.n_heads, cfg.resolved_head_dim)
+        c = fd_ref.decode_attention(q, cache["ck"], cache["cv"], enc_len)
+        h = h + c.reshape(b, -1) @ p["cross_attn"]["wo"].astype(cfg.compute_dtype)
+        m = mlp_apply(p["mlp"], rms_norm(h, p["norm2"], cfg.norm_eps),
+                      cfg.compute_dtype)
+        return h + m, new_kv
+
+    return probe
+
+
+def encdec_prefill_bodies(api: ModelApi):
+    """(enc layer fwd, dec layer prefill fwd) for enc-dec prefill scaling."""
+    cfg = api.cfg
+
+    def enc_probe(lp, x, cos, sin):
+        from repro.models.attention import attn_apply
+        from repro.models.layers import mlp_apply, rms_norm
+        a = attn_apply(lp["attn"], rms_norm(x, lp["norm1"], cfg.norm_eps),
+                       cfg, cos, sin, causal=False)
+        h = x + a
+        m = mlp_apply(lp["mlp"], rms_norm(h, lp["norm2"], cfg.norm_eps),
+                      cfg.compute_dtype)
+        return h + m
+
+    def dec_probe(lp, x, enc_out, cos, sin):
+        return encdec._dec_layer(lp, x, cfg, cos, sin, enc_out)
+
+    return enc_probe, dec_probe

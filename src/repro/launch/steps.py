@@ -1,0 +1,73 @@
+"""Step builders: train (with gradient-accumulation scan), prefill, decode."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelApi
+from repro.optim import make_optimizer
+
+
+def default_optimizer(cfg):
+    if cfg.optimizer == "adafactor":
+        return make_optimizer("adafactor", b1=cfg.adafactor_beta1)
+    return make_optimizer(cfg.optimizer)
+
+
+def build_train_step(api: ModelApi, optimizer=None,
+                     accum: Optional[int] = None) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 scans over microbatches (batch dim folded to
+    (A, B/A, ...)); gradients accumulate in the parameter dtype (bf16 for the
+    large-model memory plans — documented in DESIGN.md). ``accum`` overrides
+    cfg.grad_accum (the launcher clamps it so each microbatch still covers
+    every data-parallel replica).
+    """
+    cfg = api.cfg
+    optimizer = optimizer or default_optimizer(cfg)
+    accum = max(1, accum if accum is not None else cfg.grad_accum)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (loss, _), g = jax.value_and_grad(api.loss, has_aux=True)(params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (gacc, lacc + loss), ()
+
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: (g / accum), gsum)
+            loss = lsum / accum
+        else:
+            (loss, _), grads = jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def build_prefill_step(api: ModelApi) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(params, batch)
+
+    return prefill_step
+
+
+def build_decode_step(api: ModelApi) -> Callable:
+    def decode_step(params, caches, pos, batch):
+        return api.decode(params, caches, pos, batch)
+
+    return decode_step

@@ -1,0 +1,198 @@
+"""GQA attention: train/prefill (causal full-seq) and cached decode paths."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partition import active_rules, shard
+
+
+def _shard_attn(q, k, v, cfg: ModelConfig):
+    """Head-parallel attention when heads divide the model axis; otherwise
+    context-parallel (q seq dim over `model`, GQA KV broadcast) — archs like
+    qwen2 (12/28 heads vs a 16-way axis) would silently replicate every head
+    per device under plain head sharding."""
+    rules = active_rules()
+    if rules is None or rules.model_axis is None:
+        return q, k, v
+    m = rules.mesh.shape[rules.model_axis]
+    if cfg.n_heads % m == 0:
+        return (shard(q, "act_bhtd"), shard(k, "act_bhtd"),
+                shard(v, "act_bhtd"))
+    # KV stays batch-sharded; only the model axis is replicated (GQA KV is
+    # small). "kv_prefill" = P(batch, None, None, None).
+    return (shard(q, "act_bhtd_cp"), shard(k, "kv_prefill"),
+            shard(v, "kv_prefill"))
+from repro.models import kvcache
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, init_dense
+
+
+def attn_init(key, cfg: ModelConfig, dtype=None) -> Dict[str, jnp.ndarray]:
+    dtype = dtype or cfg.param_dtype
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(kq, (d, cfg.n_heads * hd), dtype),
+        "wk": init_dense(kk, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": init_dense(kv, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": init_dense(ko, (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, cdtype):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(cdtype)
+    k = x @ p["wk"].astype(cdtype)
+    v = x @ p["wv"].astype(cdtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdtype)
+        k = k + p["bk"].astype(cdtype)
+        v = v + p["bv"].astype(cdtype)
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+CHUNKED_ATTN_THRESHOLD = 8192   # S >= this uses the no-S^2-buffer path
+CHUNK_KV = 1024
+
+
+def _chunked_sdpa(q, k, v, causal: bool) -> jnp.ndarray:
+    """Online-softmax attention over unrolled KV chunks (XLA 'flash').
+
+    Long-context prefill cannot materialize the (S, S) logits tensor
+    (32k x 32k fp32 is ~4 GiB per head-batch slice); this computes the same
+    result with only a (B, H, S, CHUNK) tile live at a time. The chunk loop
+    is unrolled (static) so HLO cost analysis counts every chunk — required
+    by the dry-run accounting. Forward-only paths (prefill) use this.
+    """
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    scale = d ** -0.5
+    qf = q * jnp.asarray(scale, q.dtype)   # bf16 operands, f32 accumulation
+    n_chunks = -(-s // CHUNK_KV)
+    m = jnp.full((b, h, s, 1), -jnp.inf, jnp.float32)
+    l = jnp.zeros((b, h, s, 1), jnp.float32)
+    acc = jnp.zeros((b, h, s, d), jnp.float32)
+    qpos = jnp.arange(s)[:, None]
+    for c in range(n_chunks):
+        # Chain chunk INPUTS through the barrier: otherwise every chunk's
+        # (B,H,S,CHUNK) logits dot is independent and the scheduler keeps
+        # all of them alive at once (S^2-equivalent peak memory).
+        m, l, acc, k, v = jax.lax.optimization_barrier((m, l, acc, k, v))
+        lo = c * CHUNK_KV
+        hi = min(s, lo + CHUNK_KV)
+        kc = jnp.repeat(k[:, :, lo:hi], g, axis=1)
+        vc = jnp.repeat(v[:, :, lo:hi], g, axis=1)
+        sc = jnp.einsum("bhqd,bhld->bhql", qf, kc,
+                        preferred_element_type=jnp.float32)
+        if causal:
+            kpos = jnp.arange(lo, hi)[None, :]
+            sc = jnp.where(kpos <= qpos, sc, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sc - m_safe)
+        p = jnp.where(jnp.isfinite(sc), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhql,bhld->bhqd",
+                                      p.astype(vc.dtype), vc,
+                                      preferred_element_type=jnp.float32)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, causal: bool) -> jnp.ndarray:
+    """Dispatch on cfg.attn_impl: einsum reference or Pallas flash kernel."""
+    if cfg.attn_impl == "flash":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal)
+    # "ref_full" pins the S^2-materializing einsum path (baseline A/B).
+    if cfg.attn_impl != "ref_full" and q.shape[2] >= CHUNKED_ATTN_THRESHOLD:
+        return _chunked_sdpa(q, k, v, causal)
+    from repro.kernels.flash_attention import ref as fa_ref
+    return fa_ref.flash_attention(q, k, v, causal=causal)
+
+
+def attn_apply(p, x: jnp.ndarray, cfg: ModelConfig, cos, sin,
+               causal: bool = True,
+               kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+               ) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    cdtype = cfg.compute_dtype
+    x = x.astype(cdtype)
+    q, k, v = _project_qkv(p, x, cfg, cdtype)
+    if kv_override is not None:
+        k, v = kv_override                       # cross-attention
+    else:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q, k, v = _shard_attn(q, k, v, cfg)
+    out = _sdpa(q, k, v, cfg, causal)
+    b, s = x.shape[:2]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ p["wo"].astype(cdtype)
+
+
+def attn_prefill(p, x: jnp.ndarray, cfg: ModelConfig, cos, sin
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Causal attention that also returns the K/V for the cache."""
+    cdtype = cfg.compute_dtype
+    x = x.astype(cdtype)
+    q, k, v = _project_qkv(p, x, cfg, cdtype)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q, k, v = _shard_attn(q, k, v, cfg)
+    out = _sdpa(q, k, v, cfg, causal=True)
+    b, s = x.shape[:2]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ p["wo"].astype(cdtype), {"k": k, "v": v}
+
+
+def attn_decode(p, x: jnp.ndarray, cfg: ModelConfig, cos, sin,
+                cache: Dict[str, jnp.ndarray], pos: jnp.ndarray,
+                kv_len: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode with cache update.
+
+    x (B, D); pos () int32 write position; kv_len (B,) live lengths (after
+    this token). Uses the sequence-parallel flash-decode collective when a
+    mesh is active.
+    """
+    cdtype = cfg.compute_dtype
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    x1 = x[:, None, :].astype(cdtype)            # (B, 1, D)
+    q, k, v = _project_qkv(p, x1, cfg, cdtype)
+    positions = jnp.broadcast_to(pos, (b, 1))
+    q = apply_rope(q, cos, sin, positions[:, None].repeat(cfg.n_heads, 1))
+    k = apply_rope(k, cos, sin, positions[:, None].repeat(cfg.n_kv_heads, 1))
+    cache = kvcache.update_kv(cache, k, v, pos)
+    cache = {"k": shard(cache["k"], "kv_cache"), "v": shard(cache["v"], "kv_cache")}
+    q1 = q[:, :, 0]                               # (B, H, hd)
+    rules = active_rules()
+    if rules is not None and rules.model_axis is not None \
+            and cache["k"].shape[2] % rules.mesh.shape[rules.model_axis] == 0:
+        from repro.distributed.collectives import sp_decode_attention
+        out = sp_decode_attention(rules, q1, cache["k"], cache["v"], kv_len)
+    else:
+        from repro.kernels.flash_decode import ops as fd_ops
+        from repro.kernels.flash_decode import ref as fd_ref
+        if cfg.attn_impl == "flash":
+            out = fd_ops.decode_attention(q1, cache["k"], cache["v"], kv_len)
+        else:
+            out = fd_ref.decode_attention(q1, cache["k"], cache["v"], kv_len)
+    out = out.reshape(b, -1)
+    return out @ p["wo"].astype(cdtype), cache

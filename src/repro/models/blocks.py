@@ -1,0 +1,199 @@
+"""Block registry + the scanned superlayer.
+
+A superlayer applies ``cfg.block_pattern`` in order; the model scans
+``cfg.superlayer_repeat`` stacked superlayers (params stacked on axis 0 via
+vmap'd init). "shared_attn" blocks (zamba2) use one un-stacked parameter set
+closed over by the scan body — weight sharing with per-depth activations and
+caches, as in the paper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partition import shard
+from repro.models import attention, moe, ssm
+from repro.models.config import ModelConfig
+from repro.models.kvcache import create_kv_cache, kv_cache_shapes
+from repro.models.layers import mlp_apply, mlp_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# per-block init / train / decode / state-shape
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, kind: str, cfg: ModelConfig) -> Dict[str, Any]:
+    if kind in ("dense", "shared_attn"):
+        k1, k2 = jax.random.split(key)
+        return {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+                "attn": attention.attn_init(k1, cfg),
+                "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+                "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype)}
+    if kind == "moe":
+        k1, k2 = jax.random.split(key)
+        return {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+                "attn": attention.attn_init(k1, cfg),
+                "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+                "moe": moe.moe_init(k2, cfg)}
+    if kind == "mamba":
+        return {"norm": jnp.ones((cfg.d_model,), jnp.float32),
+                "mamba": ssm.mamba2_init(key, cfg)}
+    if kind == "mlstm":
+        return {"norm": jnp.ones((cfg.d_model,), jnp.float32),
+                "mlstm": ssm.mlstm_init(key, cfg)}
+    if kind == "slstm":
+        return {"norm": jnp.ones((cfg.d_model,), jnp.float32),
+                "slstm": ssm.slstm_init(key, cfg)}
+    raise ValueError(kind)
+
+
+def block_train(p, kind: str, x: jnp.ndarray, cfg: ModelConfig, cos, sin
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence training forward. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "shared_attn", "moe"):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        x = x + attention.attn_apply(p["attn"], h, cfg, cos, sin, causal=True)
+        x = shard(x, "act_btd")
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            out, aux = moe.moe_apply(p["moe"], h, cfg)
+        else:
+            out = mlp_apply(p["mlp"], h, cfg.compute_dtype)
+        x = x + out
+    elif kind == "mamba":
+        out, _ = ssm.mamba2_apply(p["mamba"], rms_norm(x, p["norm"], cfg.norm_eps), cfg)
+        x = x + out
+    elif kind == "mlstm":
+        out, _ = ssm.mlstm_apply(p["mlstm"], rms_norm(x, p["norm"], cfg.norm_eps), cfg)
+        x = x + out
+    elif kind == "slstm":
+        out, _ = ssm.slstm_apply(p["slstm"], rms_norm(x, p["norm"], cfg.norm_eps), cfg)
+        x = x + out
+    else:
+        raise ValueError(kind)
+    return shard(x, "act_btd"), aux
+
+
+def block_prefill(p, kind: str, x: jnp.ndarray, cfg: ModelConfig, cos, sin,
+                  max_len: int) -> Tuple[jnp.ndarray, Any]:
+    """Training-shaped forward that also materializes the serving state."""
+    b, s, _ = x.shape
+    if kind in ("dense", "shared_attn", "moe"):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        out, kv = attention.attn_prefill(p["attn"], h, cfg, cos, sin)
+        x = x + out
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            o2, _ = moe.moe_apply(p["moe"], h, cfg)
+        else:
+            o2 = mlp_apply(p["mlp"], h, cfg.compute_dtype)
+        x = x + o2
+        pad = max_len - s
+        cache = {"k": jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cfg.compute_dtype),
+                 "v": jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cfg.compute_dtype)}
+        cache = {"k": shard(cache["k"], "kv_cache"), "v": shard(cache["v"], "kv_cache")}
+        return shard(x, "act_btd"), cache
+    if kind == "mamba":
+        out, st = ssm.mamba2_apply(p["mamba"], rms_norm(x, p["norm"], cfg.norm_eps), cfg)
+        return shard(x + out, "act_btd"), st
+    if kind == "mlstm":
+        out, st = ssm.mlstm_apply(p["mlstm"], rms_norm(x, p["norm"], cfg.norm_eps), cfg)
+        return shard(x + out, "act_btd"), st
+    if kind == "slstm":
+        out, st = ssm.slstm_apply(p["slstm"], rms_norm(x, p["norm"], cfg.norm_eps), cfg)
+        return shard(x + out, "act_btd"), st
+    raise ValueError(kind)
+
+
+def block_decode(p, kind: str, x: jnp.ndarray, cfg: ModelConfig, cos, sin,
+                 state, pos, kv_len) -> Tuple[jnp.ndarray, Any]:
+    """One-token decode. x (B, D)."""
+    if kind in ("dense", "shared_attn", "moe"):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        out, state = attention.attn_decode(p["attn"], h, cfg, cos, sin,
+                                           state, pos, kv_len)
+        x = x + out
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            o2, _ = moe.moe_apply(p["moe"], h[:, None, :], cfg)
+            o2 = o2[:, 0]
+        else:
+            o2 = mlp_apply(p["mlp"], h, cfg.compute_dtype)
+        return shard(x + o2, "act_bd"), state
+    if kind == "mamba":
+        out, state = ssm.mamba2_decode(p["mamba"], rms_norm(x, p["norm"], cfg.norm_eps), cfg, state)
+        return shard(x + out, "act_bd"), state
+    if kind == "mlstm":
+        out, state = ssm.mlstm_decode(p["mlstm"], rms_norm(x, p["norm"], cfg.norm_eps), cfg, state)
+        return shard(x + out, "act_bd"), state
+    if kind == "slstm":
+        out, state = ssm.slstm_decode(p["slstm"], rms_norm(x, p["norm"], cfg.norm_eps), cfg, state)
+        return shard(x + out, "act_bd"), state
+    raise ValueError(kind)
+
+
+def block_state_shapes(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    if kind in ("dense", "shared_attn", "moe"):
+        return kv_cache_shapes(batch, cfg.n_kv_heads, max_len,
+                               cfg.resolved_head_dim, cfg.compute_dtype)
+    if kind == "mamba":
+        return ssm.mamba2_state_shapes(cfg, batch)
+    if kind == "mlstm":
+        return ssm.mlstm_state_shapes(cfg, batch)
+    if kind == "slstm":
+        return ssm.slstm_state_shapes(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# superlayer (the scanned unit)
+# ---------------------------------------------------------------------------
+
+
+def _stacked_kinds(cfg: ModelConfig):
+    return [(i, k) for i, k in enumerate(cfg.block_pattern) if k != "shared_attn"]
+
+
+def superlayer_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{i}": block_init(keys[i], kind, cfg)
+            for i, kind in _stacked_kinds(cfg)}
+
+
+def superlayer_train(layer_p, shared_p, x, cfg: ModelConfig, cos, sin):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.block_pattern):
+        p = shared_p if kind == "shared_attn" else layer_p[f"b{i}"]
+        x, a = block_train(p, kind, x, cfg, cos, sin)
+        aux = aux + a
+    return x, aux
+
+
+def superlayer_prefill(layer_p, shared_p, x, cfg: ModelConfig, cos, sin,
+                       max_len: int):
+    states = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        p = shared_p if kind == "shared_attn" else layer_p[f"b{i}"]
+        x, st = block_prefill(p, kind, x, cfg, cos, sin, max_len)
+        states[f"b{i}"] = st
+    return x, states
+
+
+def superlayer_decode(layer_p, shared_p, x, states, cfg: ModelConfig,
+                      cos, sin, pos, kv_len):
+    new_states = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        p = shared_p if kind == "shared_attn" else layer_p[f"b{i}"]
+        x, st = block_decode(p, kind, x, cfg, cos, sin, states[f"b{i}"], pos, kv_len)
+        new_states[f"b{i}"] = st
+    return x, new_states
+
+
+def superlayer_state_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    return {f"b{i}": block_state_shapes(kind, cfg, batch, max_len)
+            for i, kind in enumerate(cfg.block_pattern)}

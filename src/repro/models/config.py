@@ -1,0 +1,124 @@
+"""ModelConfig: one dataclass describing every supported architecture family.
+
+A model is a stack of ``superlayer_repeat`` identical *superlayers*; each
+superlayer applies ``block_pattern`` in order (e.g. dense LM: ("dense",) x L;
+zamba2: one shared attention block + 6 mamba blocks; xlstm: 1 sLSTM + 3
+mLSTM). Superlayers are scanned (stacked params), which keeps HLO size
+independent of depth — required for 126-layer dry-runs on a single-core host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+BLOCK_TYPES = ("dense", "moe", "mamba", "mlstm", "slstm", "shared_attn")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int                    # bookkeeping total (incl. pattern blocks)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: Tuple[str, ...]   # blocks per superlayer
+    superlayer_repeat: int           # scan length
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    # enc-dec (encoder layers use bidirectional attention; decoder adds cross-attn)
+    is_encdec: bool = False
+    n_enc_layers: int = 0
+    # frontends: "token" (ids -> embed), "embed" (precomputed embeddings stub)
+    frontend: str = "token"
+    # serving
+    sub_quadratic: bool = False      # can run long_500k
+    # numerics / memory plan
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    remat: bool = True
+    grad_accum: int = 1
+    optimizer: str = "adamw"         # adamw | adafactor
+    adafactor_beta1: float = 0.9     # 0.0 = momentum-free (T5/405B memory plan)
+    # attention implementation: "ref" (einsum; used under pjit) or "flash"
+    # (Pallas kernel; the TPU target, validated in interpret mode)
+    attn_impl: str = "ref"
+    # Megatron-style sequence parallelism: residual-stream activations (and
+    # remat-saved layer inputs) shard their seq dim over `model`. Required for
+    # the 405B memory plan; costs one extra all-gather per layer.
+    seq_shard_activations: bool = False
+    # Weight-stationary decode (serving): decode activations shard d_model
+    # over the FSDP axis so matmuls contract against resident weight shards
+    # (psum of KB-sized activations) instead of all-gathering GB-sized
+    # weights per layer per token. §Perf hillclimb.
+    weight_stationary_decode: bool = False
+    # Decode layer loop: "scan" stacks new caches as scan outputs (double
+    # buffer); "carry" threads the cache tree through a fori_loop carry so
+    # the while-loop aliases buffers in place. §Perf hillclimb.
+    decode_loop: str = "carry"
+    max_target_len: int = 1024       # enc-dec decoder length cap
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a 128 multiple (Megatron-style TP-friendly vocab);
+        the loss masks padded entries, decode slices them off."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def validate(self) -> "ModelConfig":
+        assert self.n_heads % self.n_kv_heads == 0
+        for b in self.block_pattern:
+            assert b in BLOCK_TYPES, b
+        if "moe" in self.block_pattern:
+            assert self.n_experts > 0 and self.moe_top_k > 0
+        return self
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Same-family tiny config for CPU smoke tests (one fwd/train step)."""
+    small = dict(
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        superlayer_repeat=2,
+        n_layers=2 * len(cfg.block_pattern),
+        head_dim=16,
+        n_experts=4 if cfg.n_experts else 0,
+        ssm_state=16,
+        ssm_chunk=32,
+        ssm_expand=2,
+        moe_top_k=min(cfg.moe_top_k, 2) if cfg.moe_top_k else 0,
+        n_enc_layers=2 if cfg.is_encdec else 0,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.float32,
+        grad_accum=1,
+        remat=False,
+        max_target_len=32,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small).validate()

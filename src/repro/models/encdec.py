@@ -1,0 +1,211 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional dense superlayers over precomputed frame embeddings
+(the audio frontend is a stub per the task spec). Decoder: causal self-attn +
+cross-attn + SwiGLU MLP, scanned, with self KV caches and precomputed
+per-layer cross K/V for serving.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partition import shard
+from repro.models import attention
+from repro.models.config import ModelConfig
+from repro.models.kvcache import kv_cache_shapes
+from repro.models.layers import init_dense, mlp_apply, mlp_init, rms_norm, rope_frequencies
+from repro.models.lm import AUX_WEIGHT
+
+
+def _enc_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": attention.attn_init(k1, cfg),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype)}
+
+
+def _dec_layer_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "self_attn": attention.attn_init(k1, cfg),
+            "norm_c": jnp.ones((cfg.d_model,), jnp.float32),
+            "cross_attn": attention.attn_init(k2, cfg),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.param_dtype)}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.superlayer_repeat)
+    return {
+        "embed": init_dense(ks[2], (cfg.padded_vocab, cfg.d_model),
+                            cfg.param_dtype, scale=1.0),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": init_dense(ks[3], (cfg.d_model, cfg.padded_vocab), cfg.param_dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, embeds: jnp.ndarray) -> jnp.ndarray:
+    x = shard(embeds.astype(cfg.compute_dtype), "act_btd")
+    cos, sin = rope_frequencies(cfg.resolved_head_dim, x.shape[1], cfg.rope_theta)
+
+    def body(h, p):
+        a = attention.attn_apply(p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps),
+                                 cfg, cos, sin, causal=False)
+        h = shard(h + a, "act_btd")
+        m = mlp_apply(p["mlp"], rms_norm(h, p["norm2"], cfg.norm_eps),
+                      cfg.compute_dtype)
+        return shard(h + m, "act_btd"), ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(p, enc_out, cfg: ModelConfig):
+    """Project encoder memory to this layer's cross K/V (B, KH, Se, hd)."""
+    cdtype = cfg.compute_dtype
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"].astype(cdtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"].astype(cdtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(cdtype).reshape(cfg.n_kv_heads, hd)
+        v = v + p["bv"].astype(cdtype).reshape(cfg.n_kv_heads, hd)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def _dec_layer(p, x, cfg, cos, sin, enc_out):
+    a = attention.attn_apply(p["self_attn"], rms_norm(x, p["norm1"], cfg.norm_eps),
+                             cfg, cos, sin, causal=True)
+    x = shard(x + a, "act_btd")
+    kv = _cross_kv(p["cross_attn"], enc_out, cfg)
+    c = attention.attn_apply(p["cross_attn"], rms_norm(x, p["norm_c"], cfg.norm_eps),
+                             cfg, cos, sin, causal=False, kv_override=kv)
+    x = shard(x + c, "act_btd")
+    m = mlp_apply(p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps), cfg.compute_dtype)
+    return shard(x + m, "act_btd")
+
+
+def forward(params, cfg: ModelConfig, src_embeds: jnp.ndarray,
+            tgt_tokens: jnp.ndarray) -> jnp.ndarray:
+    enc_out = encode(params, cfg, src_embeds)
+    x = shard(params["embed"][tgt_tokens].astype(cfg.compute_dtype), "act_btd")
+    cos, sin = rope_frequencies(cfg.resolved_head_dim, x.shape[1], cfg.rope_theta)
+
+    def body(h, p):
+        return _dec_layer(p, h, cfg, cos, sin, enc_out), ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return shard(x @ params["head"].astype(cfg.compute_dtype), "act_btv")
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits = forward(params, cfg, batch["embeds"], batch["tokens"]).astype(jnp.float32)
+    labels = batch["labels"]
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - tgt)
+    return loss, {"loss": loss, "aux": jnp.zeros((), jnp.float32),
+                  "ntokens": jnp.asarray(labels.size, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, src_embeds: jnp.ndarray,
+            tgt_tokens: jnp.ndarray, max_len: int):
+    """Encode + decoder prefill. Returns (logits (B,V), caches, pos)."""
+    enc_out = encode(params, cfg, src_embeds)
+    x = shard(params["embed"][tgt_tokens].astype(cfg.compute_dtype), "act_btd")
+    b, s, _ = x.shape
+    cos, sin = rope_frequencies(cfg.resolved_head_dim, s, cfg.rope_theta)
+
+    def body(h, p):
+        a, self_kv = attention.attn_prefill(
+            p["self_attn"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg, cos, sin)
+        h = shard(h + a, "act_btd")
+        ck, cv = _cross_kv(p["cross_attn"], enc_out, cfg)
+        c = attention.attn_apply(p["cross_attn"],
+                                 rms_norm(h, p["norm_c"], cfg.norm_eps),
+                                 cfg, cos, sin, causal=False, kv_override=(ck, cv))
+        h = shard(h + c, "act_btd")
+        m = mlp_apply(p["mlp"], rms_norm(h, p["norm2"], cfg.norm_eps),
+                      cfg.compute_dtype)
+        pad = max_len - s
+        cache = {
+            "k": jnp.pad(self_kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0))),
+            "v": jnp.pad(self_kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0))),
+            "ck": ck, "cv": cv,
+        }
+        return shard(h + m, "act_btd"), cache
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["head"].astype(cfg.compute_dtype))[:, 0, :cfg.vocab_size]
+    return logits, caches, jnp.asarray(s, jnp.int32)
+
+
+def decode_step(params, cfg: ModelConfig, caches, pos, token):
+    from repro.kernels.flash_decode import ref as fd_ref
+
+    x = shard(params["embed"][token].astype(cfg.compute_dtype), "act_bd")
+    b = x.shape[0]
+    max_pos = caches["k"].shape[3] if isinstance(caches, dict) else None
+    # caches is a stacked dict from prefill: {'k','v','ck','cv'} each (R, ...)
+    max_pos = caches["k"].shape[3]
+    cos, sin = rope_frequencies(cfg.resolved_head_dim, max_pos, cfg.rope_theta)
+    kv_len = jnp.full((b,), pos + 1, jnp.int32)
+    enc_len = jnp.full((b,), caches["ck"].shape[3], jnp.int32)
+
+    def body(h, xs):
+        p, cache = xs
+        a, new_kv = attention.attn_decode(
+            p["self_attn"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg, cos, sin,
+            {"k": cache["k"], "v": cache["v"]}, pos, kv_len)
+        h = h + a
+        # cross attention against fixed encoder memory
+        hq = rms_norm(h, p["norm_c"], cfg.norm_eps)
+        q = (hq @ p["cross_attn"]["wq"].astype(cfg.compute_dtype))
+        if cfg.qkv_bias:
+            q = q + p["cross_attn"]["bq"].astype(cfg.compute_dtype)
+        q = q.reshape(b, cfg.n_heads, cfg.resolved_head_dim)
+        c = fd_ref.decode_attention(q, cache["ck"], cache["cv"], enc_len)
+        c = c.reshape(b, -1) @ p["cross_attn"]["wo"].astype(cfg.compute_dtype)
+        h = h + c
+        m = mlp_apply(p["mlp"], rms_norm(h, p["norm2"], cfg.norm_eps),
+                      cfg.compute_dtype)
+        return h + m, {"k": new_kv["k"], "v": new_kv["v"],
+                       "ck": cache["ck"], "cv": cache["cv"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = rms_norm(x[:, None], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["head"].astype(cfg.compute_dtype))[:, 0, :cfg.vocab_size]
+    return logits, new_caches
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    self_kv = kv_cache_shapes(batch, cfg.n_kv_heads, max_len,
+                              cfg.resolved_head_dim, cfg.compute_dtype)
+    cross = kv_cache_shapes(batch, cfg.n_kv_heads, enc_len,
+                            cfg.resolved_head_dim, cfg.compute_dtype)
+    shapes = {"k": self_kv["k"], "v": self_kv["v"],
+              "ck": cross["k"], "cv": cross["v"]}
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.superlayer_repeat,) + s.shape, s.dtype),
+        shapes)

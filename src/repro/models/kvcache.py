@@ -1,0 +1,36 @@
+"""KV cache + recurrent-state containers for serving."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def create_kv_cache(batch: int, kv_heads: int, max_len: int, head_dim: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, kv_heads, max_len, head_dim), dtype=dtype),
+        "v": jnp.zeros((batch, kv_heads, max_len, head_dim), dtype=dtype),
+    }
+
+
+def kv_cache_shapes(batch: int, kv_heads: int, max_len: int, head_dim: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    shape = (batch, kv_heads, max_len, head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def update_kv(cache: Dict[str, jnp.ndarray], k_new: jnp.ndarray,
+              v_new: jnp.ndarray, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Write one new token's K/V at position ``pos`` (same for all batch rows).
+
+    k_new/v_new: (B, KH, 1, D); pos: () int32. A scatter on the (possibly
+    sequence-sharded) cache dim — GSPMD turns this into a masked local update.
+    """
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, 0, pos, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, 0, pos, 0))
+    return {"k": k, "v": v}

@@ -1,0 +1,75 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, init helpers, sharding hooks.
+
+Sharding is expressed through ``shard(x, spec_name)`` which consults the
+active logical-axis rules (distributed/partition.py). Outside a mesh context
+it is a no-op, so the same model code runs in smoke tests and in the
+production-mesh dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partition import shard
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def init_dense(key, shape, dtype, scale: Optional[float] = None) -> jnp.ndarray:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, max_pos: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    pos = jnp.arange(max_pos, dtype=jnp.float32)
+    ang = jnp.outer(pos, inv)                      # (S, D/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x (..., S, D); cos/sin (Smax, D/2); positions (..., S) optional."""
+    if positions is not None:
+        cos = cos[positions]
+        sin = sin[positions]
+    else:
+        cos = cos[: x.shape[-2]]
+        sin = sin[: x.shape[-2]]
+    while cos.ndim < x.ndim:
+        cos = cos[None]
+        sin = sin[None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, (d_model, d_ff), dtype),
+        "up": init_dense(k2, (d_model, d_ff), dtype),
+        "down": init_dense(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    x = x.astype(compute_dtype)
+    h = jax.nn.silu(x @ p["gate"].astype(compute_dtype)) * (x @ p["up"].astype(compute_dtype))
+    h = shard(h, "act_ff")
+    return h @ p["down"].astype(compute_dtype)

@@ -1,0 +1,197 @@
+"""Decoder-only causal LM over scanned superlayers: train / prefill / decode."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partition import shard
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, rms_norm, rope_frequencies
+
+AUX_WEIGHT = 0.01
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 4 + cfg.superlayer_repeat)
+    layer_keys = keys[4:]
+    layers = jax.vmap(lambda k: blocks.superlayer_init(k, cfg))(layer_keys)
+    params = {
+        "embed": init_dense(keys[0], (cfg.padded_vocab, cfg.d_model),
+                            cfg.param_dtype, scale=1.0),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if "shared_attn" in cfg.block_pattern:
+        params["shared"] = blocks.block_init(keys[1], "shared_attn", cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(keys[2], (cfg.d_model, cfg.padded_vocab),
+                                    cfg.param_dtype)
+    return params
+
+
+def _rope(cfg: ModelConfig, max_pos: int):
+    return rope_frequencies(cfg.resolved_head_dim, max_pos, cfg.rope_theta)
+
+
+def _embed_in(params, cfg: ModelConfig, tokens=None, embeds=None):
+    if embeds is not None:
+        x = embeds.astype(cfg.compute_dtype)
+    else:
+        x = params["embed"][tokens].astype(cfg.compute_dtype)
+    return shard(x, "act_btd")
+
+
+def _head_out(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = params["embed"].T
+        x = x * cfg.d_model ** -0.5       # tied head: rescale (Gemma-style)
+    else:
+        head = params["head"]
+    logits = x @ head.astype(cfg.compute_dtype)
+    return shard(logits, "act_btv")
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence training forward -> (logits (B, S, V), aux ())"""
+    x = _embed_in(params, cfg, tokens, embeds)
+    s = x.shape[1]
+    cos, sin = _rope(cfg, s)
+    shared = params.get("shared")
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, a = blocks.superlayer_train(layer_p, shared, h, cfg, cos, sin)
+        return (h, aux + a), ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    logits = _head_out(params, cfg, x)
+    return logits, aux / max(1, cfg.superlayer_repeat)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(params, cfg,
+                          tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:     # mask vocab padding
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + AUX_WEIGHT * aux
+    return total, {"loss": loss, "aux": aux, "ntokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
+            max_len: Optional[int] = None):
+    """Process the full prompt; returns (last-token logits, caches, pos)."""
+    x = _embed_in(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    cos, sin = _rope(cfg, s)
+    shared = params.get("shared")
+
+    def body(h, layer_p):
+        h, states = blocks.superlayer_prefill(layer_p, shared, h, cfg, cos, sin,
+                                              max_len)
+        return h, states
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = jax.lax.scan(body_fn, x, params["layers"])
+    logits = _head_out(params, cfg, x[:, -1:, :])[:, 0, :cfg.vocab_size]
+    return logits, caches, jnp.asarray(s, jnp.int32)
+
+
+def decode_step(params, cfg: ModelConfig, caches, pos: jnp.ndarray,
+                token=None, embed=None):
+    """One decode step at position ``pos`` (same for all rows).
+
+    token (B,) int32 or embed (B, D). Returns (logits (B, V), new caches).
+    """
+    if embed is not None:
+        x = embed.astype(cfg.compute_dtype)
+    else:
+        x = params["embed"][token].astype(cfg.compute_dtype)
+    x = shard(x, "act_bd")
+    b = x.shape[0]
+    max_pos = _cache_max_len(cfg, caches)
+    cos, sin = _rope(cfg, max_pos)
+    kv_len = jnp.full((b,), pos + 1, jnp.int32)
+    shared = params.get("shared")
+
+    if cfg.decode_loop == "carry":
+        # Carry the cache tree through a fori_loop: the while-loop aliases
+        # carry buffers in place, eliminating the scan-ys double buffer
+        # (2x cache memory for big-cache archs). §Perf hillclimb.
+        def body(i, carry):
+            h, cc = carry
+            layer_p = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                params["layers"])
+            states = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                cc)
+            h, new_states = blocks.superlayer_decode(
+                layer_p, shared, h, states, cfg, cos, sin, pos, kv_len)
+            cc = jax.tree.map(
+                lambda c, s: jax.lax.dynamic_update_index_in_dim(
+                    c, s.astype(c.dtype), i, 0), cc, new_states)
+            return h, cc
+
+        x, new_caches = jax.lax.fori_loop(0, cfg.superlayer_repeat, body,
+                                          (x, caches))
+    else:
+        def body(h, xs):
+            layer_p, states = xs
+            h, new_states = blocks.superlayer_decode(layer_p, shared, h, states,
+                                                     cfg, cos, sin, pos, kv_len)
+            return h, new_states
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    logits = _head_out(params, cfg, x[:, None, :])[:, 0, :cfg.vocab_size]
+    return logits, new_caches
+
+
+def _cache_max_len(cfg: ModelConfig, caches) -> int:
+    """Static max cache length from any attention cache; fallback 1."""
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind in ("dense", "shared_attn", "moe"):
+            return caches[f"b{i}"]["k"].shape[3]   # (R, B, KH, S, D)
+    return 2
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Zeroed serving state stacked over superlayers (R, ...)."""
+    shapes = blocks.superlayer_state_shapes(cfg, batch, max_len)
+
+    def alloc(sds: jax.ShapeDtypeStruct):
+        return jnp.zeros((cfg.superlayer_repeat,) + sds.shape, sds.dtype)
+
+    return jax.tree.map(alloc, shapes)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    shapes = blocks.superlayer_state_shapes(cfg, batch, max_len)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.superlayer_repeat,) + s.shape, s.dtype),
+        shapes)

@@ -1,0 +1,156 @@
+"""ModelApi: uniform step builders over every architecture family.
+
+Gives the launcher/dry-run one interface per arch:
+  loss(params, batch)                      -- training objective
+  prefill(params, batch)                   -- prompt -> (logits, caches, pos)
+  decode(params, caches, pos, batch)       -- one token -> (logits, caches)
+plus abstract parameter/cache trees and their PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import param_specs as psp
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+class ModelApi:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+
+    # -- parameters --------------------------------------------------------
+
+    def init(self, key):
+        if self.cfg.is_encdec:
+            return encdec.init_params(self.cfg, key)
+        return lm.init_params(self.cfg, key)
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda k: self.init(k), jax.random.key(0))
+
+    def param_pspecs(self):
+        if self.cfg.is_encdec:
+            return psp.encdec_param_specs(self.cfg)
+        return psp.lm_param_specs(self.cfg)
+
+    def param_count(self) -> int:
+        tree = self.abstract_params()
+        import numpy as np
+        return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+    def active_param_count(self) -> int:
+        """6*N*D accounting uses active params for MoE."""
+        cfg = self.cfg
+        if cfg.n_experts and cfg.moe_top_k:
+            tree = self.abstract_params()
+            import numpy as np
+            total = 0
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+                n = int(np.prod(leaf.shape))
+                if any(getattr(k, "key", None) in ("gate", "up", "down")
+                       and "moe" in str(path) for k in path):
+                    n = n * cfg.moe_top_k // cfg.n_experts
+                total += n
+            return total
+        return self.param_count()
+
+    # -- steps --------------------------------------------------------------
+
+    def loss(self, params, batch):
+        if self.cfg.is_encdec:
+            return encdec.loss_fn(params, self.cfg, batch)
+        return lm.loss_fn(params, self.cfg, batch)
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.prefill(params, cfg, batch["embeds"], batch["tokens"],
+                                  max_len or batch["tokens"].shape[1])
+        return lm.prefill(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), max_len=max_len)
+
+    def decode(self, params, caches, pos, batch):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.decode_step(params, cfg, caches, pos, batch["token"])
+        return lm.decode_step(params, cfg, caches, pos,
+                              token=batch.get("token"),
+                              embed=batch.get("embed"))
+
+    # -- abstract inputs ----------------------------------------------------
+
+    def input_specs(self, shape_name: str) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every step input of this cell."""
+        cfg = self.cfg
+        sh = SHAPES[shape_name]
+        b, s = sh.global_batch, sh.seq_len
+        i32 = jnp.int32
+        cd = cfg.compute_dtype
+
+        if cfg.is_encdec:
+            s_dec = min(s // 4, cfg.max_target_len * 32)  # target = frames/4
+            if sh.kind == "train":
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cd),
+                        "tokens": jax.ShapeDtypeStruct((b, s_dec), i32),
+                        "labels": jax.ShapeDtypeStruct((b, s_dec), i32)}
+            if sh.kind == "prefill":
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cd),
+                        "tokens": jax.ShapeDtypeStruct((b, min(s_dec, 1024)), i32)}
+            return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+        if cfg.frontend == "embed":
+            if sh.kind == "train":
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cd),
+                        "labels": jax.ShapeDtypeStruct((b, s), i32)}
+            if sh.kind == "prefill":
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)}
+            return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+        if sh.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if sh.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+    def cache_shapes(self, shape_name: str):
+        cfg = self.cfg
+        sh = SHAPES[shape_name]
+        if cfg.is_encdec:
+            # decoder self-cache capped at max_target_len; encoder memory = seq
+            return encdec.cache_shapes(cfg, sh.global_batch,
+                                       cfg.max_target_len, sh.seq_len)
+        return lm.cache_shapes(cfg, sh.global_batch, sh.seq_len)
+
+    def cache_pspecs(self, shape_name: str):
+        return psp.cache_specs(self.cache_shapes(shape_name))
+
+    def supports(self, shape_name: str) -> bool:
+        sh = SHAPES[shape_name]
+        if sh.name == "long_500k" and not self.cfg.sub_quadratic:
+            return False
+        return True

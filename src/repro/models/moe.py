@@ -1,0 +1,91 @@
+"""Top-k MoE layer with capacity-based scatter dispatch (GShard semantics,
+scatter/gather realization — no (T, E, C) one-hot tensors).
+
+Experts are sharded over the `model` mesh axis (EP): both assigned MoE archs
+have 16 experts == the 16-way model axis, so each chip owns one expert's
+weights. Token->expert routing produces a position-in-expert via a cumsum
+over the (T*k, E) assignment one-hot (T*k x E int32 — small), tokens are
+scattered into the (E, C, D) expert buffer (XLA emits the all-to-all), the
+expert GEMM runs as a grouped einsum, and results gather back with combine
+weights. Tokens beyond capacity C are dropped (standard capacity-factor
+semantics); the router uses softmax-after-top-k normalization (Mixtral/DBRX
+convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partition import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense
+
+
+def moe_init(key, cfg: ModelConfig, dtype=None) -> Dict[str, jnp.ndarray]:
+    dtype = dtype or cfg.param_dtype
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": init_dense(kr, (d, e), jnp.float32),
+        "gate": init_dense(kg, (e, d, f), dtype),
+        "up": init_dense(ku, (e, d, f), dtype),
+        "down": init_dense(kd, (e, f, d), dtype),
+    }
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.moe_top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_apply(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss ())."""
+    cdtype = cfg.compute_dtype
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    cap = capacity(t, cfg)
+    xt = x.reshape(t, d).astype(cdtype)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E) fp32 router
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)   # renormalize
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # position of each (token, slot) within its expert
+    flat_e = top_e.reshape(t * k)                            # (Tk,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (Tk, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                # exclusive cumsum
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, flat_e * cap + pos_in_e, e * cap)  # drop slot
+
+    # dispatch: (E*C, D) buffer (+1 dump row), scatter token copies
+    src = jnp.repeat(xt, k, axis=0) if k > 1 else xt         # (Tk, D)
+    buf = jnp.zeros((e * cap + 1, d), dtype=cdtype)
+    buf = buf.at[dest].set(src, mode="drop")
+    hidden = buf[: e * cap].reshape(e, cap, d)
+    hidden = shard(hidden, "act_moe")
+
+    # grouped expert GEMMs (SwiGLU)
+    g = jnp.einsum("ecd,edf->ecf", hidden, p["gate"].astype(cdtype))
+    u = jnp.einsum("ecd,edf->ecf", hidden, p["up"].astype(cdtype))
+    h = jax.nn.silu(g) * u
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(cdtype))
+    out_e = shard(out_e, "act_moe")
+
+    # combine: gather each slot's expert output, weight, sum over k
+    flat = out_e.reshape(e * cap, d)
+    flat = jnp.concatenate([flat, jnp.zeros((1, d), cdtype)], axis=0)
+    gathered = flat[jnp.where(keep, dest, e * cap)]          # (Tk, D)
+    w = (top_p.reshape(t * k) * keep).astype(cdtype)
+    out = (gathered * w[:, None]).reshape(t, k, d).sum(axis=1)
+    return out.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,362 @@
+"""Recurrent / state-space blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+All sub-quadratic sequence mixers here share one TPU-native skeleton,
+``chunked_gla``: chunked gated linear attention with per-head scalar decay.
+Within a chunk the computation is dense matmuls (MXU); across chunks the
+(Dk, Dv) states propagate through ``jax.lax.associative_scan`` (log-depth,
+fully visible to HLO cost analysis — no sequential while loops on the
+training path).
+
+  o_t = q_t . S_t,   S_t = sum_{j<=t} exp(L_t - L_j) * k_j v_j^T,
+  L_t = cumsum(log a).
+
+- Mamba2/SSD: q=C_t, k=B_t, v=dt*x_t, log a = -softplus(dt)*exp(A_log).
+- mLSTM: q/k/v projections, log a = logsigmoid(f), input gate folded into v;
+  normalizer state tracked via an appended all-ones value channel.
+  (The xLSTM paper's exponential input gate + max-stabilizer is replaced by
+  the bounded sigmoid/log-sigmoid pair in the chunked form — the standard
+  GLA-stable parameterization; the sequential sLSTM below keeps the paper's
+  exact exponential gating with stabilizer state.)
+- sLSTM: strictly sequential (recurrent gate matrices R), implemented with
+  lax.scan over time — faithful to the paper; its elementwise recurrence is
+  O(T*d) flops (negligible next to the projections, see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# chunked gated linear attention
+# ---------------------------------------------------------------------------
+
+
+def chunked_gla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                log_a: jnp.ndarray, chunk: int,
+                initial_state: jnp.ndarray | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q/k (B, H, T, Dk), v (B, H, T, Dv), log_a (B, H, T) <= 0.
+
+    Returns (o (B, H, T, Dv), final_state (B, H, Dk, Dv)).
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    qc = q.reshape(b, h, n, chunk, dk)
+    kc = k.reshape(b, h, n, chunk, dk)
+    vc = v.reshape(b, h, n, chunk, dv)
+    la = log_a.reshape(b, h, n, chunk)
+    L = jnp.cumsum(la, axis=-1)                          # within-chunk cumsum
+    Ltot = L[..., -1]                                    # (B, H, N)
+
+    # intra-chunk: A[i, j] = exp(L_i - L_j) (q_i . k_j), j <= i
+    qi = qc * jnp.exp(L)[..., None]
+    kj = kc * jnp.exp(-L)[..., None]
+    att = jnp.einsum("bhnid,bhnjd->bhnij", qi, kj)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    att = jnp.where(mask, att, 0.0)
+    o_intra = jnp.einsum("bhnij,bhnjv->bhniv", att, vc)
+
+    # chunk summaries: S_n = sum_j exp(Ltot - L_j) k_j v_j^T
+    kw = kc * jnp.exp(Ltot[..., None] - L)[..., None]
+    S = jnp.einsum("bhnjd,bhnjv->bhndv", kw, vc)         # (B, H, N, Dk, Dv)
+    decay = jnp.exp(Ltot)                                # (B, H, N)
+
+    def combine(a, b_):
+        d1, s1 = a
+        d2, s2 = b_
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    d_run, s_run = jax.lax.associative_scan(combine, (decay, S), axis=2)
+    if initial_state is not None:
+        s_run = s_run + initial_state[:, :, None] * d_run[..., None, None]
+    # state entering chunk n = s_run[n-1] (or initial_state for n=0)
+    init = initial_state if initial_state is not None else jnp.zeros_like(s_run[:, :, 0])
+    s_prev = jnp.concatenate([init[:, :, None], s_run[:, :, :-1]], axis=2)
+    o_inter = jnp.einsum("bhnid,bhndv->bhniv", qi, s_prev)
+    o = (o_intra + o_inter).reshape(b, h, t, dv)
+    return o, s_run[:, :, -1]
+
+
+def gla_step(q, k, v, log_a, state):
+    """Single-token recurrence: state (B, H, Dk, Dv); q/k (B, H, Dk); v (B, H, Dv)."""
+    a = jnp.exp(log_a)[..., None, None]
+    state = state * a + k[..., :, None] * v[..., None, :]
+    o = jnp.einsum("bhd,bhdv->bhv", q, state)
+    return o, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    head_dim = 64
+    n_heads = max(1, d_in // head_dim)
+    if d_in % head_dim:
+        head_dim = d_in // n_heads
+    return d_in, n_heads, head_dim
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype=None) -> Dict[str, jnp.ndarray]:
+    dtype = dtype or cfg.param_dtype
+    d = cfg.d_model
+    ds = cfg.ssm_state
+    d_in, h, hd = mamba2_dims(cfg)
+    conv_ch = d_in + 2 * ds
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": init_dense(k1, (d, 2 * d_in + 2 * ds + h), dtype),
+        "conv_w": init_dense(k2, (cfg.ssm_conv, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": init_dense(k3, (d_in, d), dtype),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B, T, C), w (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None] for i in range(width))
+    return out + b[None, None]
+
+
+def mamba2_apply(p, x: jnp.ndarray, cfg: ModelConfig,
+                 state: Dict[str, jnp.ndarray] | None = None):
+    """x (B, T, D) -> (y (B, T, D), final state dict)."""
+    cdtype = cfg.compute_dtype
+    b, t, d = x.shape
+    ds = cfg.ssm_state
+    d_in, h, hd = mamba2_dims(cfg)
+    proj = (x.astype(cdtype) @ p["in_proj"].astype(cdtype))
+    z, xc, B, C, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + ds, 2 * d_in + 2 * ds], axis=-1)
+    conv_in = jnp.concatenate([xc, B, C], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(cdtype),
+                                    p["conv_b"].astype(cdtype)))
+    xc, B, C = jnp.split(conv, [d_in, d_in + ds], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, T, H)
+    log_a = (-dtf * jnp.exp(p["a_log"])).transpose(0, 2, 1)        # (B, H, T)
+    xh = xc.reshape(b, t, h, hd).transpose(0, 2, 1, 3)             # (B, H, T, hd)
+    v = xh * dtf.transpose(0, 2, 1)[..., None].astype(cdtype)
+    qk_shape = jnp.broadcast_to(B[:, None], (b, h, t, ds))
+    q = jnp.broadcast_to(C[:, None], (b, h, t, ds))
+    init = state["ssm"] if state is not None else None
+    o, s_fin = chunked_gla(q.astype(jnp.float32), qk_shape.astype(jnp.float32),
+                           v.astype(jnp.float32), log_a,
+                           min(cfg.ssm_chunk, t), init)
+    y = o + xh.astype(jnp.float32) * p["d_skip"][None, :, None, None]
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d_in).astype(cdtype)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cdtype)
+    new_state = {"ssm": s_fin,
+                 "conv": conv_in[:, t - (cfg.ssm_conv - 1):].astype(cdtype)}
+    return out, new_state
+
+
+def mamba2_decode(p, x: jnp.ndarray, cfg: ModelConfig,
+                  state: Dict[str, jnp.ndarray]):
+    """x (B, D) one token; state {'ssm' (B,H,ds,hd), 'conv' (B,W-1,C)}."""
+    cdtype = cfg.compute_dtype
+    b, d = x.shape
+    ds = cfg.ssm_state
+    d_in, h, hd = mamba2_dims(cfg)
+    proj = x.astype(cdtype) @ p["in_proj"].astype(cdtype)
+    z, xc, B, C, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + ds, 2 * d_in + 2 * ds], axis=-1)
+    conv_in = jnp.concatenate([xc, B, C], axis=-1)                 # (B, C)
+    hist = jnp.concatenate([state["conv"], conv_in[:, None]], axis=1)  # (B, W, C)
+    w = p["conv_w"].astype(cdtype)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(cdtype))
+    xc, B, C = jnp.split(conv, [d_in, d_in + ds], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    log_a = -dtf * jnp.exp(p["a_log"])
+    xh = xc.reshape(b, h, hd)
+    v = xh.astype(jnp.float32) * dtf[..., None]
+    k = jnp.broadcast_to(B[:, None], (b, h, ds)).astype(jnp.float32)
+    q = jnp.broadcast_to(C[:, None], (b, h, ds)).astype(jnp.float32)
+    o, s_new = gla_step(q, k, v, log_a, state["ssm"])
+    y = o + xh.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, d_in).astype(cdtype)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cdtype)
+    return out, {"ssm": s_new, "conv": hist[:, 1:]}
+
+
+def mamba2_state_shapes(cfg: ModelConfig, batch: int):
+    d_in, h, hd = mamba2_dims(cfg)
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, h, cfg.ssm_state, hd), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch),
+                                     cfg.compute_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (parallel chunked form)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    hd = d_in // h
+    return d_in, h, hd
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype=None) -> Dict[str, jnp.ndarray]:
+    dtype = dtype or cfg.param_dtype
+    d = cfg.d_model
+    d_in, h, hd = mlstm_dims(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "up": init_dense(k1, (d, 2 * d_in), dtype),            # x branch + z gate
+        "wqkv": init_dense(k2, (d_in, 3 * d_in), dtype),
+        "wgates": init_dense(k3, (d_in, 2 * h), dtype),        # i, f per head
+        "gate_b": jnp.zeros((2 * h,), jnp.float32),
+        "down": init_dense(k4, (d_in, d), dtype),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _mlstm_qkvg(p, xp, cfg, b, t_or_none):
+    d_in, h, hd = mlstm_dims(cfg)
+    qkv = xp @ p["wqkv"].astype(xp.dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    gates = xp.astype(jnp.float32) @ p["wgates"].astype(jnp.float32) + p["gate_b"]
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    return q, k, v, jax.nn.sigmoid(ig), jax.nn.log_sigmoid(fg)
+
+
+def mlstm_apply(p, x: jnp.ndarray, cfg: ModelConfig,
+                state: Dict[str, jnp.ndarray] | None = None):
+    cdtype = cfg.compute_dtype
+    b, t, d = x.shape
+    d_in, h, hd = mlstm_dims(cfg)
+    up = x.astype(cdtype) @ p["up"].astype(cdtype)
+    xp, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_g, logf = _mlstm_qkvg(p, xp, cfg, b, t)
+    to_h = lambda a: a.reshape(b, t, h, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    q, k, v = to_h(q) * hd ** -0.5, to_h(k), to_h(v)
+    v = v * i_g.transpose(0, 2, 1)[..., None]                  # input gate
+    ones = jnp.ones_like(v[..., :1])
+    v_aug = jnp.concatenate([v, ones], axis=-1)                # normalizer channel
+    init = state["ssm"] if state is not None else None
+    o_aug, s_fin = chunked_gla(q, k, v_aug, logf.transpose(0, 2, 1),
+                               min(cfg.ssm_chunk, t), init)
+    o, denom = o_aug[..., :hd], o_aug[..., hd:]
+    o = o / jnp.maximum(jnp.abs(denom), 1.0)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d_in).astype(cdtype)
+    o = rms_norm(o, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    return o @ p["down"].astype(cdtype), {"ssm": s_fin}
+
+
+def mlstm_decode(p, x: jnp.ndarray, cfg: ModelConfig,
+                 state: Dict[str, jnp.ndarray]):
+    cdtype = cfg.compute_dtype
+    b, d = x.shape
+    d_in, h, hd = mlstm_dims(cfg)
+    up = x.astype(cdtype) @ p["up"].astype(cdtype)
+    xp, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_g, logf = _mlstm_qkvg(p, xp, cfg, b, None)
+    to_h = lambda a: a.reshape(b, h, hd).astype(jnp.float32)
+    q, k, v = to_h(q) * hd ** -0.5, to_h(k), to_h(v)
+    v = v * i_g[..., None]
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    o_aug, s_new = gla_step(q, k, v_aug, logf, state["ssm"])
+    o, denom = o_aug[..., :hd], o_aug[..., hd:]
+    o = (o / jnp.maximum(jnp.abs(denom), 1.0)).reshape(b, d_in).astype(cdtype)
+    o = rms_norm(o, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    return o @ p["down"].astype(cdtype), {"ssm": s_new}
+
+
+def mlstm_state_shapes(cfg: ModelConfig, batch: int):
+    d_in, h, hd = mlstm_dims(cfg)
+    return {"ssm": jax.ShapeDtypeStruct((batch, h, hd, hd + 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential, exponential gating with stabilizer — xLSTM eq. 14-24)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig, dtype=None) -> Dict[str, jnp.ndarray]:
+    dtype = dtype or cfg.param_dtype
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wx": init_dense(k1, (d, 4 * d), dtype),               # i, f, z, o preacts
+        "r": init_dense(k2, (h, hd, 4 * hd), dtype, scale=hd ** -0.5),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "out": init_dense(k3, (d, d), dtype),
+        "norm_w": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _slstm_cell(gates, c, n, m, hprev_unused=None):
+    """gates: (B, H, hd, 4) fp32 preactivations -> new (c, n, m, h)."""
+    ig, fg, zg, og = gates[..., 0], gates[..., 1], gates[..., 2], gates[..., 3]
+    log_i = ig                                      # exponential input gate
+    log_f = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(log_f + m, log_i)           # stabilizer state
+    c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(log_i - m_new) * jnp.tanh(zg)
+    n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(log_i - m_new)
+    h = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1.0)
+    return c_new, n_new, m_new, h
+
+
+def slstm_apply(p, x: jnp.ndarray, cfg: ModelConfig,
+                state: Dict[str, jnp.ndarray] | None = None):
+    cdtype = cfg.compute_dtype
+    b, t, d = x.shape
+    h_heads = cfg.n_heads
+    hd = d // h_heads
+    wx = (x.astype(cdtype) @ p["wx"].astype(cdtype)).astype(jnp.float32) + p["b"]
+    wx = wx.reshape(b, t, h_heads, 4, hd).transpose(1, 0, 2, 4, 3)  # (T,B,H,hd,4)
+    r = p["r"].astype(jnp.float32)                   # (H, hd, 4hd)
+
+    if state is None:
+        zeros = jnp.zeros((b, h_heads, hd), jnp.float32)
+        init = (zeros, zeros, zeros - 1e30, zeros)
+    else:
+        init = (state["c"], state["n"], state["m"], state["h"])
+
+    def step(carry, wx_t):
+        c, n, m, h_prev = carry
+        rec = jnp.einsum("bhd,hdk->bhk", h_prev, r).reshape(b, h_heads, hd, 4)
+        c, n, m, h = _slstm_cell(wx_t + rec, c, n, m)
+        return (c, n, m, h), h
+
+    (c, n, m, h_last), hs = jax.lax.scan(step, init, wx)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, t, d).astype(cdtype)
+    hs = rms_norm(hs, p["norm_w"], cfg.norm_eps)
+    out = hs @ p["out"].astype(cdtype)
+    return out, {"c": c, "n": n, "m": m, "h": h_last}
+
+
+def slstm_decode(p, x: jnp.ndarray, cfg: ModelConfig,
+                 state: Dict[str, jnp.ndarray]):
+    out, st = slstm_apply(p, x[:, None, :], cfg, state)
+    return out[:, 0], st
+
+
+def slstm_state_shapes(cfg: ModelConfig, batch: int):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    s = jax.ShapeDtypeStruct((batch, h, hd), jnp.float32)
+    return {"c": s, "n": s, "m": s, "h": s}

@@ -1,0 +1,110 @@
+"""Adafactor (Shazeer & Stern 2018): factored 2nd moment + bf16 1st moment.
+
+The memory plan for the >=42B assigned archs: for an (..., R, C) weight the
+second moment stores row/col factors (R + C floats instead of R*C), the first
+moment is bf16. RMS update clipping per the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    m: Any        # bf16 first moments (or None leaves if beta1 == 0)
+    v_row: Any    # factored second moments (2D+), or full v (1D)
+    v_col: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    decay: float = 0.8          # beta2 = 1 - count^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    moment_dtype: Any = jnp.bfloat16
+
+    def init(self, params) -> AdafactorState:
+        def vrow(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vcol(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        if self.b1 > 0:
+            m = jax.tree.map(lambda p: jnp.zeros(p.shape, self.moment_dtype),
+                             params)
+        else:   # T5 setting: no first moment at all (the 405B memory plan)
+            m = jax.tree.map(lambda p: jnp.zeros((1,), self.moment_dtype), params)
+        return AdafactorState(jnp.zeros((), jnp.int32), m,
+                              jax.tree.map(vrow, params),
+                              jax.tree.map(vcol, params))
+
+    def update(self, grads, state: AdafactorState, params):
+        count = state.count + 1
+        cf = count.astype(jnp.float32)
+        beta2 = 1.0 - cf ** (-self.decay)
+        lr = self.lr(count)
+
+        def upd(g, m, vr, vc, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if p.ndim >= 2:
+                vr32 = vr * beta2 + jnp.mean(g2, axis=-1) * (1 - beta2)
+                vc32 = vc * beta2 + jnp.mean(g2, axis=-2) * (1 - beta2)
+                r = vr32 / jnp.maximum(
+                    jnp.mean(vr32, axis=-1, keepdims=True), self.eps)
+                precond = (r[..., None] * vc32[..., None, :])
+                step = gf * jax.lax.rsqrt(precond + self.eps)
+            else:
+                vr32 = vr * beta2 + g2 * (1 - beta2)
+                vc32 = vc
+                step = gf * jax.lax.rsqrt(vr32 + self.eps)
+            # RMS clipping
+            rms = jnp.sqrt(jnp.mean(step * step) + self.eps)
+            step = step / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.b1 > 0:
+                m32 = m.astype(jnp.float32) * self.b1 + step * (1 - self.b1)
+                step = m32
+                m_out = m32.astype(self.moment_dtype)
+            else:
+                m_out = m
+            if p.ndim >= 2 and self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, m_out, vr32, vc32
+
+        out = jax.tree.map(upd, grads, state.m, state.v_row, state.v_col, params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), AdafactorState(count, pick(1), pick(2), pick(3))
+
+    def state_pspecs(self, param_pspecs):
+        from jax.sharding import PartitionSpec as P
+
+        def vrow_spec(s):
+            return P(*tuple(s)[:-1]) if len(tuple(s)) >= 2 else s
+
+        def vcol_spec(s):
+            t = tuple(s)
+            return P(*(t[:-2] + t[-1:])) if len(t) >= 2 else P(None)
+
+        is_p = lambda x: isinstance(x, P)
+        m_specs = (param_pspecs if self.b1 > 0
+                   else jax.tree.map(lambda s: P(None), param_pspecs,
+                                     is_leaf=is_p))
+        return AdafactorState(
+            P(),
+            m_specs,
+            jax.tree.map(vrow_spec, param_pspecs, is_leaf=is_p),
+            jax.tree.map(vcol_spec, param_pspecs, is_leaf=is_p))

@@ -1,0 +1,59 @@
+"""AdamW (decoupled weight decay), pure-pytree implementation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32   # bf16 moments = ZeRO-friendly memory plan
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        lr = self.lr(count)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+            mh = m32 / (1 - b1 ** count.astype(jnp.float32))
+            vh = v32 / (1 - b2 ** count.astype(jnp.float32))
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return (new_p.astype(p.dtype), m32.astype(self.moment_dtype),
+                    v32.astype(self.moment_dtype))
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(count, new_m, new_v)
+
+    def state_pspecs(self, param_pspecs):
+        from jax.sharding import PartitionSpec as P
+        return AdamWState(P(), param_pspecs, param_pspecs)

@@ -1,0 +1,19 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(1, warmup)
+        prog = jnp.clip((c - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(c < warmup, warm, cos)
+
+    return lr
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)

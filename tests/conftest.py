@@ -1,0 +1,16 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_tweets(rng, n, t0=1, match_drugs=0.1):
+    from repro.core import records as R
+    from repro.data.synthetic import drug_tweak, tweet_batch
+    batch = tweet_batch(rng, n, t0)
+    fields = np.asarray(batch.fields).copy()
+    fields = drug_tweak(fields, rng, match_drugs)
+    return R.RecordBatch.from_numpy(fields, np.asarray(batch.location))

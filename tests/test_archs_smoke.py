@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests: reduced config, one train step + one decode
+step on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.launch.steps import build_train_step, default_optimizer
+from repro.models.model import SHAPES, ModelApi
+
+
+def _batch(cfg, rng, b=2, s=32):
+    if cfg.is_encdec:
+        return {"embeds": jnp.asarray(rng.normal(size=(b, s, cfg.d_model)),
+                                      jnp.float32),
+                "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 8)),
+                                      jnp.int32),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 8)),
+                                      jnp.int32)}
+    if cfg.frontend == "embed":
+        return {"embeds": jnp.asarray(rng.normal(size=(b, s, cfg.d_model)),
+                                      jnp.float32),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                      jnp.int32)}
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                  jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full config encodes the assigned architecture exactly."""
+    spec = {
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "seamless-m4t-medium": (24, 1024, 16, 16, 4096, 256206),
+    }[arch]
+    cfg = get_config(arch)
+    layers = cfg.superlayer_repeat * len(cfg.block_pattern)
+    if arch == "zamba2-2.7b":
+        # 54 mamba layers + 9 shared-attn applications; n_layers counts mamba
+        layers = cfg.superlayer_repeat * (len(cfg.block_pattern) - 1)
+    if cfg.is_encdec:
+        layers = cfg.superlayer_repeat + cfg.n_enc_layers
+    assert (layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+            cfg.vocab_size) == spec
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch, rng):
+    cfg = get_reduced(arch)
+    api = ModelApi(cfg)
+    params = api.init(jax.random.key(0))
+    optimizer = default_optimizer(cfg)
+    opt_state = optimizer.init(params)
+    step = jax.jit(build_train_step(api, optimizer, accum=2))
+    batch = _batch(cfg, rng, b=4, s=32)
+    p2, o2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_decode_step(arch, rng):
+    cfg = get_reduced(arch)
+    api = ModelApi(cfg)
+    params = api.init(jax.random.key(0))
+    batch = _batch(cfg, rng, b=2, s=16)
+    batch.pop("labels", None)
+    logits, caches, pos = api.prefill(params, batch, max_len=24)
+    assert logits.shape == (2, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, caches2 = api.decode(params, caches, pos, {"token": tok})
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "zamba2-2.7b", "xlstm-125m",
+                                  "phi3.5-moe-42b-a6.6b", "pixtral-12b"])
+def test_decode_matches_forward(arch, rng):
+    """Cached decode == teacher-forced forward, token by token.
+
+    MoE needs a no-drop capacity factor: with drops, token routing depends on
+    the rest of the batch (GShard capacity semantics), so teacher-forced and
+    single-token paths legitimately diverge.
+    """
+    from repro.models import lm
+    cfg = get_reduced(arch)
+    if cfg.n_experts:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    api = ModelApi(cfg)
+    params = api.init(jax.random.key(1))
+    B, S = 2, 16
+    if cfg.frontend == "embed":
+        embeds = jnp.asarray(rng.normal(size=(B, S + 2, cfg.d_model)), jnp.float32)
+        full, _ = lm.forward(params, cfg, embeds=embeds)
+        lg, caches, pos = api.prefill(params, {"embeds": embeds[:, :S]},
+                                      max_len=S + 4)
+        err = [float(jnp.abs(lg - full[:, S - 1, :cfg.vocab_size]).max())]
+        lg, caches = api.decode(params, caches, pos,
+                                {"embed": embeds[:, S]})
+        err.append(float(jnp.abs(lg - full[:, S, :cfg.vocab_size]).max()))
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 3)), jnp.int32)
+        full, _ = lm.forward(params, cfg, tokens=toks)
+        lg, caches, pos = api.prefill(params, {"tokens": toks[:, :S]},
+                                      max_len=S + 4)
+        err = [float(jnp.abs(lg - full[:, S - 1, :cfg.vocab_size]).max())]
+        for i in range(3):
+            lg, caches = api.decode(params, caches, pos + i,
+                                    {"token": toks[:, S + i]})
+            err.append(float(jnp.abs(lg - full[:, S + i, :cfg.vocab_size]).max()))
+    assert max(err) < 5e-3, err
+
+
+def test_long_500k_support_flags():
+    from repro.models.model import ModelApi
+    runs = {a: ModelApi(get_config(a)).supports("long_500k") for a in ARCH_IDS}
+    assert runs["xlstm-125m"] and runs["zamba2-2.7b"]
+    assert not runs["qwen2-1.5b"] and not runs["llama3-405b"]
+    assert sum(runs.values()) == 2
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "seamless-m4t-medium"])
+def test_chunked_attention_path_consistency(arch, rng):
+    """The chunked (>=8k) attention path agrees with the full-S^2 path."""
+    import dataclasses
+    import repro.models.attention as A
+    from repro.models import lm, encdec
+    cfg = get_reduced(arch)
+    api = ModelApi(cfg)
+    params = api.init(jax.random.key(0))
+    batch = _batch(cfg, rng, b=2, s=64)
+    old = A.CHUNKED_ATTN_THRESHOLD, A.CHUNK_KV
+    try:
+        A.CHUNKED_ATTN_THRESHOLD, A.CHUNK_KV = 32, 16   # force chunked
+        l1, m1 = api.loss(params, batch)
+        A.CHUNKED_ATTN_THRESHOLD = 1 << 30              # force full path
+        l2, m2 = api.loss(params, batch)
+    finally:
+        A.CHUNKED_ATTN_THRESHOLD, A.CHUNK_KV = old
+    assert abs(float(l1) - float(l2)) < 1e-4

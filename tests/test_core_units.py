@@ -1,0 +1,166 @@
+"""Unit tests: records, predicates, subscriptions, BAD index, user params."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bad_index as bidx
+from repro.core import records as R
+from repro.core.predicates import (EQ, GE, Predicate, compile_conditions,
+                                   evaluate_conditions, evaluate_single)
+from repro.core.subscriptions import (Aggregator, SubscriptionTable, aggregate,
+                                      cap_from_frame_bytes, param_to_targets)
+from repro.core.user_params import UserParameters, semi_join
+
+
+def test_ring_buffer_append_and_wrap(rng):
+    ds = R.ActiveDataset.create(16)
+    b1 = R.RecordBatch.from_numpy(rng.integers(0, 5, (10, 10)).astype(np.int32))
+    ds, ids1 = R.append(ds, b1)
+    assert ids1.tolist() == list(range(10))
+    b2 = R.RecordBatch.from_numpy(rng.integers(0, 5, (10, 10)).astype(np.int32))
+    ds, ids2 = R.append(ds, b2)
+    assert ids2.tolist() == list(range(10, 20))
+    assert int(ds.size) == 20
+    # rows 4..19 are live; gather a live row and check contents
+    got = R.gather_rows(ds, jnp.asarray([19]))
+    assert np.array_equal(np.asarray(got.fields)[0], np.asarray(b2.fields)[9])
+
+
+def test_predicate_ops_exhaustive():
+    fields = jnp.asarray(np.arange(10, dtype=np.int32)[:, None])
+    for op, fn in [("==", np.equal), ("!=", np.not_equal), ("<", np.less),
+                   ("<=", np.less_equal), (">", np.greater),
+                   (">=", np.greater_equal)]:
+        m = evaluate_single(fields, [Predicate.parse(0, op, 5)])
+        assert np.array_equal(np.asarray(m), fn(np.arange(10), 5))
+
+
+def test_conditions_list_multi_channel(rng):
+    fields = jnp.asarray(rng.integers(0, 10, (64, 10)).astype(np.int32))
+    chans = [[Predicate.parse(0, ">", 4)],
+             [Predicate.parse(1, "==", 3), Predicate.parse(2, "<", 7)],
+             []]
+    conds = compile_conditions(chans)
+    m = np.asarray(evaluate_conditions(fields, conds))
+    f = np.asarray(fields)
+    assert np.array_equal(m[:, 0], f[:, 0] > 4)
+    assert np.array_equal(m[:, 1], (f[:, 1] == 3) & (f[:, 2] < 7))
+    assert m[:, 2].all()          # empty conjunction == always true
+
+
+def test_algorithm1_grouping_semantics():
+    agg = Aggregator(cap=3)
+    for i, (p, b) in enumerate([(1, 0), (1, 0), (1, 0), (1, 0), (2, 0), (1, 1)]):
+        agg.add_subscription(p, b, sid=i)
+    g = agg.build()
+    # (1,0) has 4 subs -> 2 groups (cap 3); (2,0) and (1,1) one each
+    assert g.num_groups == 4
+    assert g.num_subscriptions == 6
+    key_counts = {}
+    for i in range(g.num_groups):
+        key = (int(g.group_params[i]), int(g.group_brokers[i]))
+        key_counts[key] = key_counts.get(key, 0) + 1
+        assert int(g.group_counts[i]) <= 3
+    assert key_counts[(1, 0)] == 2
+
+
+def test_bulk_aggregate_matches_incremental(rng):
+    params = rng.integers(0, 5, 200).astype(np.int32)
+    brokers = rng.integers(0, 2, 200).astype(np.int32)
+    table = SubscriptionTable.build(params, brokers)
+    bulk = aggregate(table, cap=7)
+    inc = Aggregator(cap=7)
+    for s, p, b in zip(table.sids, params, brokers):
+        inc.add_subscription(int(p), int(b), int(s))
+    g2 = inc.build()
+    assert bulk.num_subscriptions == g2.num_subscriptions == 200
+    # same multiset of (param, broker, count)
+    def sig(g):
+        return sorted((int(g.group_params[i]), int(g.group_brokers[i]),
+                       int(g.group_counts[i])) for i in range(g.num_groups))
+    assert sig(bulk) == sig(g2)
+
+
+def test_cap_from_frame_bytes_lane_alignment():
+    assert cap_from_frame_bytes(40 * 1024) == 10240       # 128-aligned
+    assert cap_from_frame_bytes(100) == 25                # below one lane
+    assert cap_from_frame_bytes(40 * 1024, align=False) == 10240
+
+
+def test_param_to_targets_map():
+    params = np.asarray([3, 1, 3, 3, 0], dtype=np.int32)
+    mp, counts = param_to_targets(params, domain=5)
+    assert counts.tolist() == [1, 1, 0, 3, 0]
+    assert set(mp[3][mp[3] >= 0].tolist()) == {0, 2, 3}
+
+
+def test_bad_index_insert_window_watermark(rng):
+    st = bidx.BADIndexState.create(2, 32)
+    ids = jnp.arange(10, dtype=jnp.int32)
+    matches = jnp.asarray(np.stack([np.arange(10) % 2 == 0,
+                                    np.arange(10) % 5 == 0], 1))
+    st = bidx.insert(st, ids, matches)
+    assert st.counts.tolist() == [5, 2]
+    rows, valid = bidx.new_entries(st, 0, 8)
+    assert rows[np.asarray(valid)].tolist() == [0, 2, 4, 6, 8]
+    st = bidx.advance_watermark(st, 0)
+    rows, valid = bidx.new_entries(st, 0, 8)
+    assert int(valid.sum()) == 0
+    # channel 1 unaffected by channel 0's watermark
+    rows, valid = bidx.new_entries(st, 1, 8)
+    assert rows[np.asarray(valid)].tolist() == [0, 5]
+
+
+def test_bad_index_overflow_flag():
+    st = bidx.BADIndexState.create(1, 4)
+    ids = jnp.arange(6, dtype=jnp.int32)
+    st = bidx.insert(st, ids, jnp.ones((6, 1), bool))
+    assert bool(st.overflowed[0])
+    assert int(st.counts[0]) == 4
+
+
+def test_bad_index_compact():
+    st = bidx.BADIndexState.create(1, 8)
+    st = bidx.insert(st, jnp.arange(6, dtype=jnp.int32), jnp.ones((6, 1), bool))
+    st = bidx.advance_watermark(st, 0)
+    st = bidx.insert(st, jnp.arange(6, 8, dtype=jnp.int32), jnp.ones((2, 1), bool))
+    st = bidx.compact(st)
+    rows, valid = bidx.new_entries(st, 0, 8)
+    assert rows[np.asarray(valid)].tolist() == [6, 7]
+
+
+def test_user_parameters_refcount_and_semijoin():
+    up = UserParameters.create(10)
+    up.add(3)
+    up.add(3)
+    up.add(7)
+    up.remove(3)
+    assert up.num_distinct == 2
+    vals = jnp.asarray([3, 7, 1, 12, -1], dtype=jnp.int32)
+    keep = np.asarray(semi_join(vals, up.mask()))
+    assert keep.tolist() == [True, True, False, False, False]
+    with pytest.raises(ValueError):
+        up.remove(1)
+
+
+def test_bad_index_shape_bucketing(rng):
+    """The engine sizes candidate buffers from the watermark delta (the
+    beyond-paper 'early result filtering enables tight shapes' step)."""
+    from repro.core.channel import tweets_about_drugs
+    from repro.core.engine import BADEngine
+    from repro.core.plans import ExecutionFlags
+    from conftest import make_tweets
+
+    eng = BADEngine(dataset_capacity=4096, index_capacity=2048,
+                    max_window=2048, max_candidates=1024)
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe("TweetsAboutDrugs", 3, "BrokerA")
+    eng.ingest(make_tweets(rng, 1024, match_drugs=0.01))
+    rep = eng.execute_channel("TweetsAboutDrugs",
+                              ExecutionFlags(scan_mode="bad_index"),
+                              advance=False)
+    # buffer bucket = next pow2 of the true match count, >= 64
+    assert rep.result.matched_rows.shape[0] <= 128
+    base = eng.execute_channel("TweetsAboutDrugs", ExecutionFlags.original(),
+                               advance=False)
+    assert rep.num_notified == base.num_notified

@@ -1,0 +1,106 @@
+"""Distribution layer: sharding rules, sanitization, pipeline, mesh, dryrun
+machinery on a tiny host mesh (1 CPU device -> (1,1) mesh; the 512-device
+production mesh is exercised by launch/dryrun.py in a subprocess)."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.partition import make_rules, sanitize_spec, use_rules
+from repro.distributed.pipeline import bubble_fraction, pipeline_forward
+from repro.launch.mesh import make_host_mesh
+
+
+def test_sanitize_spec_divisibility():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # axis missing from mesh is dropped
+    s = sanitize_spec(P(("pod", "data"), "model"), (8, 8), mesh)
+    assert s == P("data", "model")
+    # non-divisible dim drops the axis (simulated by size-1 mesh w/ dim 7 ok)
+    s = sanitize_spec(P("data", None), (7, 3), mesh)
+    assert s == P("data", None)   # 7 % 1 == 0
+    # spec longer than rank truncates
+    s = sanitize_spec(P("data", None, "model"), (4, 4), mesh)
+    assert s == P("data", None)
+
+
+def test_sanitize_spec_nondivisible_real():
+    import os
+    # verified against a >1-way mesh in the dryrun subprocess test below;
+    # here check the arithmetic path directly with a fake mesh mapping
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+    s = sanitize_spec(P("data", "model"), (6, 6), FakeMesh)
+    assert s == P(None, "model")    # 6 % 4 != 0 -> drop; 6 % 2 == 0 -> keep
+    s = sanitize_spec(P(("data", "model"), None), (8, 8), FakeMesh)
+    assert s == P(("data", "model"), None)
+
+
+def test_rules_seq_shard_alias():
+    mesh = make_host_mesh()
+    r = make_rules(mesh, seq_shard=True)
+    assert r.table["act_btd"] == r.table["act_btd_sp"]
+    r2 = make_rules(mesh, seq_shard=False)
+    assert r2.table["act_btd"] != r2.table["act_btd_sp"]
+
+
+def test_shard_noop_without_rules():
+    from repro.distributed.partition import shard
+    x = jnp.ones((4, 4))
+    assert shard(x, "act_btd") is x
+
+
+def test_pipeline_forward_matches_sequential(rng):
+    """GPipe shard_map pipeline == sequential stage application ((1,) axis)."""
+    mesh = jax.make_mesh((1,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    w = jnp.asarray(rng.normal(size=(1, 8, 8)), jnp.float32)  # 1 stage
+
+    def stage_fn(p, x):
+        return jnp.tanh(x @ p["w"])
+
+    run = pipeline_forward(mesh, "pod", lambda p, x: stage_fn(p, x), 4)
+    xs = jnp.asarray(rng.normal(size=(4, 2, 8)), jnp.float32)
+    got = run({"w": w}, xs)
+    want = jnp.stack([stage_fn({"w": w[0]}, xs[i]) for i in range(4)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 8) == 0.0
+    assert abs(bubble_fraction(2, 2) - 1 / 3) < 1e-9
+
+
+def test_sp_decode_attention_host_mesh(rng):
+    """Sequence-parallel flash-decode on the host mesh == reference."""
+    from repro.distributed.collectives import sp_decode_attention
+    from repro.kernels.flash_decode import ref as fd_ref
+    mesh = make_host_mesh(model_parallel=jax.device_count())
+    rules = make_rules(mesh)
+    b, h, kh, s, d = 2, 4, 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kh, s, d)), jnp.float32)
+    kv_len = jnp.asarray([50, 9], jnp.int32)
+    want = fd_ref.decode_attention(q, k, v, kv_len)
+    got = sp_decode_attention(rules, q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.slow
+def test_dryrun_smallest_cell_subprocess():
+    """The production-mesh dry-run itself (512 fake devices) in a subprocess."""
+    import os
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "decode_32k", "--out", "/tmp/dryrun_test",
+         "--skip-probes"],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout

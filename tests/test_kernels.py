@@ -1,0 +1,156 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.predicates import Predicate, compile_conditions, evaluate_conditions
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_decode import ops as fd_ops
+from repro.kernels.flash_decode import ref as fd_ref
+from repro.kernels.predicate_filter import ops as pf_ops
+from repro.kernels.spatial_match import ops as sm_ops
+from repro.kernels.spatial_match import ref as sm_ref
+
+
+# ---------------------------------------------------------------------------
+# predicate_filter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 256, 513])
+@pytest.mark.parametrize("nchan", [1, 3, 9])
+def test_predicate_filter_sweep(rng, n, nchan):
+    fields = jnp.asarray(rng.integers(-50, 50, (n, 10)).astype(np.int32))
+    chans = []
+    ops = ["==", "!=", "<", "<=", ">", ">="]
+    for c in range(nchan):
+        preds = [Predicate.parse(int(rng.integers(0, 10)),
+                                 ops[int(rng.integers(0, 6))],
+                                 int(rng.integers(-40, 40)))
+                 for _ in range(int(rng.integers(1, 4)))]
+        # keep at most one != per (channel, field)
+        seen = {}
+        preds = [p for p in preds
+                 if not (p.op == 1 and seen.setdefault(p.field, p.value) != p.value)]
+        chans.append(preds)
+    conds = compile_conditions(chans)
+    want = np.asarray(evaluate_conditions(fields, conds))
+    got = np.asarray(pf_ops.predicate_filter(fields, conds))
+    assert np.array_equal(want, got)
+
+
+def test_predicate_filter_interval_edges():
+    # boundary values at int32 extremes
+    fields = jnp.asarray(np.array([[-2**31, 2**31 - 1, 0, 5, 0, 0, 0, 0, 0, 0]],
+                                  dtype=np.int32))
+    chans = [[Predicate.parse(0, "<=", -2**31 + 1)],
+             [Predicate.parse(1, ">=", 2**31 - 1)],
+             [Predicate.parse(3, "==", 5), Predicate.parse(3, "!=", 4)]]
+    conds = compile_conditions(chans)
+    want = np.asarray(evaluate_conditions(fields, conds))
+    got = np.asarray(pf_ops.predicate_filter(fields, conds))
+    assert np.array_equal(want, got)
+
+
+# ---------------------------------------------------------------------------
+# spatial_match
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,u", [(1, 1), (10, 33), (300, 700)])
+def test_spatial_match_sweep(rng, r, u):
+    t = (rng.normal(size=(r, 2)) * 25).astype(np.float32)
+    us = (rng.normal(size=(u, 2)) * 25).astype(np.float32)
+    want = np.asarray(sm_ref.spatial_match(jnp.asarray(t), jnp.asarray(us), 10.0))
+    got = np.asarray(sm_ops.spatial_match(jnp.asarray(t), jnp.asarray(us), 10.0))
+    assert np.array_equal(want, got)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("b,h,kh,s,d", [
+    (1, 2, 1, 128, 32), (2, 4, 2, 256, 64), (1, 8, 8, 128, 128),
+    (1, 6, 2, 384, 64),
+])
+def test_flash_attention_sweep(rng, b, h, kh, s, d, dtype, atol):
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, kh, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, kh, s, d)), dtype)
+    want = fa_ref.flash_attention(q, k, v, causal=True)
+    got = fa_ops.flash_attention(q, k, v, causal=True, tq=128, tk=128)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_attention_noncausal(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    want = fa_ref.flash_attention(q, k, v, causal=False)
+    got = fa_ops.flash_attention(q, k, v, causal=False, tq=128, tk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_attention_padding(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 200, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 200, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 200, 64)), jnp.float32)
+    want = fa_ref.flash_attention(q, k, v, causal=True)
+    got = fa_ops.flash_attention(q, k, v, causal=True, tq=128, tk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kh,s,d", [
+    (1, 2, 1, 128, 32), (2, 4, 2, 384, 64), (3, 8, 8, 256, 128),
+])
+def test_flash_decode_sweep(rng, b, h, kh, s, d):
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kh, s, d)), jnp.float32)
+    kv_len = jnp.asarray(rng.integers(1, s + 1, (b,)), jnp.int32)
+    want = fd_ref.decode_attention(q, k, v, kv_len)
+    got = fd_ops.decode_attention(q, k, v, kv_len, tk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_decode_merge_matches_monolithic(rng):
+    b, h, kh, s, d = 2, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kh, s, d)), jnp.float32)
+    kv_len = jnp.asarray([500, 70], jnp.int32)
+    want = fd_ref.decode_attention(q, k, v, kv_len)
+    # 4-way split-KV with partial merge (the sequence-parallel schedule)
+    parts = []
+    for i in range(4):
+        sl = slice(i * 128, (i + 1) * 128)
+        local_len = jnp.clip(kv_len - i * 128, 0, 128)
+        parts.append(fd_ref.decode_attention_partial(q, k[:, :, sl], v[:, :, sl],
+                                                     local_len))
+    acc, m, l = parts[0]
+    for p in parts[1:]:
+        acc, m, l = fd_ref.merge_partials(acc, m, l, *p)
+    got = fd_ref.normalize(acc, l, q.dtype)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_decode_empty_shard(rng):
+    """A shard whose kv slice is entirely dead must not poison the merge."""
+    b, h, kh, d = 1, 2, 1, 32
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kh, 128, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kh, 128, d)), jnp.float32)
+    a1 = fd_ref.decode_attention_partial(q, k, v, jnp.asarray([64], jnp.int32))
+    a2 = fd_ref.decode_attention_partial(q, k, v, jnp.asarray([0], jnp.int32))
+    acc, m, l = fd_ref.merge_partials(*a1, *a2)
+    got = fd_ref.normalize(acc, l, q.dtype)
+    want = fd_ref.decode_attention(q, k, v, jnp.asarray([64], jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+    assert np.isfinite(np.asarray(got)).all()

@@ -1,0 +1,148 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bad_index as bidx
+from repro.core.predicates import Predicate, compile_conditions, evaluate_conditions
+from repro.core.subscriptions import Aggregator, SubscriptionTable, aggregate
+from repro.kernels.flash_decode import ref as fd_ref
+from repro.kernels.predicate_filter import ops as pf_ops
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+pred_st = st.builds(
+    Predicate.parse,
+    st.integers(0, 9),
+    st.sampled_from(["==", "<", "<=", ">", ">="]),
+    st.integers(-20, 20),
+)
+
+
+@given(st.lists(st.lists(pred_st, min_size=1, max_size=4), min_size=1,
+                max_size=5),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_kernel_equals_general_evaluator(channels, seed):
+    """Interval-canonicalized Pallas kernel == padded general evaluator, for
+    any conjunction without conflicting != (none generated here)."""
+    rng = np.random.default_rng(seed)
+    fields = jnp.asarray(rng.integers(-25, 25, (37, 10)).astype(np.int32))
+    conds = compile_conditions(channels)
+    want = np.asarray(evaluate_conditions(fields, conds))
+    got = np.asarray(pf_ops.predicate_filter(fields, conds))
+    assert np.array_equal(want, got)
+
+
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 2)), min_size=1,
+                max_size=200),
+       st.integers(1, 9))
+@settings(**SETTINGS)
+def test_aggregation_partition_invariants(subs, cap):
+    """Algorithm 1 output is a partition: every sID in exactly one group,
+    groups never exceed cap, and group members share (param, broker)."""
+    agg = Aggregator(cap)
+    for i, (p, b) in enumerate(subs):
+        agg.add_subscription(p, b, sid=i)
+    g = agg.build()
+    seen = []
+    for gi in range(g.num_groups):
+        n = int(g.group_counts[gi])
+        assert 1 <= n <= cap
+        members = g.group_sids[gi][:n]
+        assert (g.group_sids[gi][n:] == -1).all()
+        seen.extend(members.tolist())
+        for sid in members.tolist():
+            assert subs[sid] == (int(g.group_params[gi]), int(g.group_brokers[gi]))
+    assert sorted(seen) == list(range(len(subs)))
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 1)), min_size=1,
+                max_size=120),
+       st.integers(1, 8))
+@settings(**SETTINGS)
+def test_bulk_aggregate_equivalent_to_incremental(subs, cap):
+    params = np.asarray([p for p, _ in subs], np.int32)
+    brokers = np.asarray([b for _, b in subs], np.int32)
+    bulk = aggregate(SubscriptionTable.build(params, brokers), cap)
+    inc = Aggregator(cap)
+    for i, (p, b) in enumerate(subs):
+        inc.add_subscription(p, b, sid=i)
+    g = inc.build()
+    def sig(x):
+        return sorted((int(x.group_params[i]), int(x.group_brokers[i]),
+                       tuple(sorted(x.group_sids[i][x.group_sids[i] >= 0].tolist())))
+                      for i in range(x.num_groups))
+    # same partition up to group-boundary choices with equal sizes multiset
+    def sizes(x):
+        return sorted((int(x.group_params[i]), int(x.group_brokers[i]),
+                       int(x.group_counts[i])) for i in range(x.num_groups))
+    assert sizes(bulk) == sizes(g)
+    assert bulk.num_subscriptions == g.num_subscriptions
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_bad_index_membership_invariant(mask):
+    """BAD index contents == exactly the rows whose predicate mask was true
+    (in arrival order), as long as capacity is not exceeded."""
+    n = len(mask)
+    st_ = bidx.BADIndexState.create(1, 64)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    st_ = bidx.insert(st_, ids, jnp.asarray(mask)[:, None])
+    rows, valid = bidx.new_entries(st_, 0, 64)
+    got = rows[np.asarray(valid)].tolist()
+    want = [i for i, m in enumerate(mask) if m]
+    assert got == want
+
+
+@given(st.integers(1, 6), st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_flash_merge_associativity(n_parts, kh, seed):
+    """Split-KV softmax merge gives the same answer for any shard count."""
+    rng = np.random.default_rng(seed)
+    b, g, d, per = 2, 2, 16, 32
+    h = kh * g
+    s = per * n_parts
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kh, s, d)), jnp.float32)
+    kv_len = jnp.asarray(rng.integers(1, s + 1, (b,)), jnp.int32)
+    want = fd_ref.decode_attention(q, k, v, kv_len)
+    parts = []
+    for i in range(n_parts):
+        sl = slice(i * per, (i + 1) * per)
+        parts.append(fd_ref.decode_attention_partial(
+            q, k[:, :, sl], v[:, :, sl],
+            jnp.clip(kv_len - i * per, 0, per)))
+    acc, m, l = parts[0]
+    for p in parts[1:]:
+        acc, m, l = fd_ref.merge_partials(acc, m, l, *p)
+    got = fd_ref.normalize(acc, l, q.dtype)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_gla_chunked_equals_stepwise(seed, n_chunks):
+    """chunked_gla == sequential gla_step recurrence (any chunking)."""
+    from repro.models.ssm import chunked_gla, gla_step
+    rng = np.random.default_rng(seed)
+    b, h, dk, dv, chunk = 1, 2, 8, 8, 8
+    t = chunk * n_chunks
+    q = jnp.asarray(rng.normal(size=(b, h, t, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, t, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, t, dv)), jnp.float32)
+    log_a = jnp.asarray(-np.abs(rng.normal(size=(b, h, t))) * 0.1, jnp.float32)
+    o_chunk, s_fin = chunked_gla(q, k, v, log_a, chunk)
+    state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    outs = []
+    for i in range(t):
+        o, state = gla_step(q[:, :, i], k[:, :, i], v[:, :, i],
+                            log_a[:, :, i], state)
+        outs.append(o)
+    o_seq = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(o_chunk), np.asarray(o_seq),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(state), atol=2e-4)

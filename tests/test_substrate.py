@@ -1,0 +1,193 @@
+"""Optimizers, checkpoint manager, fault tolerance, compression, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.synthetic import TokenStream, tweet_batch
+from repro.distributed.compression import (compressed_psum_tree, ef_compress,
+                                           dequantize_int8, init_residuals)
+from repro.optim import Adafactor, AdamW, constant, make_optimizer
+from repro.runtime.failure import (FailureInjector, StepTimer,
+                                   largest_valid_mesh, run_with_recovery)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quadratic_params():
+    return {"w": jnp.asarray([1.5, -2.0, 3.0]), "b": jnp.asarray([[0.5, -0.5],
+                                                                  [1.0, 2.0]])}
+
+
+@pytest.mark.parametrize("opt", [AdamW(lr=constant(0.05), weight_decay=0.0),
+                                 Adafactor(lr=constant(0.5)),
+                                 Adafactor(lr=constant(0.5), b1=0.0)])
+def test_optimizers_descend_quadratic(opt):
+    params = _quadratic_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_factored_state_is_small():
+    p = {"w": jnp.zeros((64, 128))}
+    st = Adafactor(lr=constant(1e-3)).init(p)
+    assert st.v_row["w"].shape == (64,)
+    assert st.v_col["w"].shape == (128,)
+
+
+def test_adafactor_b1_zero_has_no_moment():
+    p = {"w": jnp.zeros((64, 128))}
+    st = Adafactor(lr=constant(1e-3), b1=0.0).init(p)
+    assert st.m["w"].shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_keep(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.asarray([1, 2, 3], jnp.int32)}}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+    assert mgr.all_steps() == [2, 3]
+    got = mgr.restore(3, tree)
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(tree["a"]) + 3)
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    tree = {"w": jnp.ones((128, 128))}
+    mgr.save(5, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_elastic_restore_new_sharding(tmp_path):
+    """Restore onto different shardings (elastic re-mesh)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    mgr.save(1, tree)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    got = mgr.restore(1, tree, shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_straggler_detection():
+    t = StepTimer(ema_alpha=1.0)
+    for w, dt in [("h0", 1.0), ("h1", 1.1), ("h2", 0.9), ("h3", 5.0)]:
+        t.record(w, dt)
+    assert t.stragglers() == ["h3"]
+
+
+def test_run_with_recovery_resumes_through_failures(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    injector = FailureInjector(fail_at=(7, 13))
+    state = {"step": jnp.zeros(())}
+
+    def restore():
+        s = mgr.latest_step()
+        return s if s is not None else 0
+
+    def loop(start):
+        for step in range(start, 20):
+            injector.maybe_fail(step)
+            if (step + 1) % 5 == 0:
+                mgr.save(step + 1, state)
+        return 20
+
+    out = run_with_recovery(loop, lambda s: None, restore, 20, 5)
+    assert out["final_step"] == 20
+    assert out["restarts"] == 2
+    assert injector.failures == 2
+
+
+def test_largest_valid_mesh():
+    assert largest_valid_mesh(256, 16) == (16, 16)
+    assert largest_valid_mesh(240, 16) == (8, 16)    # lost a host: shrink DP
+    with pytest.raises(ValueError):
+        largest_valid_mesh(8, 16)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_ef_compression_unbiased_accumulation(rng):
+    """Error feedback: quantization error does not accumulate over steps."""
+    x = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    residual = jnp.zeros_like(x)
+    total_sent = jnp.zeros_like(x)
+    for _ in range(50):
+        q, scale, residual = ef_compress(x, residual)
+        total_sent = total_sent + dequantize_int8(q, scale)
+    # mean of sent messages converges to x
+    np.testing.assert_allclose(np.asarray(total_sent / 50), np.asarray(x),
+                               atol=2e-3)
+
+
+def test_compressed_psum_tree_single_axis(rng):
+    mesh = jax.make_mesh((1,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    tree = {"g": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    res = init_residuals(tree)
+    out, new_res = compressed_psum_tree(tree, res, mesh, "pod")
+    np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(tree["g"]),
+                               atol=np.abs(np.asarray(tree["g"])).max() / 100)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_tweet_batch_selectivities(rng):
+    from repro.core import records as R
+    b = tweet_batch(rng, 20000, t0=0)
+    f = np.asarray(b.fields)
+    assert abs((f[:, R.ABOUT_COUNTRY] == 0).mean() - 0.5) < 0.03      # I
+    assert abs((f[:, R.RETWEET_COUNT] > 10000).mean() - 0.5) < 0.03   # II
+    assert abs((f[:, R.HATE_SPEECH_RATE] > 5).mean() - 0.5) < 0.03    # III
+    assert abs((f[:, R.THREATENING_RATE] > 5).mean() - 0.2) < 0.03    # IV
+    assert abs((f[:, R.WEAPON_MENTIONED] == 1).mean() - 0.2) < 0.03   # V
+    # combined selectivity ~ 0.5*0.5*0.5*0.2*0.2 = 0.5%
+    all5 = ((f[:, R.ABOUT_COUNTRY] == 0) & (f[:, R.RETWEET_COUNT] > 10000)
+            & (f[:, R.HATE_SPEECH_RATE] > 5) & (f[:, R.THREATENING_RATE] > 5)
+            & (f[:, R.WEAPON_MENTIONED] == 1)).mean()
+    assert 0.001 < all5 < 0.012
+
+
+def test_token_stream_deterministic_and_host_sharded():
+    s0 = TokenStream(vocab_size=100, seq_len=16, global_batch=8,
+                     num_hosts=2, host_id=0)
+    s1 = TokenStream(vocab_size=100, seq_len=16, global_batch=8,
+                     num_hosts=2, host_id=1)
+    a = s0.batch(3)
+    b = s0.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])   # deterministic
+    assert a["tokens"].shape == (4, 16)                        # per-host shard
+    assert not np.array_equal(a["tokens"], s1.batch(3)["tokens"])
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])

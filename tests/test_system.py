@@ -1,0 +1,133 @@
+"""End-to-end behaviour tests for the BAD system (paper semantics)."""
+import numpy as np
+import pytest
+
+from repro.core import records as R
+from repro.core.channel import (most_threatening_tweets, tweets_about_crime,
+                                tweets_about_drugs)
+from repro.core.engine import BADEngine
+from repro.core.plans import ExecutionFlags
+
+from conftest import make_tweets
+
+
+@pytest.fixture
+def engine(rng):
+    eng = BADEngine(dataset_capacity=4096, index_capacity=2048,
+                    max_window=2048, max_candidates=512,
+                    brokers=("Broker1", "Broker2"))
+    eng.create_channel(tweets_about_drugs())
+    eng.create_channel(most_threatening_tweets())
+    eng.subscribe_bulk("TweetsAboutDrugs",
+                       rng.integers(0, 50, 300), rng.integers(0, 2, 300))
+    eng.subscribe_bulk("MostThreateningTweets",
+                       rng.integers(0, 50, 300), rng.integers(0, 2, 300))
+    eng.ingest(make_tweets(rng, 1024))
+    return eng
+
+
+ALL_PLANS = [
+    ExecutionFlags.original(),
+    ExecutionFlags(scan_mode="window"),
+    ExecutionFlags(scan_mode="trad_index"),
+    ExecutionFlags(scan_mode="bad_index"),
+    ExecutionFlags(scan_mode="bad_index", aggregation=True),
+    ExecutionFlags(scan_mode="bad_index", aggregation=True, param_pushdown=True),
+    ExecutionFlags(scan_mode="window", aggregation=True, param_pushdown=True),
+]
+
+
+@pytest.mark.parametrize("flags", ALL_PLANS, ids=lambda f: f"{f.scan_mode}"
+                         f"{'+agg' if f.aggregation else ''}"
+                         f"{'+push' if f.param_pushdown else ''}")
+def test_plan_equivalence_notified(engine, flags):
+    """Every plan must notify exactly the same set of end subscribers."""
+    base = engine.execute_channel("TweetsAboutDrugs",
+                                  ExecutionFlags.original(), advance=False)
+    rep = engine.execute_channel("TweetsAboutDrugs", flags, advance=False)
+    assert rep.num_notified == base.num_notified
+    # matched records are identical too
+    a = set(np.asarray(base.result.matched_rows)[np.asarray(base.result.matched_valid)].tolist())
+    b = set(np.asarray(rep.result.matched_rows)[np.asarray(rep.result.matched_valid)].tolist())
+    assert a == b
+
+
+def test_aggregation_reduces_results_and_bytes(engine):
+    orig = engine.execute_channel("TweetsAboutDrugs",
+                                  ExecutionFlags(scan_mode="window"), advance=False)
+    agg = engine.execute_channel("TweetsAboutDrugs",
+                                 ExecutionFlags(scan_mode="window", aggregation=True),
+                                 advance=False)
+    assert agg.num_results < orig.num_results
+    assert agg.broker_bytes.sum() < orig.broker_bytes.sum()
+    assert agg.num_notified == orig.num_notified
+
+
+def test_bad_index_scans_less(engine):
+    orig = engine.execute_channel("TweetsAboutDrugs",
+                                  ExecutionFlags.original(), advance=False)
+    bad = engine.execute_channel("TweetsAboutDrugs",
+                                 ExecutionFlags(scan_mode="bad_index"), advance=False)
+    assert bad.scanned < orig.scanned
+    assert bad.num_results == orig.num_results
+
+
+def test_watermark_no_duplicate_delivery(rng):
+    """is_new semantics: a record is delivered once, even across executions."""
+    eng = BADEngine(dataset_capacity=4096, index_capacity=2048,
+                    max_window=2048, max_candidates=512)
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe("TweetsAboutDrugs", 5, "BrokerA")
+    b1 = make_tweets(rng, 256, t0=10)
+    eng.ingest(b1)
+    eng.execute_channel("TweetsAboutDrugs", ExecutionFlags(scan_mode="bad_index"))
+    r_again = eng.execute_channel("TweetsAboutDrugs",
+                                  ExecutionFlags(scan_mode="bad_index"))
+    assert r_again.num_results == 0          # nothing new since watermark
+    b2 = make_tweets(rng, 256, t0=2000)
+    eng.ingest(b2)
+    r2 = eng.execute_channel("TweetsAboutDrugs",
+                             ExecutionFlags(scan_mode="bad_index"))
+    # every delivered record in r2 is from the second batch
+    rows = np.asarray(r2.result.matched_rows)[np.asarray(r2.result.matched_valid)]
+    assert (rows >= 256).all()
+
+
+def test_spatial_channel_matches_bruteforce(rng):
+    eng = BADEngine(dataset_capacity=1024, index_capacity=1024,
+                    max_window=1024, max_candidates=256)
+    eng.create_channel(tweets_about_crime(3))
+    users = (rng.normal(size=(100, 2)) * 30).astype(np.float32)
+    eng.set_user_locations(users)
+    batch = make_tweets(rng, 512)
+    eng.ingest(batch)
+    rep = eng.execute_channel("TweetsAboutCrime3",
+                              ExecutionFlags(scan_mode="bad_index"), advance=False)
+    from repro.core.predicates import evaluate_single
+    loc = np.asarray(batch.location)
+    mask = np.asarray(evaluate_single(batch.fields,
+                                      tweets_about_crime(3).fixed_preds))
+    d2 = ((loc[:, None, :] - users[None]) ** 2).sum(-1)
+    expected = int((mask[:, None] & (d2 < 100.0)).sum())
+    assert rep.num_results == expected
+
+
+def test_dynamic_subscribe_unsubscribe(rng):
+    eng = BADEngine(dataset_capacity=1024, index_capacity=1024,
+                    max_window=1024, max_candidates=256)
+    eng.create_channel(tweets_about_drugs())
+    sid = eng.subscribe("TweetsAboutDrugs", 7, "BrokerA")
+    eng.subscribe("TweetsAboutDrugs", 7, "BrokerA")
+    st = eng.channels["TweetsAboutDrugs"]
+    assert st.user_params.refcount[7] == 2
+    assert eng.unsubscribe("TweetsAboutDrugs", 7, "BrokerA", sid)
+    assert st.user_params.refcount[7] == 1
+    fields = np.zeros((4, 10), dtype=np.int32)
+    fields[:, R.STATE] = 7
+    fields[:, R.THREATENING_RATE] = 10
+    fields[:, R.DRUG_ACTIVITY] = 3
+    fields[:, R.TIMESTAMP] = 5
+    eng.ingest(R.RecordBatch.from_numpy(fields))
+    rep = eng.execute_channel("TweetsAboutDrugs",
+                              ExecutionFlags.fully_optimized(), advance=False)
+    assert rep.num_notified == 4              # 4 records x 1 remaining sub
