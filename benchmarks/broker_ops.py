@@ -26,8 +26,8 @@ def run(rng) -> None:
         sids = eng.group_sids_array("TweetsAboutDrugs", agg)
 
         # receive: platform -> broker transfer (device->host of the payloads)
-        payload, count = pack_payloads(rep.result, sids, payload_words=16,
-                                       max_pairs=1 << 13)
+        payload, count, _ = pack_payloads(rep.result, sids, payload_words=16,
+                                          max_pairs=1 << 13)
         t_recv = timeit(lambda: np.asarray(payload))
         # convert: materialize the wire payload rows
         t_conv = timeit(lambda: pack_payloads(rep.result, sids,

@@ -1,0 +1,123 @@
+"""Multi-channel scaling: vectorized control plane + fused execution.
+
+Two measurements the single-channel figures cannot show:
+
+  control plane -- 100k-subscription bulk load through the vectorized
+      ``aggregate`` path vs replaying Algorithm 1 one Python call per
+      subscription (the paper's broker-side ingest bottleneck).
+  data plane    -- one fused ``execute_all`` jitted call driving every
+      channel vs the per-channel host loop, at several channel counts.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.channel import (most_threatening_tweets,
+                                trending_tweets_in_country, tweets_about_drugs)
+from repro.core.engine import BADEngine
+from repro.core.plans import ExecutionFlags
+from repro.data.synthetic import tweet_batch
+from benchmarks.common import emit, timeit
+
+N_BULK = 100_000
+LANGS = ["En", "Pt", "Es", "Ar", "Ja"]
+
+
+def _replay_load(eng: BADEngine, channel: str, params: np.ndarray,
+                 brokers: np.ndarray) -> None:
+    """The pre-vectorization path: one Algorithm-1 call per subscription."""
+    st = eng.channels[channel]
+    for p, b in zip(params.tolist(), brokers.tolist()):
+        st.aggregator.add_subscription(p, b)
+        st.user_params.add(p)
+    st.invalidate_targets()
+
+
+def _fresh_drug_engine() -> BADEngine:
+    eng = BADEngine(dataset_capacity=1 << 16, index_capacity=1 << 14,
+                    max_window=1 << 14, max_candidates=1 << 12,
+                    brokers=("B1", "B2", "B3", "B4"))
+    eng.create_channel(tweets_about_drugs())
+    return eng
+
+
+def bench_bulk_load(rng, repeats: int = 3) -> None:
+    params = rng.integers(0, 50, N_BULK).astype(np.int32)
+    brokers = rng.integers(0, 4, N_BULK).astype(np.int32)
+    t_replay = t_bulk = float("inf")
+    for _ in range(repeats):
+        eng = _fresh_drug_engine()
+        t0 = time.perf_counter()
+        _replay_load(eng, "TweetsAboutDrugs", params, brokers)
+        t_replay = min(t_replay, time.perf_counter() - t0)
+        g_replay = eng.channels["TweetsAboutDrugs"].aggregator.build()
+
+        eng = _fresh_drug_engine()
+        t0 = time.perf_counter()
+        eng.subscribe_bulk("TweetsAboutDrugs", params, brokers)
+        t_bulk = min(t_bulk, time.perf_counter() - t0)
+        g_bulk = eng.channels["TweetsAboutDrugs"].aggregator.build()
+    assert g_bulk.num_subscriptions == g_replay.num_subscriptions == N_BULK
+    assert g_bulk.num_groups == g_replay.num_groups
+    emit("multi_channel/bulk_load/replay", t_replay, f"subs={N_BULK}")
+    emit("multi_channel/bulk_load/vectorized", t_bulk,
+         f"subs={N_BULK};groups={g_bulk.num_groups}")
+    emit("multi_channel/bulk_load/speedup", 0.0,
+         f"x{t_replay / t_bulk:.1f} (target >= 10x)")
+
+
+def _channel_set(n: int):
+    specs = [tweets_about_drugs(), most_threatening_tweets()]
+    specs += [trending_tweets_in_country(i, f"{LANGS[i]}Trending")
+              for i in range(len(LANGS))]
+    return specs[:n]
+
+
+def bench_fused_execution(rng, n_channels: int, n_subs: int = 20_000,
+                          n_tweets: int = 16_384) -> None:
+    eng = BADEngine(dataset_capacity=1 << 16, index_capacity=1 << 14,
+                    max_window=1 << 14, max_candidates=1 << 12,
+                    brokers=("B1", "B2", "B3", "B4"))
+    specs = _channel_set(n_channels)
+    for spec in specs:
+        eng.create_channel(spec)
+        eng.subscribe_bulk(spec.name,
+                           rng.integers(0, spec.param_domain, n_subs),
+                           rng.integers(0, 4, n_subs))
+    eng.ingest(tweet_batch(rng, n_tweets, t0=1))
+    flags = ExecutionFlags.fully_optimized()
+
+    def sequential():
+        return [eng.execute_channel(s.name, flags, advance=False, timed=False)
+                for s in specs]
+
+    def fused():
+        return eng.execute_all(flags, advance=False, timed=False)
+
+    seq_reports = sequential()          # warm every per-channel trace
+    fused_reports = fused()             # warm the fused trace
+    for s in specs:                     # counts must agree exactly
+        r = next(r for r in seq_reports if r.channel == s.name)
+        assert fused_reports[s.name].num_results == r.num_results
+        assert fused_reports[s.name].num_notified == r.num_notified
+    t_seq = timeit(sequential)
+    t_fused = timeit(fused)
+    total = sum(r.num_results for r in seq_reports)
+    emit(f"multi_channel/exec/c{n_channels}/sequential", t_seq,
+         f"results={total}")
+    emit(f"multi_channel/exec/c{n_channels}/fused", t_fused,
+         f"results={total}")
+    emit(f"multi_channel/exec/c{n_channels}/speedup", 0.0,
+         f"x{t_seq / t_fused:.2f}")
+
+
+def run(rng) -> None:
+    bench_bulk_load(rng)
+    for n in (2, 4, 7):
+        bench_fused_execution(rng, n)
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

@@ -14,8 +14,8 @@ import time
 import numpy as np
 
 from benchmarks import (aggregation, bad_index, broker_ops, group_size,
-                        kernel_perf, max_subscriptions, query_plan,
-                        real_world, scaling)
+                        kernel_perf, max_subscriptions, multi_channel,
+                        query_plan, real_world, scaling)
 
 SUITES = {
     "fig12_13_group_size": group_size.run,
@@ -27,6 +27,7 @@ SUITES = {
     "fig18_19_scaling": scaling.run,
     "fig21_real_world": real_world.run,
     "kernel_perf": kernel_perf.run,
+    "multi_channel": multi_channel.run,
 }
 
 

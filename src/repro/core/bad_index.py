@@ -114,6 +114,17 @@ def advance_watermark(state: BADIndexState, channel: int) -> BADIndexState:
     )
 
 
+def advance_watermarks(state: BADIndexState,
+                       channels: jnp.ndarray) -> BADIndexState:
+    """Vectorized ``advance_watermark`` for a batch of executed channels."""
+    return BADIndexState(
+        state.row_ids,
+        state.counts,
+        state.watermarks.at[channels].set(state.counts[channels]),
+        state.overflowed.at[channels].set(False),
+    )
+
+
 def compact(state: BADIndexState) -> BADIndexState:
     """Drop already-delivered entries (host-side maintenance between periods).
 

@@ -37,20 +37,24 @@ class BrokerRegistry:
 
 
 def pack_payloads(result: ChannelResult, group_sids: jnp.ndarray,
-                  payload_words: int, max_pairs: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                  payload_words: int, max_pairs: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Materialize the wire payload: (max_pairs, HEADER + cap + payload_words).
 
     One row per *result pair* (group or subscription). This is the broker's
     "convert" work: in the aggregated layout there are far fewer rows, each
     carrying its sID list; in the original layout there is one row per
     subscription with cap == 1.
+
+    Returns (buffer, delivered, overflow): pairs beyond ``max_pairs`` are
+    dropped — never scattered over the last slot — and counted in overflow.
     """
     cap = group_sids.shape[1] if group_sids.ndim == 2 else 1
     rows = result.pair_rows.ravel()
     tgts = result.pair_targets.ravel()
     valid = result.pair_valid.ravel()
     pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
-    dest = jnp.where(valid, jnp.minimum(pos, max_pairs - 1), max_pairs)
+    dest = jnp.where(valid & (pos < max_pairs), pos, max_pairs)
     width = HEADER_WORDS + cap + payload_words
     out = jnp.zeros((max_pairs + 1, width), dtype=jnp.int32)
     tgt_safe = jnp.maximum(tgts, 0)
@@ -62,13 +66,17 @@ def pack_payloads(result: ChannelResult, group_sids: jnp.ndarray,
     line = jnp.concatenate([header, sids, payload], axis=-1)
     out = out.at[dest].set(jnp.where(valid[:, None], line, 0), mode="drop")
     count = jnp.sum(valid.astype(jnp.int32))
-    return out[:max_pairs], count
+    delivered = jnp.minimum(count, max_pairs)
+    return out[:max_pairs], delivered, count - delivered
 
 
 def fanout_sids(result: ChannelResult, group_sids: jnp.ndarray,
-                max_notify: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                max_notify: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """The broker's "send" stage: the flat list of end subscribers to notify.
-    Identical volume for original and aggregated layouts (Table 2, row 3)."""
+    Identical volume for original and aggregated layouts (Table 2, row 3).
+
+    Returns (buffer, delivered, overflow) — overflow counts sIDs dropped
+    because the notify buffer was full."""
     tgts = result.pair_targets.ravel()
     valid = result.pair_valid.ravel()
     tgt_safe = jnp.maximum(tgts, 0)
@@ -77,10 +85,12 @@ def fanout_sids(result: ChannelResult, group_sids: jnp.ndarray,
     flat = jnp.where(member_valid, sids, -1).ravel()
     mask = flat >= 0
     pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
-    dest = jnp.where(mask, jnp.minimum(pos, max_notify - 1), max_notify)
+    dest = jnp.where(mask & (pos < max_notify), pos, max_notify)
     out = jnp.full((max_notify + 1,), -1, dtype=jnp.int32)
     out = out.at[dest].set(flat, mode="drop")
-    return out[:max_notify], jnp.sum(mask.astype(jnp.int32))
+    count = jnp.sum(mask.astype(jnp.int32))
+    delivered = jnp.minimum(count, max_notify)
+    return out[:max_notify], delivered, count - delivered
 
 
 def broker_traffic_summary(result: ChannelResult) -> Dict[str, np.ndarray]:

@@ -11,7 +11,6 @@ jitted pure function over fixed-shape arrays.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -39,11 +38,21 @@ class ChannelState:
     last_exec_ts: int = 0
     last_exec_size: int = 0
     executions: int = 0
-    # caches invalidated on subscription changes
+    # device-resident TargetArrays + host group/flat views, cached per channel
+    # and explicitly invalidated whenever the subscription set changes;
+    # ``version`` keys the engine's stacked multi-channel caches
+    version: int = 0
     _targets_flat: Optional[plans.TargetArrays] = None
     _targets_grouped: Optional[plans.TargetArrays] = None
     _groups: Optional[subs.SubscriptionGroups] = None
     _flat: Optional[subs.SubscriptionTable] = None
+    _host_targets: Dict[bool, Tuple] = dataclasses.field(default_factory=dict)
+
+    def invalidate_targets(self) -> None:
+        self.version += 1
+        self._targets_flat = self._targets_grouped = None
+        self._groups = self._flat = None
+        self._host_targets = {}
 
 
 @dataclasses.dataclass
@@ -85,6 +94,12 @@ class BADEngine:
         self._conds: Optional[CompiledConditions] = None
         self.index_state = bidx.BADIndexState.create(0, index_capacity)
         self._ingest_fn = None
+        # compiled plan caches (single-channel and fused all-channel), keyed
+        # on the specs/flags they close over; cleared on channel create/drop
+        self._exec_cache: Dict = {}
+        # stacked device targets for execute_all: one warm entry per layout
+        # (aggregated / flat), each validated by its channel-version key
+        self._stacked_cache: Dict = {}
 
     # ------------------------------------------------------------------
     # control plane
@@ -110,34 +125,54 @@ class BADEngine:
 
     def drop_channel(self, name: str) -> None:
         del self.channels[name]
-        for i, st in enumerate(self.channels.values()):
+        survivors = sorted(self.channels.values(), key=lambda s: s.index)
+        old_rows = [st.index for st in survivors]
+        for i, st in enumerate(survivors):
             st.index = i
-        self._rebuild_conditions()
+        self._rebuild_conditions(old_rows)
 
     def subscribe(self, channel: str, param: int, broker: str = "BrokerA",
                   sid: Optional[int] = None) -> int:
         st = self.channels[channel]
+        if not 0 <= param < st.user_params.domain:   # before any mutation
+            raise ValueError(
+                f"param {param} out of [0, {st.user_params.domain}) "
+                f"for {channel}")
         bid = self.brokers.names[broker]
         sid = st.aggregator.add_subscription(param, bid, sid)
         st.user_params.add(param)
-        st._targets_flat = st._targets_grouped = st._groups = st._flat = None
+        st.invalidate_targets()
         return sid
 
     def subscribe_bulk(self, channel: str, params: np.ndarray,
-                       brokers: np.ndarray) -> None:
-        """Bulk control-plane load (still Algorithm-1 semantics via replay)."""
+                       brokers: np.ndarray) -> np.ndarray:
+        """Bulk control-plane load through the vectorized ``aggregate`` path:
+        Algorithm-1 grouping semantics with no per-subscription Python work.
+        Returns the assigned sIDs."""
         st = self.channels[channel]
-        for p, b in zip(np.asarray(params).tolist(), np.asarray(brokers).tolist()):
-            st.aggregator.add_subscription(p, b)
-            st.user_params.add(p)
-        st._targets_flat = st._targets_grouped = st._groups = st._flat = None
+        params = np.asarray(params, dtype=np.int32).ravel()
+        brokers = np.asarray(brokers, dtype=np.int32).ravel()
+        # validate BEFORE mutating: a bad param/broker must not leave the
+        # aggregator holding subscriptions whose refcounts were never
+        # registered (or whose broker id aliases the invalid-pair sentinel)
+        if params.size and (int(params.min()) < 0
+                            or int(params.max()) >= st.user_params.domain):
+            raise ValueError(
+                f"params out of [0, {st.user_params.domain}) for {channel}")
+        nb = self.brokers.num_brokers
+        if brokers.size and (int(brokers.min()) < 0 or int(brokers.max()) >= nb):
+            raise ValueError(f"broker ids out of [0, {nb}) for {channel}")
+        sids = st.aggregator.add_bulk(params, brokers)
+        st.user_params.add_bulk(params)
+        st.invalidate_targets()
+        return sids
 
     def unsubscribe(self, channel: str, param: int, broker: str, sid: int) -> bool:
         st = self.channels[channel]
         ok = st.aggregator.remove_subscription(param, self.brokers.names[broker], sid)
         if ok:
             st.user_params.remove(param)
-            st._targets_flat = st._targets_grouped = st._groups = st._flat = None
+            st.invalidate_targets()
         return ok
 
     def set_user_locations(self, locations: np.ndarray,
@@ -151,21 +186,36 @@ class BADEngine:
     # data plane: ingestion
     # ------------------------------------------------------------------
 
-    def _rebuild_conditions(self) -> None:
+    def _rebuild_conditions(self, old_rows: Optional[List[int]] = None) -> None:
+        """Recompile the conditionsList and re-shape the BAD index.
+
+        ``old_rows[i]`` is the *previous* index row of the channel now at row
+        ``i`` — surviving channels keep their own buffers/watermarks by
+        identity, not by position (dropping a middle channel must not hand its
+        rows to the next one).
+        """
         specs = sorted(self.channels.values(), key=lambda s: s.index)
         self._conds = compile_conditions([list(s.spec.fixed_preds) for s in specs])
         old = self.index_state
         new = bidx.BADIndexState.create(len(specs), self.index_capacity)
-        n_keep = min(old.num_channels, new.num_channels)
-        if n_keep:
+        if old_rows is None:  # channel append: surviving rows keep positions
+            old_rows = list(range(min(old.num_channels, new.num_channels)))
+        assert all(0 <= r < old.num_channels for r in old_rows)
+        if old_rows:
+            src = jnp.asarray(old_rows, jnp.int32)
+            n = len(old_rows)
             new = bidx.BADIndexState(
-                new.row_ids.at[:n_keep].set(old.row_ids[:n_keep]),
-                new.counts.at[:n_keep].set(old.counts[:n_keep]),
-                new.watermarks.at[:n_keep].set(old.watermarks[:n_keep]),
-                new.overflowed.at[:n_keep].set(old.overflowed[:n_keep]),
+                new.row_ids.at[:n].set(old.row_ids[src]),
+                new.counts.at[:n].set(old.counts[src]),
+                new.watermarks.at[:n].set(old.watermarks[src]),
+                new.overflowed.at[:n].set(old.overflowed[src]),
             )
         self.index_state = new
         self._ingest_fn = None  # shapes changed; re-trace
+        self._exec_cache.clear()  # compiled plans bind conds + channel rows
+        # stacked targets are keyed by (name, version); a same-named channel
+        # re-created at version 0 would collide, so drop them here too
+        self._stacked_cache.clear()
 
     def _build_ingest(self):
         conds = self._conds
@@ -198,39 +248,46 @@ class BADEngine:
     # data plane: channel execution
     # ------------------------------------------------------------------
 
-    def _targets(self, st: ChannelState, aggregated: bool) -> plans.TargetArrays:
+    def _targets_host(self, st: ChannelState, aggregated: bool) -> Tuple:
+        """Host-side (numpy) join targets: (params, brokers, counts, by_param,
+        by_param_count). Shared by the per-channel and stacked device caches."""
+        cached = st._host_targets.get(aggregated)
+        if cached is not None:
+            return cached
         if aggregated:
-            if st._targets_grouped is None:
-                groups = st.aggregator.build()
-                st._groups = groups
-                by_param, by_count = subs.param_to_targets(
-                    groups.group_params, st.spec.param_domain)
-                st._targets_grouped = plans.TargetArrays(
-                    jnp.asarray(groups.group_params), jnp.asarray(groups.group_brokers),
-                    jnp.asarray(groups.group_counts), jnp.asarray(by_param),
-                    jnp.asarray(by_count))
-            return st._targets_grouped
-        if st._targets_flat is None:
+            groups = st._groups or st.aggregator.build()
+            st._groups = groups
+            params = np.asarray(groups.group_params, np.int32)
+            brokers = np.asarray(groups.group_brokers, np.int32)
+            counts = np.asarray(groups.group_counts, np.int32)
+        else:
             flat = self._flat_table(st)
-            by_param, by_count = subs.param_to_targets(flat.params, st.spec.param_domain)
-            st._targets_flat = plans.TargetArrays(
-                jnp.asarray(flat.params), jnp.asarray(flat.brokers),
-                jnp.ones_like(jnp.asarray(flat.params)), jnp.asarray(by_param),
-                jnp.asarray(by_count))
-        return st._targets_flat
+            params = np.asarray(flat.params, np.int32)
+            brokers = np.asarray(flat.brokers, np.int32)
+            counts = np.ones_like(params)
+        by_param, by_count = subs.param_to_targets(params, st.spec.param_domain)
+        out = (params, brokers, counts, by_param, by_count)
+        st._host_targets[aggregated] = out
+        return out
+
+    def _targets(self, st: ChannelState, aggregated: bool) -> plans.TargetArrays:
+        cached = st._targets_grouped if aggregated else st._targets_flat
+        if cached is None:
+            p, b, c, bp, bc = self._targets_host(st, aggregated)
+            cached = plans.TargetArrays(jnp.asarray(p), jnp.asarray(b),
+                                        jnp.asarray(c), jnp.asarray(bp),
+                                        jnp.asarray(bc))
+            if aggregated:
+                st._targets_grouped = cached
+            else:
+                st._targets_flat = cached
+        return cached
 
     def _flat_table(self, st: ChannelState) -> subs.SubscriptionTable:
         if st._flat is None:
             groups = st._groups or st.aggregator.build()
-            sids, params, brokers = [], [], []
-            for g in range(groups.num_groups):
-                n = int(groups.group_counts[g])
-                sids.extend(groups.group_sids[g, :n].tolist())
-                params.extend([int(groups.group_params[g])] * n)
-                brokers.extend([int(groups.group_brokers[g])] * n)
-            st._flat = subs.SubscriptionTable(
-                np.asarray(sids, np.int32), np.asarray(params, np.int32),
-                np.asarray(brokers, np.int32))
+            st._groups = groups
+            st._flat = subs.flatten_groups(groups)
         return st._flat
 
     def group_sids_array(self, channel: str, aggregated: bool) -> jnp.ndarray:
@@ -242,10 +299,18 @@ class BADEngine:
         flat = self._flat_table(st)
         return jnp.asarray(flat.sids)[:, None]
 
-    @functools.lru_cache(maxsize=256)
     def _exec_fn(self, channel: str, flags: plans.ExecutionFlags,
                  spatial: bool, max_cand: Optional[int] = None) -> Callable:
+        """Compiled single-channel plan, cached by everything it closes over:
+        the (frozen) spec, flags, and the channel's index row. Keying on the
+        spec — not the name — means re-creating a same-named channel with new
+        predicates can never be served a stale plan; the cache itself lives on
+        the engine and is cleared on channel create/drop."""
         st = self.channels[channel]
+        key = (st.spec, flags, spatial, max_cand, st.index)
+        cached = self._exec_cache.get(key)
+        if cached is not None:
+            return cached
         spec = st.spec
         conds_one = compile_conditions([list(spec.fixed_preds)])
         best_pred = int(np.argmax([_pred_rank(p) for p in spec.fixed_preds])) \
@@ -280,7 +345,16 @@ class BADEngine:
                 num_brokers, up_mask if flags.param_pushdown else None,
                 flags.aggregation)
 
-        return jax.jit(run)
+        fn = jax.jit(run)
+        self._cache_put(key, fn)
+        return fn
+
+    def _cache_put(self, key, fn: Callable, cap: int = 256) -> None:
+        """Insert into the plan cache with FIFO eviction — superseded shape
+        buckets / flag combos must not pin dead XLA executables forever."""
+        if len(self._exec_cache) >= cap:
+            self._exec_cache.pop(next(iter(self._exec_cache)))
+        self._exec_cache[key] = fn
 
     def execute_channel(self, channel: str,
                         flags: plans.ExecutionFlags,
@@ -296,7 +370,7 @@ class BADEngine:
         if flags.scan_mode == "bad_index":
             pending = int(self.index_state.counts[st.index]
                           - self.index_state.watermarks[st.index])
-            bucket = 1 << max(6, (max(pending, 1) - 1).bit_length())
+            bucket = _pow2_bucket(pending, 6)
             max_cand = min(bucket, self.max_candidates)
         fn = self._exec_fn(channel, flags, spatial, max_cand)
         targets = self._targets(st, flags.aggregation)
@@ -322,6 +396,165 @@ class BADEngine:
             num_notified=int(result.num_notified),
             scanned=int(result.scanned),
             broker_bytes=np.asarray(result.broker_bytes))
+
+    # ------------------------------------------------------------------
+    # data plane: fused multi-channel execution
+    # ------------------------------------------------------------------
+
+    def _stacked_inputs(self, chs: List[ChannelState], aggregated: bool):
+        """Device-resident shape-bucketed targets for all param channels.
+
+        Per-channel targets are padded to shared power-of-two buckets (max
+        target count / join fan-out across channels, real max domain) so the
+        fused trace survives subscription growth; -1 / 0 padding can never
+        form a valid pair. Cached until any channel's subscription version
+        moves.
+        """
+        key = tuple((st.spec.name, st.version) for st in chs)
+        hit = self._stacked_cache.get(aggregated)
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        hosts = [self._targets_host(st, aggregated) for st in chs]
+        n = len(chs)
+        tmax = _pow2_bucket(max(h[0].shape[0] for h in hosts), 3)
+        dmax = max(st.spec.param_domain for st in chs)
+        mmax = _pow2_bucket(max(h[3].shape[1] for h in hosts), 3)
+        params = np.zeros((n, tmax), np.int32)
+        brokers = np.zeros((n, tmax), np.int32)
+        counts = np.zeros((n, tmax), np.int32)
+        by_param = np.full((n, dmax, mmax), -1, np.int32)
+        by_count = np.zeros((n, dmax), np.int32)
+        up_masks = np.zeros((n, dmax), bool)
+        domains = np.zeros((n,), np.int32)
+        for i, (st, (p, b, c, bp, bc)) in enumerate(zip(chs, hosts)):
+            t, (d, m) = p.shape[0], bp.shape
+            params[i, :t] = p
+            brokers[i, :t] = b
+            counts[i, :t] = c
+            by_param[i, :d, :m] = bp
+            by_count[i, :d] = bc
+            up_masks[i, :d] = st.user_params.refcount > 0
+            domains[i] = st.spec.param_domain
+        targets = plans.TargetArrays(
+            jnp.asarray(params), jnp.asarray(brokers), jnp.asarray(counts),
+            jnp.asarray(by_param), jnp.asarray(by_count))
+        val = (targets, jnp.asarray(up_masks), jnp.asarray(domains))
+        self._stacked_cache[aggregated] = (key, val)
+        return val
+
+    def _exec_all_fn(self, chs: List[ChannelState],
+                     flags: plans.ExecutionFlags, max_cand: int) -> Callable:
+        key = ("all", flags, max_cand, tuple((st.spec, st.index) for st in chs))
+        cached = self._exec_cache.get(key)
+        if cached is not None:
+            return cached
+        rows = [st.index for st in chs]
+        conds = self._conds
+        conds_sub = CompiledConditions(conds.field_idx[rows], conds.op[rows],
+                                       conds.value[rows], conds.npreds[rows])
+        best_pred = jnp.asarray(
+            [int(np.argmax([_pred_rank(p) for p in st.spec.fixed_preds]))
+             if st.spec.fixed_preds else 0 for st in chs], jnp.int32)
+        ch_rows = jnp.asarray(rows, jnp.int32)
+        max_window = self.max_window
+        num_brokers = self.brokers.num_brokers
+        scan_mode = flags.scan_mode
+
+        def run(ds, index_state, targets, up_masks, domains, param_fields,
+                payload_bytes, last_ts, last_size):
+            if scan_mode == "full":
+                cand = plans.candidates_full_scan_all(ds, conds_sub, last_ts,
+                                                      max_cand)
+            elif scan_mode == "window":
+                cand = plans.candidates_window_all(ds, conds_sub, last_size,
+                                                   max_window)
+            elif scan_mode == "trad_index":
+                cand = plans.candidates_trad_index_all(
+                    ds, conds_sub, best_pred, last_size, max_window, max_cand)
+            else:
+                cand = plans.candidates_bad_index_all(index_state, ch_rows,
+                                                      max_cand)
+            return plans.join_param_targets_all(
+                ds, cand, targets, param_fields, payload_bytes, num_brokers,
+                up_masks if flags.param_pushdown else None, flags.aggregation,
+                domains)
+
+        fn = jax.jit(run)
+        self._cache_put(key, fn)
+        return fn
+
+    def execute_all(self, flags: plans.ExecutionFlags, advance: bool = True,
+                    timed: bool = True) -> Dict[str, ExecutionReport]:
+        """Execute EVERY channel under one plan: all param-join channels run
+        in a single jitted call (stacked candidate discovery + vmapped join +
+        broker accounting); spatial channels keep the per-channel path.
+
+        Result-for-result equivalent to looping ``execute_channel`` — each
+        channel's report carries its own counts/bytes; ``wall_time_s`` is the
+        fused wall time amortized per channel.
+        """
+        ordered = sorted(self.channels.values(), key=lambda s: s.index)
+        param_chs = [st for st in ordered if st.spec.join == "param"]
+        reports: Dict[str, ExecutionReport] = {}
+        for st in ordered:
+            if st.spec.join == "spatial":
+                reports[st.spec.name] = self.execute_channel(
+                    st.spec.name, flags, advance=advance, timed=timed)
+        if not param_chs:
+            return reports
+        max_cand = self.max_candidates
+        if flags.scan_mode == "bad_index":
+            # shared shape bucket: the largest per-channel watermark delta
+            # (two bulk host reads, not 2 device reads per channel)
+            counts = np.asarray(self.index_state.counts)
+            wms = np.asarray(self.index_state.watermarks)
+            pending = max(int(counts[st.index] - wms[st.index])
+                          for st in param_chs)
+            bucket = _pow2_bucket(pending, 6)
+            max_cand = min(bucket, self.max_candidates)
+        fn = self._exec_all_fn(param_chs, flags, max_cand)
+        targets, up_masks, domains = self._stacked_inputs(param_chs,
+                                                          flags.aggregation)
+        args = (self.dataset, self.index_state, targets, up_masks, domains,
+                jnp.asarray([st.spec.param_field for st in param_chs], jnp.int32),
+                jnp.asarray([st.spec.payload_bytes for st in param_chs], jnp.int32),
+                jnp.asarray([st.last_exec_ts for st in param_chs], jnp.int32),
+                jnp.asarray([st.last_exec_size for st in param_chs], jnp.int32))
+        if timed:  # warm the trace so wall time measures execution
+            jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        result = fn(*args)
+        jax.block_until_ready(result.num_results)
+        wall = time.perf_counter() - t0
+        if advance:
+            self.index_state = bidx.advance_watermarks(
+                self.index_state,
+                jnp.asarray([st.index for st in param_chs], jnp.int32))
+            for st in param_chs:
+                st.last_exec_ts = self.now
+                st.last_exec_size = int(self.dataset.size)
+                st.executions += 1
+        # One bulk device->host transfer, then per-channel numpy views: the
+        # per-channel path's int()/slice pattern would cost dozens of device
+        # round-trips here.
+        host = jax.tree.map(np.asarray, result)
+        share = wall / len(param_chs)
+        for i, st in enumerate(param_chs):
+            reports[st.spec.name] = ExecutionReport(
+                channel=st.spec.name, flags=flags,
+                result=jax.tree.map(lambda a: a[i], host),
+                wall_time_s=share,
+                num_results=int(host.num_results[i]),
+                num_notified=int(host.num_notified[i]),
+                scanned=int(host.scanned[i]),
+                broker_bytes=host.broker_bytes[i])
+        return reports
+
+
+def _pow2_bucket(n: int, floor_bits: int) -> int:
+    """Smallest power of two >= n, clamped below by 2**floor_bits. Shared by
+    every shape-bucketing site so fused and per-channel traces agree."""
+    return 1 << max(floor_bits, (max(n, 1) - 1).bit_length())
 
 
 def _pred_rank(p) -> int:

@@ -152,14 +152,25 @@ def join_param_targets(ds: R.ActiveDataset, cand: CandidateSet,
                        targets: TargetArrays, param_field: int,
                        payload_bytes: int, num_brokers: int,
                        up_mask: Optional[jnp.ndarray],
-                       aggregated: bool) -> ChannelResult:
-    """record[param_field] == target.param join via the dense by_param map."""
+                       aggregated: bool,
+                       domain: Optional[jnp.ndarray] = None,
+                       fused: bool = False) -> ChannelResult:
+    """record[param_field] == target.param join via the dense by_param map.
+
+    ``domain`` overrides the clip bound when ``targets`` is padded to a
+    shared shape bucket (fused multi-channel execution): the channel's *real*
+    parameter domain must bound the clip so padded rows never join.
+    ``fused`` switches broker accounting to a one-hot contraction — under
+    vmap, segment_sum lowers to serialized scatter-adds; unvmapped, the
+    scatter is fine and the dense (Rm, maxT, B) one-hot would cost memory.
+    """
     slots = jnp.maximum(cand.rows, 0) % ds.capacity
     pvals = ds.fields[slots, param_field]                   # (Rm,)
     valid = cand.valid
     if up_mask is not None:
         valid = valid & semi_join(pvals, up_mask)           # Fig. 9(b) early join
-    domain = targets.by_param.shape[0]
+    if domain is None:
+        domain = targets.by_param.shape[0]
     pv = jnp.clip(pvals, 0, domain - 1)
     tgt = targets.by_param[pv]                              # (Rm, maxT)
     tgt_n = targets.by_param_count[pv]                      # (Rm,)
@@ -176,11 +187,24 @@ def join_param_targets(ds: R.ActiveDataset, cand: CandidateSet,
     per_pair_bytes = payload_bytes + (4 * members if aggregated else jnp.zeros_like(members))
     pair_bytes = jnp.where(pair_valid, per_pair_bytes, 0).astype(jnp.float32)
     bids = jnp.where(pair_valid, targets.brokers[tgt_safe], num_brokers)
-    broker_bytes = jax.ops.segment_sum(pair_bytes.ravel(), bids.ravel(),
-                                       num_segments=num_brokers + 1)[:-1]
-    broker_results = jax.ops.segment_sum(pair_valid.astype(jnp.int32).ravel(),
-                                         bids.ravel(),
-                                         num_segments=num_brokers + 1)[:-1]
+    if fused:
+        # Per-broker masked reductions: each is an (Rm, maxT) elementwise
+        # select + sum that XLA fuses without materializing a dense
+        # (Rm, maxT, B) one-hot. Invalid pairs carry the sentinel id
+        # == num_brokers and match no broker; counts stay integer end-to-end
+        # (float32 accumulation would silently round past 2^24 pairs).
+        broker_bytes = jnp.stack(
+            [jnp.sum(jnp.where(bids == b, pair_bytes, 0.0))
+             for b in range(num_brokers)])
+        broker_results = jnp.stack(
+            [jnp.sum((bids == b).astype(jnp.int32))
+             for b in range(num_brokers)])
+    else:
+        broker_bytes = jax.ops.segment_sum(pair_bytes.ravel(), bids.ravel(),
+                                           num_segments=num_brokers + 1)[:-1]
+        broker_results = jax.ops.segment_sum(
+            pair_valid.astype(jnp.int32).ravel(), bids.ravel(),
+            num_segments=num_brokers + 1)[:-1]
     return ChannelResult(pair_rows, pair_targets, pair_valid,
                          jnp.where(valid, cand.rows, -1), valid,
                          num_results, num_notified, cand.scanned,
@@ -217,6 +241,116 @@ def join_spatial(ds: R.ActiveDataset, cand: CandidateSet,
                          jnp.where(cand.valid, cand.rows, -1), cand.valid,
                          num_results, num_results, cand.scanned,
                          broker_bytes, broker_results)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-channel execution: every stacked function returns pytrees with a
+# leading channel axis, so one jitted call drives all channels (paper scale
+# goal: many channels x many subscribers with no per-channel host round-trip).
+# ---------------------------------------------------------------------------
+
+
+def _eval_channel_row(fields: jnp.ndarray, field_idx: jnp.ndarray,
+                      op: jnp.ndarray, value: jnp.ndarray) -> jnp.ndarray:
+    """(N, F) records x ONE channel's padded predicate row (P,) -> (N,) bool."""
+    vals = fields[:, field_idx]                    # (N, P)
+    return jnp.all(apply_op(vals, op[None], value[None]), axis=-1)
+
+
+def candidates_full_scan_all(ds: R.ActiveDataset, conds: CompiledConditions,
+                             last_ts: jnp.ndarray, max_rows: int) -> CandidateSet:
+    """Stacked 'full' scan: ONE conditionsList pass covers every channel
+    (the per-channel variant re-evaluates its own conjunction per call)."""
+    cap = ds.capacity
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    row_ids = _slot_row_ids(ds, slots)
+    live = (row_ids >= 0) & (row_ids < ds.size)
+    ts = ds.fields[:, R.TIMESTAMP]
+    match = evaluate_conditions(ds.fields, conds)          # (cap, C)
+
+    def one(last_ts_c, match_c):
+        keep = live & (ts > last_ts_c) & match_c
+        rows, valid = _compact(row_ids, keep, max_rows)
+        return CandidateSet(rows, valid, jnp.asarray(cap, jnp.int32))
+
+    return jax.vmap(one)(last_ts, match.T)
+
+
+def candidates_window_all(ds: R.ActiveDataset, conds: CompiledConditions,
+                          last_size: jnp.ndarray, max_rows: int) -> CandidateSet:
+    """Stacked delta scan: each channel reads its own [last_size, size) window."""
+    field_idx = jnp.asarray(conds.field_idx)               # (C, P)
+    op = jnp.asarray(conds.op)
+    value = jnp.asarray(conds.value)
+
+    def one(last_size_c, fi, o, v):
+        row_ids = last_size_c + jnp.arange(max_rows, dtype=jnp.int32)
+        in_range = row_ids < ds.size
+        fields = ds.fields[row_ids % ds.capacity]
+        keep = in_range & _eval_channel_row(fields, fi, o, v)
+        return CandidateSet(
+            jnp.where(keep, row_ids, -1), keep,
+            jnp.minimum(ds.size - last_size_c, max_rows).astype(jnp.int32))
+
+    return jax.vmap(one)(last_size, field_idx, op, value)
+
+
+def candidates_trad_index_all(ds: R.ActiveDataset, conds: CompiledConditions,
+                              best_pred: jnp.ndarray, last_size: jnp.ndarray,
+                              max_rows: int, max_candidates: int) -> CandidateSet:
+    """Stacked traditional-index scan: per channel, the index read is its most
+    selective fixed predicate; the rest evaluate on the candidates."""
+    field_idx = jnp.asarray(conds.field_idx)
+    op = jnp.asarray(conds.op)
+    value = jnp.asarray(conds.value)
+
+    def one(best_c, last_size_c, fi_row, op_row, val_row):
+        row_ids = last_size_c + jnp.arange(max_rows, dtype=jnp.int32)
+        in_range = row_ids < ds.size
+        fields = ds.fields[row_ids % ds.capacity]
+        idx_hit = apply_op(fields[:, fi_row[best_c]], op_row[best_c],
+                           val_row[best_c]) & in_range
+        cand_rows, cand_valid = _compact(row_ids, idx_hit, max_candidates)
+        cfields = ds.fields[jnp.maximum(cand_rows, 0) % ds.capacity]
+        keep = cand_valid & _eval_channel_row(cfields, fi_row, op_row, val_row)
+        return CandidateSet(jnp.where(keep, cand_rows, -1), keep,
+                            jnp.sum(idx_hit.astype(jnp.int32)))
+
+    return jax.vmap(one)(best_pred, last_size, field_idx, op, value)
+
+
+def candidates_bad_index_all(index: bidx.BADIndexState, channels: jnp.ndarray,
+                             max_rows: int) -> CandidateSet:
+    """Stacked BAD-index read: every channel's watermark window at once."""
+
+    def one(c):
+        rows, valid = bidx.new_entries(index, c, max_rows)
+        return CandidateSet(rows, valid, jnp.sum(valid.astype(jnp.int32)))
+
+    return jax.vmap(one)(channels)
+
+
+def join_param_targets_all(ds: R.ActiveDataset, cand: CandidateSet,
+                           targets: TargetArrays, param_field: jnp.ndarray,
+                           payload_bytes: jnp.ndarray, num_brokers: int,
+                           up_mask: Optional[jnp.ndarray], aggregated: bool,
+                           domain: jnp.ndarray) -> ChannelResult:
+    """vmapped ``join_param_targets`` over the channel axis.
+
+    ``cand``/``targets``/``up_mask``/scalars carry a leading C axis; targets
+    are shape-bucketed (padded to the max T / domain / fan-out across
+    channels) with -1 / 0 padding that can never produce a valid pair.
+    """
+
+    def one(cand_c, targets_c, up_mask_c, pf_c, pb_c, dom_c):
+        return join_param_targets(
+            ds, cand_c, targets_c, pf_c, pb_c, num_brokers,
+            up_mask_c if up_mask is not None else None, aggregated, dom_c,
+            fused=True)
+
+    um = up_mask if up_mask is not None else jnp.zeros(
+        (cand.rows.shape[0], 1), dtype=bool)
+    return jax.vmap(one)(cand, targets, um, param_field, payload_bytes, domain)
 
 
 # ---------------------------------------------------------------------------

@@ -93,12 +93,21 @@ class Aggregator:
         if cap < 1:
             raise ValueError("group capacity must be >= 1")
         self.cap = cap
-        # (param, broker) -> list of group indices; groups as python lists.
+        # (param, broker) -> list of group indices. Group members are python
+        # lists when touched incrementally, numpy arrays after a bulk load
+        # (_mutable_members converts on demand) — bulk never pays a
+        # per-subscription list conversion.
         self._by_key: Dict[Tuple[int, int], List[int]] = {}
         self._params: List[int] = []
         self._brokers: List[int] = []
-        self._members: List[List[int]] = []
+        self._members: List = []
         self._next_sid = 0
+
+    def _mutable_members(self, gi: int) -> List[int]:
+        m = self._members[gi]
+        if isinstance(m, np.ndarray):
+            m = self._members[gi] = m.tolist()
+        return m
 
     def add_subscription(self, param: int, broker: int,
                          sid: Optional[int] = None) -> int:
@@ -109,7 +118,7 @@ class Aggregator:
         key = (int(param), int(broker))
         for gi in self._by_key.get(key, ()):           # AddToExistingGroup
             if len(self._members[gi]) < self.cap:
-                self._members[gi].append(sid)
+                self._mutable_members(gi).append(sid)
                 return sid
         gi = len(self._params)                          # open a new group
         self._params.append(int(param))
@@ -118,16 +127,67 @@ class Aggregator:
         self._by_key.setdefault(key, []).append(gi)
         return sid
 
+    def add_bulk(self, params: np.ndarray, brokers: np.ndarray,
+                 sids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Vectorized bulk load: Algorithm-1 semantics without per-subscription
+        Python calls.
+
+        Existing members and the new batch are re-aggregated together through
+        ``aggregate`` (sort + chop), touching Python only per *group*. Per
+        (param, broker) key this yields the minimal ``ceil(n_key / cap)``
+        groups — identical to replaying Algorithm 1 from scratch. When
+        removals have left a key's groups fragmented, the rebuild *compacts*
+        them (fewer groups than continuing the incremental state), so group
+        indices/membership are not stable across a bulk load; subscriber
+        notification semantics are unchanged and the engine invalidates every
+        group-derived cache on any subscription change. Returns the sIDs
+        assigned to the new batch.
+        """
+        params = np.asarray(params, dtype=np.int32).ravel()
+        brokers = np.asarray(brokers, dtype=np.int32).ravel()
+        if params.shape != brokers.shape:
+            raise ValueError("params and brokers must have the same length")
+        n = params.shape[0]
+        if sids is None:
+            sids = self._next_sid + np.arange(n, dtype=np.int32)
+        else:
+            sids = np.asarray(sids, dtype=np.int32).ravel()
+            if sids.shape[0] != n:   # before _next_sid moves: fail unmutated
+                raise ValueError("sids must have the same length as params")
+        if n == 0:
+            return sids
+        self._next_sid = max(self._next_sid, int(sids.max()) + 1)
+        old = flatten_groups(self.build())
+        table = SubscriptionTable(
+            np.concatenate([old.sids, sids]),
+            np.concatenate([old.params, params]),
+            np.concatenate([old.brokers, brokers]))
+        g = aggregate(table, self.cap)
+        counts = g.group_counts
+        self._params = g.group_params.tolist()
+        self._brokers = g.group_brokers.tolist()
+        self._members = [g.group_sids[i, :counts[i]]
+                         for i in range(g.num_groups)]
+        self._by_key = {}
+        for gi, key in enumerate(zip(self._params, self._brokers)):
+            self._by_key.setdefault(key, []).append(gi)
+        return sids
+
     def remove_subscription(self, param: int, broker: int, sid: int) -> bool:
         key = (int(param), int(broker))
         for gi in self._by_key.get(key, ()):
-            if sid in self._members[gi]:
-                self._members[gi].remove(sid)
+            m = self._members[gi]
+            # probe without degrading array-backed groups to lists; convert
+            # only the one group actually being mutated
+            found = bool((m == sid).any()) if isinstance(m, np.ndarray) \
+                else sid in m
+            if found:
+                self._mutable_members(gi).remove(sid)
                 return True
         return False
 
     def build(self) -> SubscriptionGroups:
-        live = [i for i, m in enumerate(self._members) if m]
+        live = [i for i, m in enumerate(self._members) if len(m)]
         g = len(live)
         group_params = np.zeros((g,), dtype=np.int32)
         group_brokers = np.zeros((g,), dtype=np.int32)
@@ -143,40 +203,70 @@ class Aggregator:
                                   group_counts, self.cap)
 
 
+def _sort_key(params: np.ndarray, brokers: np.ndarray) -> np.ndarray:
+    """Fused (param, broker) sort key in the narrowest dtype that holds it —
+    numpy's stable sort is radix for narrow integers, comparison otherwise."""
+    if params.size and (int(params.min()) < 0 or int(brokers.min()) < 0):
+        return (params.astype(np.int64) << 32) | (
+            brokers.astype(np.int64) & 0xFFFFFFFF)
+    span = int(brokers.max()) + 1 if brokers.size else 1
+    key_range = (int(params.max()) + 1) * span if params.size else 1
+    if key_range <= (1 << 15):
+        return (params * span + brokers).astype(np.int16)
+    if key_range <= (1 << 31):
+        return (params.astype(np.int64) * span + brokers).astype(np.int32)
+    return (params.astype(np.int64) << 32) | brokers.astype(np.int64)
+
+
 def aggregate(table: SubscriptionTable, cap: int) -> SubscriptionGroups:
-    """Bulk aggregation (vectorized equivalent of replaying Algorithm 1)."""
-    if table.num_subscriptions == 0:
+    """Bulk aggregation (vectorized equivalent of replaying Algorithm 1).
+
+    Sort by (param, broker) — one stable argsort of a fused 64-bit key — then
+    chop each run into cap-sized subgroups. Per-key group counts equal the
+    incremental replay's ``ceil(n_key / cap)``; no per-subscription Python.
+    """
+    n = table.num_subscriptions
+    if n == 0:
         return SubscriptionGroups(*(np.zeros((0,), np.int32),) * 2,
                                   np.zeros((0, cap), np.int32),
                                   np.zeros((0,), np.int32), cap)
-    # Sort by (param, broker) then chop runs into cap-sized subgroups.
-    order = np.lexsort((table.brokers, table.params))
-    p = table.params[order]
-    b = table.brokers[order]
+    key = _sort_key(table.params, table.brokers)
+    order = np.argsort(key, kind="stable")   # radix for narrow integer keys
+    k = key[order]
     s = table.sids[order]
-    new_run = np.empty(p.shape[0], dtype=bool)
+    new_run = np.empty(n, dtype=bool)
     new_run[0] = True
-    new_run[1:] = (p[1:] != p[:-1]) | (b[1:] != b[:-1])
-    run_id = np.cumsum(new_run) - 1
-    pos_in_run = np.arange(p.shape[0]) - np.maximum.accumulate(
-        np.where(new_run, np.arange(p.shape[0]), 0))
+    new_run[1:] = k[1:] != k[:-1]
+    run_starts = np.flatnonzero(new_run)
+    run_id = np.cumsum(new_run, dtype=np.int32) - 1
+    pos_in_run = np.arange(n, dtype=np.int64) - run_starts[run_id]
     sub_id = pos_in_run // cap
-    # group key = (run_id, sub_id)
-    new_group = new_run | ((sub_id != np.roll(sub_id, 1)) & (run_id == np.roll(run_id, 1)))
-    new_group[0] = True
-    gid = np.cumsum(new_group) - 1
-    g = int(gid[-1]) + 1
-    group_params = np.zeros((g,), dtype=np.int32)
-    group_brokers = np.zeros((g,), dtype=np.int32)
+    # a group starts at every run start and every cap boundary within a run
+    new_group = new_run.copy()
+    new_group[1:] |= sub_id[1:] != sub_id[:-1]
+    group_starts = np.flatnonzero(new_group)
+    g = group_starts.shape[0]
+    gid = np.cumsum(new_group, dtype=np.int32) - 1
     group_sids = np.full((g, cap), -1, dtype=np.int32)
-    group_counts = np.zeros((g,), dtype=np.int32)
-    group_params[gid[new_group]] = p[new_group]
-    group_brokers[gid[new_group]] = b[new_group]
-    slot = pos_in_run % cap
-    group_sids[gid, slot] = s
-    np.add.at(group_counts, gid, 1)
-    return SubscriptionGroups(group_params, group_brokers, group_sids,
-                              group_counts, cap)
+    group_sids[gid, pos_in_run % cap] = s
+    group_counts = np.diff(np.append(group_starts, n)).astype(np.int32)
+    return SubscriptionGroups(table.params[order[group_starts]],
+                              table.brokers[order[group_starts]],
+                              group_sids, group_counts, cap)
+
+
+def flatten_groups(groups: SubscriptionGroups) -> SubscriptionTable:
+    """Vectorized inverse of ``aggregate``: groups -> flat member table.
+
+    Rows come out group-by-group in member order — the same order the old
+    per-group Python loop produced — with no per-subscription work.
+    """
+    counts = groups.group_counts.astype(np.int64)
+    member_mask = np.arange(groups.cap)[None, :] < counts[:, None]
+    return SubscriptionTable(
+        groups.group_sids[member_mask].astype(np.int32),
+        np.repeat(groups.group_params, counts).astype(np.int32),
+        np.repeat(groups.group_brokers, counts).astype(np.int32))
 
 
 def param_to_targets(params: np.ndarray, domain: int,
@@ -185,13 +275,18 @@ def param_to_targets(params: np.ndarray, domain: int,
 
     Returns (map (domain, maxd) int32 padded, counts (domain,) int32). This is
     the TPU realization of the index nested-loop join in the augmented plan —
-    the join against a small categorical domain becomes a gather.
+    the join against a small categorical domain becomes a gather. Pure numpy:
+    a stable argsort ranks each target within its param run, so the scatter
+    preserves the ascending-row order the incremental fill produced.
     """
+    params = np.asarray(params, dtype=np.int32)
     counts = np.bincount(params, minlength=domain).astype(np.int32)
     maxd = max(1, int(counts.max()) if counts.size else 1)
     out = np.full((domain, maxd), pad, dtype=np.int32)
-    cursor = np.zeros((domain,), dtype=np.int64)
-    for i, v in enumerate(params):
-        out[v, cursor[v]] = i
-        cursor[v] += 1
+    if params.size:
+        order = np.argsort(params, kind="stable")
+        sorted_p = params[order]
+        run_start = np.cumsum(counts) - counts          # (domain,)
+        pos = np.arange(params.size, dtype=np.int64) - run_start[sorted_p]
+        out[sorted_p, pos] = order.astype(np.int32)
     return out, counts

@@ -42,7 +42,18 @@ class UserParameters:
         return up
 
     def add(self, param: int) -> None:
+        if not 0 <= param < self.domain:
+            raise ValueError(f"param {param} out of [0, {self.domain})")
         self.refcount[param] += 1
+
+    def add_bulk(self, params: np.ndarray) -> None:
+        """Vectorized ``add``: one bincount instead of S increments."""
+        params = np.asarray(params, dtype=np.int64).ravel()
+        if params.size == 0:
+            return
+        if int(params.min()) < 0 or int(params.max()) >= self.domain:
+            raise ValueError(f"params out of [0, {self.domain})")
+        self.refcount += np.bincount(params, minlength=self.domain)
 
     def remove(self, param: int) -> None:
         if self.refcount[param] <= 0:

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
 from repro.distributed.partition import Rules, sanitize_spec
 from repro.kernels.flash_decode import ref as fd_ref
 
@@ -51,7 +52,7 @@ def sp_decode_attention(rules: Rules, q: jnp.ndarray, k: jnp.ndarray,
         l = jax.lax.psum(l * c, m_axis)
         return fd_ref.normalize(acc, l, qs.dtype)
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(bq, bkv, bkv, blen),
-                       out_specs=bq)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(bq, bkv, bkv, blen),
+                   out_specs=bq)
     return fn(q, k, v, kv_len)

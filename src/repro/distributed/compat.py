@@ -1,0 +1,36 @@
+"""JAX version compatibility for the distribution layer.
+
+The distribution code targets the current JAX API (``jax.shard_map``,
+``jax.lax.pcast`` vma casts, ``jax.sharding.AxisType``); older releases ship
+the same machinery under ``jax.experimental.shard_map`` without varying-mode
+annotations. These shims pick whichever exists so the layer runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # check_rep=False: the legacy replication checker predates the vma rules
+    # the callers are written against and rejects valid collectives.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pcast_varying(x, axis):
+    """Mark ``x`` device-varying over ``axis`` where vma rules exist.
+
+    Newest JAX spells it ``jax.lax.pcast``, the 0.6.x line ``jax.lax.pvary``
+    (both paired with public ``jax.shard_map`` vma checking); the legacy
+    experimental shard_map has no varying/replicated distinction, so identity
+    is correct there.
+    """
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axis, to="varying")
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis)
+    return x

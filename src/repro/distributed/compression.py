@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     scale = jnp.max(jnp.abs(x)) / 127.0
@@ -58,8 +60,8 @@ def compressed_psum_tree(tree: Any, residuals: Any, mesh: Mesh, axis: str
             return out.astype(xs.dtype), new_r
 
         spec = P(*((None,) * x.ndim))
-        fn = jax.shard_map(local, mesh=mesh,
-                           in_specs=(spec, spec), out_specs=(spec, spec))
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(spec, spec), out_specs=(spec, spec))
         return fn(x, r)
 
     out = jax.tree.map(lambda x, r: reduce_leaf(x, r), tree, residuals)

@@ -110,6 +110,8 @@ def tree_shardings(mesh, spec_tree, shape_tree):
 
 def _cost_summary(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older JAX: one dict per device
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}
 

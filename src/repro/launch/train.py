@@ -73,21 +73,26 @@ def train(cfg, steps: int, batch: int, seq: int, ckpt_dir: str,
         params, opt_state = state["params"], state["opt"]
         start = latest
     losses = []
-    for step in range(start, steps):
-        if injector is not None:
-            injector.maybe_fail(step)
-        t0 = time.perf_counter()
-        params, opt_state, metrics = step_fn(params, opt_state, batch_fn(step))
-        jax.block_until_ready(metrics["loss"])
-        timer.record("host0", time.perf_counter() - t0)
-        losses.append(float(metrics["loss"]))
-        if (step + 1) % ckpt_every == 0 or step + 1 == steps:
-            mgr.save(step + 1, {"params": params, "opt": opt_state})
-        if (step + 1) % log_every == 0:
-            print(f"step {step+1}: loss={losses[-1]:.4f} "
-                  f"gnorm={float(metrics['grad_norm']):.3f} "
-                  f"dt={timer.times['host0']*1e3:.0f}ms", flush=True)
-    mgr.wait()
+    try:
+        for step in range(start, steps):
+            if injector is not None:
+                injector.maybe_fail(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch_fn(step))
+            jax.block_until_ready(metrics["loss"])
+            timer.record("host0", time.perf_counter() - t0)
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % ckpt_every == 0 or step + 1 == steps:
+                mgr.save(step + 1, {"params": params, "opt": opt_state})
+            if (step + 1) % log_every == 0:
+                print(f"step {step+1}: loss={losses[-1]:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"dt={timer.times['host0']*1e3:.0f}ms", flush=True)
+    finally:
+        # Flush the async writer even when a step fails: the last published
+        # checkpoint must be durable (not a half-renamed .tmp) so a restart
+        # actually resumes from it.
+        mgr.wait()
     return params, opt_state, losses
 
 

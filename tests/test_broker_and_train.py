@@ -31,8 +31,8 @@ def test_broker_fanout_identical_subscriber_set(rng):
     (paper Table 2: 'Sending Out' identical)."""
     _, rep_o, sids_o = _engine_with_results(rng, aggregated=False)
     _, rep_a, sids_a = _engine_with_results(rng, aggregated=True)
-    out_o, n_o = fanout_sids(rep_o.result, sids_o, max_notify=1 << 14)
-    out_a, n_a = fanout_sids(rep_a.result, sids_a, max_notify=1 << 14)
+    out_o, n_o, _ = fanout_sids(rep_o.result, sids_o, max_notify=1 << 14)
+    out_a, n_a, _ = fanout_sids(rep_a.result, sids_a, max_notify=1 << 14)
     assert int(n_o) == int(n_a)
     a = np.sort(np.asarray(out_o[:int(n_o)]))
     b = np.sort(np.asarray(out_a[:int(n_a)]))
@@ -42,10 +42,10 @@ def test_broker_fanout_identical_subscriber_set(rng):
 def test_broker_pack_fewer_rows_when_aggregated(rng):
     _, rep_o, sids_o = _engine_with_results(rng, aggregated=False)
     _, rep_a, sids_a = _engine_with_results(rng, aggregated=True)
-    _, n_o = pack_payloads(rep_o.result, sids_o, payload_words=8,
-                           max_pairs=1 << 14)
-    _, n_a = pack_payloads(rep_a.result, sids_a, payload_words=8,
-                           max_pairs=1 << 14)
+    _, n_o, _ = pack_payloads(rep_o.result, sids_o, payload_words=8,
+                              max_pairs=1 << 14)
+    _, n_a, _ = pack_payloads(rep_a.result, sids_a, payload_words=8,
+                              max_pairs=1 << 14)
     assert int(n_a) < int(n_o)
 
 

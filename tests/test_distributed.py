@@ -12,12 +12,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.partition import make_rules, sanitize_spec, use_rules
 from repro.distributed.pipeline import bubble_fraction, pipeline_forward
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_mesh
 
 
 def test_sanitize_spec_divisibility():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     # axis missing from mesh is dropped
     s = sanitize_spec(P(("pod", "data"), "model"), (8, 8), mesh)
     assert s == P("data", "model")
@@ -57,8 +56,7 @@ def test_shard_noop_without_rules():
 
 def test_pipeline_forward_matches_sequential(rng):
     """GPipe shard_map pipeline == sequential stage application ((1,) axis)."""
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     w = jnp.asarray(rng.normal(size=(1, 8, 8)), jnp.float32)  # 1 stage
 
     def stage_fn(p, x):

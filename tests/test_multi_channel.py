@@ -1,0 +1,266 @@
+"""Fused multi-channel execution + vectorized control plane + bugfix
+regressions (drop_channel row remap, plan-cache staleness, broker overflow)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import records as R
+from repro.core.broker import fanout_sids, pack_payloads
+from repro.core.channel import (ChannelSpec, most_threatening_tweets,
+                                trending_tweets_in_country, tweets_about_crime,
+                                tweets_about_drugs)
+from repro.core.engine import BADEngine
+from repro.core.plans import ChannelResult, ExecutionFlags
+from repro.core.predicates import Predicate
+
+from conftest import make_tweets
+
+
+def _small_engine(rng, with_spatial=True):
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("Broker1", "Broker2"))
+    eng.create_channel(tweets_about_drugs())
+    eng.create_channel(most_threatening_tweets())
+    eng.create_channel(trending_tweets_in_country(0, "EnglishTrending"))
+    if with_spatial:
+        eng.create_channel(tweets_about_crime(3))
+        eng.set_user_locations(
+            (rng.normal(size=(40, 2)) * 30).astype(np.float32))
+    eng.subscribe_bulk("TweetsAboutDrugs",
+                       rng.integers(0, 50, 300), rng.integers(0, 2, 300))
+    eng.subscribe_bulk("MostThreateningTweets",
+                       rng.integers(0, 50, 200), rng.integers(0, 2, 200))
+    eng.subscribe_bulk("EnglishTrending",
+                       rng.integers(0, 200, 250), rng.integers(0, 2, 250))
+    eng.ingest(make_tweets(rng, 700))
+    return eng
+
+
+ALL_MODE_FLAGS = [
+    ExecutionFlags(scan_mode=m, aggregation=a, param_pushdown=a)
+    for m in ("full", "window", "trad_index", "bad_index")
+    for a in (False, True)
+]
+
+
+@pytest.mark.parametrize("flags", ALL_MODE_FLAGS,
+                         ids=lambda f: f"{f.scan_mode}"
+                         f"{'+agg+push' if f.aggregation else ''}")
+def test_execute_all_matches_sequential(rng, flags):
+    """execute_all == per-channel execute_channel on every reported count,
+    for >= 3 param channels (different domains/payloads) + one spatial."""
+    eng = _small_engine(rng)
+    seq = {name: eng.execute_channel(name, flags, advance=False, timed=False)
+           for name in eng.channels}
+    fused = eng.execute_all(flags, advance=False, timed=False)
+    assert set(fused) == set(seq)
+    for name in seq:
+        assert fused[name].num_results == seq[name].num_results, name
+        assert fused[name].num_notified == seq[name].num_notified, name
+        assert fused[name].scanned == seq[name].scanned, name
+        np.testing.assert_allclose(fused[name].broker_bytes,
+                                   seq[name].broker_bytes, err_msg=name)
+
+
+def test_execute_all_advances_all_watermarks(rng):
+    eng = _small_engine(rng, with_spatial=False)
+    flags = ExecutionFlags(scan_mode="bad_index")
+    first = eng.execute_all(flags, timed=False)
+    assert any(r.num_results > 0 for r in first.values())
+    again = eng.execute_all(flags, timed=False)
+    assert all(r.num_results == 0 for r in again.values())
+    eng.ingest(make_tweets(rng, 300, t0=5000))
+    third = eng.execute_all(flags, timed=False)
+    rows = np.asarray(third["TweetsAboutDrugs"].result.matched_rows)
+    valid = np.asarray(third["TweetsAboutDrugs"].result.matched_valid)
+    assert (rows[valid] >= 700).all()        # only post-watermark records
+
+
+def test_subscribe_bulk_matches_replay(rng):
+    """Vectorized bulk load == Algorithm-1 replay: same group structure,
+    same refcounts, and incremental ops still work on the rebuilt state."""
+    params = rng.integers(0, 50, 500).astype(np.int32)
+    brokers = rng.integers(0, 2, 500).astype(np.int32)
+    bulk = BADEngine(brokers=("B1", "B2"), group_cap=64)
+    bulk.create_channel(tweets_about_drugs())
+    sids = bulk.subscribe_bulk("TweetsAboutDrugs", params, brokers)
+    assert len(set(sids.tolist())) == 500
+    replay = BADEngine(brokers=("B1", "B2"), group_cap=64)
+    replay.create_channel(tweets_about_drugs())
+    st_r = replay.channels["TweetsAboutDrugs"]
+    for p, b in zip(params.tolist(), brokers.tolist()):
+        st_r.aggregator.add_subscription(int(p), int(b))
+        st_r.user_params.add(int(p))
+
+    def sig(groups):
+        return sorted((int(groups.group_params[i]), int(groups.group_brokers[i]),
+                       int(groups.group_counts[i]))
+                      for i in range(groups.num_groups))
+
+    st_b = bulk.channels["TweetsAboutDrugs"]
+    assert sig(st_b.aggregator.build()) == sig(st_r.aggregator.build())
+    np.testing.assert_array_equal(st_b.user_params.refcount,
+                                  st_r.user_params.refcount)
+    # incremental ops on the rebuilt (array-backed) state
+    sid = bulk.subscribe("TweetsAboutDrugs", int(params[0]), "B1")
+    assert sid == 500
+    assert bulk.unsubscribe("TweetsAboutDrugs", int(params[0]), "B1", sid)
+    assert st_b.aggregator.build().num_subscriptions == 500
+
+
+def test_subscribe_bulk_merges_into_existing_groups():
+    eng = BADEngine(brokers=("B1",), group_cap=8)
+    eng.create_channel(tweets_about_drugs())
+    for _ in range(3):
+        eng.subscribe("TweetsAboutDrugs", 7, "B1")
+    eng.subscribe_bulk("TweetsAboutDrugs", np.full(9, 7, np.int32),
+                       np.zeros(9, np.int32))
+    g = eng.channels["TweetsAboutDrugs"].aggregator.build()
+    # 12 subs with param 7, cap 8 -> ceil(12/8) == 2 groups, like replay
+    assert g.num_groups == 2
+    assert sorted(g.group_counts.tolist()) == [4, 8]
+
+
+def test_drop_middle_channel_keeps_index_identity(rng):
+    """Dropping a middle channel must not hand its BAD-index rows (or
+    watermarks) to the surviving channels."""
+    eng = BADEngine(dataset_capacity=1024, index_capacity=512,
+                    max_window=512, max_candidates=128)
+    specs = [
+        ChannelSpec("A", (Predicate.parse(R.THREATENING_RATE, "==", 10),)),
+        ChannelSpec("B", (Predicate.parse(R.DRUG_ACTIVITY, "==", 3),)),
+        ChannelSpec("C", (Predicate.parse(R.WEAPON_MENTIONED, "==", 1),)),
+    ]
+    for s in specs:
+        eng.create_channel(s)
+        eng.subscribe(s.name, 5, "BrokerA")
+    fields = np.zeros((30, 10), dtype=np.int32)
+    fields[:, R.STATE] = 5
+    fields[:, R.TIMESTAMP] = 10
+    fields[:10, R.THREATENING_RATE] = 10     # rows 0..9 match A
+    fields[10:20, R.DRUG_ACTIVITY] = 3       # rows 10..19 match B
+    fields[20:, R.WEAPON_MENTIONED] = 1      # rows 20..29 match C
+    eng.ingest(R.RecordBatch.from_numpy(fields))
+    eng.drop_channel("B")
+    flags = ExecutionFlags(scan_mode="bad_index")
+    rep_c = eng.execute_channel("C", flags, advance=False)
+    rows = np.asarray(rep_c.result.matched_rows)
+    valid = np.asarray(rep_c.result.matched_valid)
+    assert sorted(rows[valid].tolist()) == list(range(20, 30))
+    rep_a = eng.execute_channel("A", flags, advance=False)
+    rows = np.asarray(rep_a.result.matched_rows)
+    valid = np.asarray(rep_a.result.matched_valid)
+    assert sorted(rows[valid].tolist()) == list(range(0, 10))
+
+
+def test_recreated_channel_gets_fresh_plan(rng):
+    """Re-creating a same-named channel with different predicates must not be
+    served the stale compiled plan (old lru_cache keyed on channel name)."""
+    eng = BADEngine(dataset_capacity=1024, index_capacity=512,
+                    max_window=512, max_candidates=128)
+    eng.create_channel(
+        ChannelSpec("X", (Predicate.parse(R.THREATENING_RATE, "==", 10),)))
+    eng.subscribe("X", 5, "BrokerA")
+    fields = np.zeros((8, 10), dtype=np.int32)
+    fields[:, R.STATE] = 5
+    fields[:, R.TIMESTAMP] = 10
+    fields[:, R.THREATENING_RATE] = 10
+    eng.ingest(R.RecordBatch.from_numpy(fields))
+    flags = ExecutionFlags(scan_mode="window")
+    assert eng.execute_channel("X", flags, advance=False).num_results == 8
+    eng.drop_channel("X")
+    eng.create_channel(
+        ChannelSpec("X", (Predicate.parse(R.WEAPON_MENTIONED, "==", 1),)))
+    eng.subscribe("X", 5, "BrokerA")
+    fields2 = fields.copy()
+    fields2[:, R.TIMESTAMP] = 20
+    fields2[:4, R.WEAPON_MENTIONED] = 1      # only 4 match the NEW predicate
+    eng.ingest(R.RecordBatch.from_numpy(fields2))
+    rep = eng.execute_channel("X", flags, advance=False)
+    assert rep.num_results == 4
+
+
+def test_execute_all_fresh_targets_after_recreate(rng):
+    """The stacked-targets cache must not survive a drop/re-create of a
+    same-named channel (version counters restart at 0)."""
+    eng = BADEngine(dataset_capacity=1024, index_capacity=512,
+                    max_window=512, max_candidates=128)
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe("TweetsAboutDrugs", 5, "BrokerA")
+    flags = ExecutionFlags(scan_mode="window")
+    eng.execute_all(flags, advance=False, timed=False)   # warm stacked cache
+    eng.drop_channel("TweetsAboutDrugs")
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe("TweetsAboutDrugs", 7, "BrokerA")      # different param
+    fields = np.zeros((8, 10), dtype=np.int32)
+    fields[:, R.STATE] = 5                               # old subscriber only
+    fields[:, R.THREATENING_RATE] = 10
+    fields[:, R.DRUG_ACTIVITY] = 3
+    fields[:, R.TIMESTAMP] = 10
+    eng.ingest(R.RecordBatch.from_numpy(fields))
+    rep = eng.execute_all(flags, advance=False, timed=False)["TweetsAboutDrugs"]
+    assert rep.num_results == 0          # nobody subscribes to state 5 anymore
+    seq = eng.execute_channel("TweetsAboutDrugs", flags, advance=False)
+    assert seq.num_results == 0
+
+
+def test_subscribe_bulk_rejects_out_of_domain_atomically():
+    eng = BADEngine()
+    eng.create_channel(tweets_about_drugs())             # param_domain == 50
+    bad = np.array([3, 60, 4], np.int32)                 # 60 out of domain
+    with pytest.raises(ValueError, match="out of"):
+        eng.subscribe_bulk("TweetsAboutDrugs", bad, np.zeros(3, np.int32))
+    with pytest.raises(ValueError, match="out of"):      # bad broker id too
+        eng.subscribe_bulk("TweetsAboutDrugs", np.array([3], np.int32),
+                           np.array([9], np.int32))
+    for bad_param in (-1, 50):                           # single-sub path
+        with pytest.raises(ValueError, match="out of"):
+            eng.subscribe("TweetsAboutDrugs", bad_param, "BrokerA")
+    st = eng.channels["TweetsAboutDrugs"]
+    assert st.aggregator.build().num_subscriptions == 0  # nothing half-applied
+    assert int(st.user_params.refcount.sum()) == 0
+
+
+def _overflow_result(n_pairs):
+    """A ChannelResult with ``n_pairs`` valid pairs, distinct rows/targets."""
+    rows = jnp.arange(n_pairs, dtype=jnp.int32)[:, None]
+    tgts = jnp.arange(n_pairs, dtype=jnp.int32)[:, None] % 4
+    valid = jnp.ones((n_pairs, 1), dtype=bool)
+    z = jnp.zeros((), jnp.int32)
+    return ChannelResult(rows, tgts, valid, rows[:, 0],
+                         jnp.ones((n_pairs,), bool), z, z, z,
+                         jnp.zeros((1,), jnp.float32),
+                         jnp.zeros((1,), jnp.int32))
+
+
+def test_pack_payloads_overflow_drops_not_overwrites():
+    res = _overflow_result(10)
+    group_sids = jnp.arange(4, dtype=jnp.int32)[:, None]   # 4 groups of 1
+    out, delivered, overflow = pack_payloads(res, group_sids,
+                                             payload_words=2, max_pairs=6)
+    assert int(delivered) == 6
+    assert int(overflow) == 4
+    # the buffer holds the FIRST 6 pairs in order — the last slot is pair 5,
+    # not the last overflowing pair (the old clamp overwrote it with pair 9)
+    assert np.asarray(out[:, 0]).tolist() == [0, 1, 2, 3, 4, 5]
+
+
+def test_fanout_sids_overflow_drops_not_overwrites():
+    res = _overflow_result(10)
+    group_sids = (jnp.arange(4, dtype=jnp.int32) * 100)[:, None]
+    out, delivered, overflow = fanout_sids(res, group_sids, max_notify=7)
+    assert int(delivered) == 7
+    assert int(overflow) == 3
+    expected = [(i % 4) * 100 for i in range(7)]
+    assert np.asarray(out).tolist() == expected
+
+
+def test_no_overflow_counts_zero(rng):
+    res = _overflow_result(5)
+    group_sids = jnp.arange(4, dtype=jnp.int32)[:, None]
+    _, delivered, overflow = pack_payloads(res, group_sids,
+                                           payload_words=2, max_pairs=16)
+    assert int(delivered) == 5 and int(overflow) == 0
+    _, delivered, overflow = fanout_sids(res, group_sids, max_notify=16)
+    assert int(delivered) == 5 and int(overflow) == 0

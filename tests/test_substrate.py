@@ -8,6 +8,7 @@ import pytest
 
 from repro.ckpt.manager import CheckpointManager
 from repro.data.synthetic import TokenStream, tweet_batch
+from repro.launch.mesh import make_mesh
 from repro.distributed.compression import (compressed_psum_tree, ef_compress,
                                            dequantize_int8, init_residuals)
 from repro.optim import Adafactor, AdamW, constant, make_optimizer
@@ -85,8 +86,7 @@ def test_elastic_restore_new_sharding(tmp_path):
     mgr = CheckpointManager(str(tmp_path), async_save=False)
     tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     mgr.save(1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     got = mgr.restore(1, tree, shardings=sh)
     assert got["w"].sharding == sh["w"]
@@ -151,8 +151,7 @@ def test_ef_compression_unbiased_accumulation(rng):
 
 
 def test_compressed_psum_tree_single_axis(rng):
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     tree = {"g": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
     res = init_residuals(tree)
     out, new_res = compressed_psum_tree(tree, res, mesh, "pod")
