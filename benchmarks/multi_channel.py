@@ -1,12 +1,17 @@
 """Multi-channel scaling: vectorized control plane + fused execution.
 
-Two measurements the single-channel figures cannot show:
+Measurements the single-channel figures cannot show:
 
   control plane -- 100k-subscription bulk load through the vectorized
       ``aggregate`` path vs replaying Algorithm 1 one Python call per
       subscription (the paper's broker-side ingest bottleneck).
   data plane    -- one fused ``execute_all`` jitted call driving every
-      channel vs the per-channel host loop, at several channel counts.
+      channel vs the per-channel host loop, at several channel counts;
+      since PR 2 the fused call covers spatial channels too (mixed
+      param+spatial engine, TweetsAboutCrime in the same plan).
+  kernels       -- the fused plan with Pallas ``predicate_filter`` /
+      ``spatial_match`` kernels vs the jnp oracle (compiled Pallas is the
+      TPU path; in interpret mode off-TPU this records the overhead).
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ import time
 
 import numpy as np
 
-from repro.core.channel import (most_threatening_tweets,
+from repro.core.channel import (most_threatening_tweets, tweets_about_crime,
                                 trending_tweets_in_country, tweets_about_drugs)
 from repro.core.engine import BADEngine
 from repro.core.plans import ExecutionFlags
@@ -68,25 +73,39 @@ def bench_bulk_load(rng, repeats: int = 3) -> None:
          f"x{t_replay / t_bulk:.1f} (target >= 10x)")
 
 
-def _channel_set(n: int):
+def _channel_set(n: int, with_spatial: bool = False):
     specs = [tweets_about_drugs(), most_threatening_tweets()]
+    if with_spatial:
+        specs.append(tweets_about_crime(3))
     specs += [trending_tweets_in_country(i, f"{LANGS[i]}Trending")
               for i in range(len(LANGS))]
     return specs[:n]
 
 
-def bench_fused_execution(rng, n_channels: int, n_subs: int = 20_000,
-                          n_tweets: int = 16_384) -> None:
+def _loaded_engine(rng, specs, n_subs: int, n_tweets: int, n_users: int,
+                   use_pallas: bool = False) -> BADEngine:
     eng = BADEngine(dataset_capacity=1 << 16, index_capacity=1 << 14,
                     max_window=1 << 14, max_candidates=1 << 12,
-                    brokers=("B1", "B2", "B3", "B4"))
-    specs = _channel_set(n_channels)
+                    brokers=("B1", "B2", "B3", "B4"), use_pallas=use_pallas)
     for spec in specs:
         eng.create_channel(spec)
-        eng.subscribe_bulk(spec.name,
-                           rng.integers(0, spec.param_domain, n_subs),
-                           rng.integers(0, 4, n_subs))
+        if spec.join == "param":
+            eng.subscribe_bulk(spec.name,
+                               rng.integers(0, spec.param_domain, n_subs),
+                               rng.integers(0, 4, n_subs))
+    if any(s.join == "spatial" for s in specs):
+        eng.set_user_locations(
+            rng.uniform(-100, 100, size=(n_users, 2)).astype(np.float32),
+            rng.integers(0, 4, n_users))
     eng.ingest(tweet_batch(rng, n_tweets, t0=1))
+    return eng
+
+
+def bench_fused_execution(rng, n_channels: int, n_subs: int = 20_000,
+                          n_tweets: int = 16_384, with_spatial: bool = False,
+                          n_users: int = 2048, tag: str = "") -> None:
+    specs = _channel_set(n_channels, with_spatial)
+    eng = _loaded_engine(rng, specs, n_subs, n_tweets, n_users)
     flags = ExecutionFlags.fully_optimized()
 
     def sequential():
@@ -105,18 +124,56 @@ def bench_fused_execution(rng, n_channels: int, n_subs: int = 20_000,
     t_seq = timeit(sequential)
     t_fused = timeit(fused)
     total = sum(r.num_results for r in seq_reports)
-    emit(f"multi_channel/exec/c{n_channels}/sequential", t_seq,
-         f"results={total}")
-    emit(f"multi_channel/exec/c{n_channels}/fused", t_fused,
-         f"results={total}")
-    emit(f"multi_channel/exec/c{n_channels}/speedup", 0.0,
-         f"x{t_seq / t_fused:.2f}")
+    name = f"multi_channel/exec/c{n_channels}{tag}"
+    emit(f"{name}/sequential", t_seq, f"results={total}")
+    emit(f"{name}/fused", t_fused, f"results={total}")
+    emit(f"{name}/speedup", 0.0, f"x{t_seq / t_fused:.2f}")
+
+
+def bench_fused_pallas_vs_oracle(rng, n_channels: int = 4,
+                                 n_subs: int = 20_000,
+                                 n_tweets: int = 16_384,
+                                 n_users: int = 2048) -> None:
+    """Same mixed param+spatial fused plan, Pallas kernels vs jnp oracle."""
+    specs = _channel_set(n_channels, with_spatial=True)
+    seed = rng.integers(0, 2 ** 31)
+    times = {}
+    results = {}
+    for backend, use_pallas in (("oracle", False), ("pallas", True)):
+        r = np.random.default_rng(seed)
+        eng = _loaded_engine(r, specs, n_subs, n_tweets, n_users,
+                             use_pallas=use_pallas)
+        flags = ExecutionFlags.fully_optimized()
+        reports = eng.execute_all(flags, advance=False, timed=False)  # warm
+        results[backend] = {n: rep.num_results for n, rep in reports.items()}
+        times[backend] = timeit(
+            lambda: eng.execute_all(flags, advance=False, timed=False))
+    # Predicate evaluation is integer-exact between kernel and oracle; the
+    # spatial join may flip O(1-in-millions) pairs sitting exactly on the
+    # radius boundary (the kernel's MXU form t2+u2-2t.u rounds differently
+    # than the oracle's (t-u)^2), so compare with a boundary tolerance.
+    for n, want in results["oracle"].items():
+        got = results["pallas"][n]
+        assert abs(got - want) <= max(2, want // 10_000), (n, want, got)
+    total = sum(results["oracle"].values())
+    emit(f"multi_channel/exec/mixed{n_channels}/fused_oracle",
+         times["oracle"], f"results={total}")
+    emit(f"multi_channel/exec/mixed{n_channels}/fused_pallas",
+         times["pallas"], f"results={total}")
+    emit(f"multi_channel/exec/mixed{n_channels}/pallas_vs_oracle", 0.0,
+         f"x{times['oracle'] / times['pallas']:.2f} "
+         "(>1 means pallas faster; expect <1 in interpret mode off-TPU)")
 
 
 def run(rng) -> None:
     bench_bulk_load(rng)
     for n in (2, 4, 7):
         bench_fused_execution(rng, n)
+    # mixed param+spatial engine: the spatial channel rides the same fused
+    # call (acceptance: >= 4 channels, fused-vs-sequential + speedup)
+    for n in (4, 8):
+        bench_fused_execution(rng, n, with_spatial=True, tag="mixed")
+    bench_fused_pallas_vs_oracle(rng)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,17 @@ chosen ``ExecutionFlags`` plan; broker accounting; subscription control plane
 
 The engine is deliberately a thin host shell: every per-record code path is a
 jitted pure function over fixed-shape arrays.
+
+``use_pallas=True`` routes every predicate / spatial evaluation through the
+Pallas kernels (``predicate_filter`` at ingestion AND inside the fused
+executor's candidate discovery; ``spatial_match`` in both spatial join
+paths); the default jnp oracle is the parity reference, and the two are
+result-identical by construction (asserted by the parity suite).
+
+Broker delivery (``deliver=True`` on ``execute_channel`` / ``execute_all``)
+runs the broker's convert+send stages (``pack_payloads`` / ``fanout_sids``)
+and surfaces dropped-on-overflow counts in ``ExecutionReport.overflow`` — no
+silently lost notifications.
 """
 from __future__ import annotations
 
@@ -22,7 +33,7 @@ from repro.core import bad_index as bidx
 from repro.core import plans
 from repro.core import records as R
 from repro.core import subscriptions as subs
-from repro.core.broker import BrokerRegistry
+from repro.core.broker import BrokerRegistry, fanout_sids, pack_payloads
 from repro.core.channel import ChannelSpec
 from repro.core.predicates import (CompiledConditions, compile_conditions,
                                    evaluate_conditions)
@@ -55,6 +66,23 @@ class ChannelState:
         self._host_targets = {}
 
 
+@dataclasses.dataclass(frozen=True)
+class DeliveryStats:
+    """Broker delivery accounting for one executed channel (opt-in via
+    ``deliver=True``): result pairs packed by ``pack_payloads`` and end
+    subscribers fanned out by ``fanout_sids`` vs dropped on buffer overflow.
+    Conservation: delivered + overflow == produced, per stage."""
+
+    delivered_pairs: int
+    overflow_pairs: int
+    delivered_sids: int
+    overflow_sids: int
+
+    @property
+    def overflow(self) -> int:
+        return self.overflow_pairs + self.overflow_sids
+
+
 @dataclasses.dataclass
 class ExecutionReport:
     channel: str
@@ -65,6 +93,8 @@ class ExecutionReport:
     num_notified: int
     scanned: int
     broker_bytes: np.ndarray
+    # broker overflow accounting; None unless executed with ``deliver=True``
+    overflow: Optional[DeliveryStats] = None
 
 
 class BADEngine:
@@ -77,7 +107,10 @@ class BADEngine:
                  schema: R.Schema = R.ENRICHED_TWEET_SCHEMA,
                  brokers: Tuple[str, ...] = ("BrokerA",),
                  use_pallas: bool = False,
-                 group_cap: Optional[int] = None):
+                 group_cap: Optional[int] = None,
+                 max_deliver_pairs: int = 1 << 12,
+                 max_notify: int = 1 << 14,
+                 deliver_payload_words: int = 8):
         self.schema = schema
         self.dataset = R.ActiveDataset.create(dataset_capacity, schema)
         self.index_capacity = index_capacity
@@ -88,8 +121,13 @@ class BADEngine:
         self.brokers = BrokerRegistry.create(*brokers)
         self.channels: Dict[str, ChannelState] = {}
         self.use_pallas = use_pallas
+        self.max_deliver_pairs = max_deliver_pairs
+        self.max_notify = max_notify
+        self.deliver_payload_words = deliver_payload_words
         self.user_locations = jnp.zeros((1, 2), dtype=jnp.float32)
         self.user_brokers = jnp.zeros((1,), dtype=jnp.int32)
+        # keys the stacked-user-set cache; bumped by set_user_locations
+        self._user_version = 0
         self.now = 0
         self._conds: Optional[CompiledConditions] = None
         self.index_state = bidx.BADIndexState.create(0, index_capacity)
@@ -181,6 +219,7 @@ class BADEngine:
         if brokers is None:
             brokers = np.zeros((locations.shape[0],), dtype=np.int32)
         self.user_brokers = jnp.asarray(brokers, dtype=jnp.int32)
+        self._user_version += 1  # invalidate stacked user targets
 
     # ------------------------------------------------------------------
     # data plane: ingestion
@@ -356,10 +395,27 @@ class BADEngine:
             self._exec_cache.pop(next(iter(self._exec_cache)))
         self._exec_cache[key] = fn
 
+    def _deliver(self, st: ChannelState, result: plans.ChannelResult,
+                 aggregated: bool) -> DeliveryStats:
+        """Run the broker convert+send stages on one channel's result and
+        account overflow (ROADMAP: surface drops instead of losing them)."""
+        if st.spec.join == "spatial":
+            # spatial targets ARE end-user ids; any 1-D table selects the
+            # brokers' identity fanout (they read targets directly and never
+            # index a 1-D table's values), so pass an empty shape-only flag
+            sids = jnp.zeros((0,), dtype=jnp.int32)
+        else:
+            sids = self.group_sids_array(st.spec.name, aggregated)
+        _, dp, op = pack_payloads(result, sids, self.deliver_payload_words,
+                                  self.max_deliver_pairs)
+        _, ds_, os_ = fanout_sids(result, sids, self.max_notify)
+        return DeliveryStats(int(dp), int(op), int(ds_), int(os_))
+
     def execute_channel(self, channel: str,
                         flags: plans.ExecutionFlags,
                         advance: bool = True,
-                        timed: bool = True) -> ExecutionReport:
+                        timed: bool = True,
+                        deliver: bool = False) -> ExecutionReport:
         st = self.channels[channel]
         spatial = st.spec.join == "spatial"
         # The BAD index knows its exact candidate count before execution (the
@@ -390,12 +446,14 @@ class BADEngine:
             st.last_exec_ts = self.now
             st.last_exec_size = int(self.dataset.size)
             st.executions += 1
+        overflow = self._deliver(st, result, flags.aggregation) if deliver else None
         return ExecutionReport(
             channel=channel, flags=flags, result=result, wall_time_s=wall,
             num_results=int(result.num_results),
             num_notified=int(result.num_notified),
             scanned=int(result.scanned),
-            broker_bytes=np.asarray(result.broker_bytes))
+            broker_bytes=np.asarray(result.broker_bytes),
+            overflow=overflow)
 
     # ------------------------------------------------------------------
     # data plane: fused multi-channel execution
@@ -442,66 +500,139 @@ class BADEngine:
         self._stacked_cache[aggregated] = (key, val)
         return val
 
-    def _exec_all_fn(self, chs: List[ChannelState],
+    def _stacked_spatial_inputs(self, chs: List[ChannelState]):
+        """Stacked per-channel user sets for the fused spatial join.
+
+        The user count is shape-bucketed (power of two) so the fused trace
+        survives user-set growth; padded users sit at the far sentinel and can
+        never fall inside any radius. There is one global UserLocations
+        dataset today, so every channel row carries the same users — the
+        stacked layout keeps the plan ready for per-channel user cohorts.
+        Cached until ``set_user_locations`` (version bump) or channel
+        create/drop (cache clear)."""
+        from repro.kernels.spatial_match.ops import FAR
+        key = (tuple(st.spec.name for st in chs), self._user_version)
+        hit = self._stacked_cache.get("spatial")
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        u = self.user_locations.shape[0]
+        ub = _pow2_bucket(u, 3)
+        n = len(chs)
+        locs = np.full((n, ub, 2), -FAR, np.float32)
+        brokers = np.zeros((n, ub), np.int32)
+        locs[:, :u] = np.asarray(self.user_locations)[None]
+        brokers[:, :u] = np.asarray(self.user_brokers)[None]
+        val = (jnp.asarray(locs), jnp.asarray(brokers))
+        self._stacked_cache["spatial"] = (key, val)
+        return val
+
+    def _exec_all_fn(self, param_chs: List[ChannelState],
+                     spatial_chs: List[ChannelState],
                      flags: plans.ExecutionFlags, max_cand: int) -> Callable:
-        key = ("all", flags, max_cand, tuple((st.spec, st.index) for st in chs))
+        """ONE compiled plan for every channel: stacked candidate discovery
+        per join group (param / spatial), vmapped joins, fused broker
+        accounting. With ``use_pallas`` the discovery runs the Pallas
+        ``predicate_filter`` kernel and the spatial join the Pallas
+        ``spatial_match`` kernel (both batched over the channel axis)."""
+        key = ("all", flags, max_cand,
+               tuple((st.spec, st.index) for st in param_chs),
+               tuple((st.spec, st.index) for st in spatial_chs))
         cached = self._exec_cache.get(key)
         if cached is not None:
             return cached
-        rows = [st.index for st in chs]
         conds = self._conds
-        conds_sub = CompiledConditions(conds.field_idx[rows], conds.op[rows],
-                                       conds.value[rows], conds.npreds[rows])
-        best_pred = jnp.asarray(
-            [int(np.argmax([_pred_rank(p) for p in st.spec.fixed_preds]))
-             if st.spec.fixed_preds else 0 for st in chs], jnp.int32)
-        ch_rows = jnp.asarray(rows, jnp.int32)
         max_window = self.max_window
         num_brokers = self.brokers.num_brokers
         scan_mode = flags.scan_mode
+        pushdown = flags.param_pushdown
+        aggregated = flags.aggregation
+        use_pallas = self.use_pallas
+        if use_pallas:
+            from repro.kernels.predicate_filter import ops as pf_ops
+            from repro.kernels.spatial_match import ops as sm_ops
+            spatial_fn = sm_ops.spatial_match
+        else:
+            spatial_fn = None
 
-        def run(ds, index_state, targets, up_masks, domains, param_fields,
-                payload_bytes, last_ts, last_size):
+        def group_statics(chs):
+            rows = [st.index for st in chs]
+            conds_sub = CompiledConditions(
+                conds.field_idx[rows], conds.op[rows],
+                conds.value[rows], conds.npreds[rows])
+            best = jnp.asarray(
+                [int(np.argmax([_pred_rank(p) for p in st.spec.fixed_preds]))
+                 if st.spec.fixed_preds else 0 for st in chs], jnp.int32)
+            match_fn = match_rows_fn = None
+            if use_pallas:
+                match_fn = lambda f, cs=conds_sub: pf_ops.predicate_filter(f, cs)
+                match_rows_fn = (
+                    lambda f, cs=conds_sub: pf_ops.predicate_filter_rows(f, cs))
+            return (conds_sub, best, jnp.asarray(rows, jnp.int32),
+                    match_fn, match_rows_fn)
+
+        p_static = group_statics(param_chs) if param_chs else None
+        s_static = group_statics(spatial_chs) if spatial_chs else None
+        radii = jnp.asarray([st.spec.spatial_radius for st in spatial_chs],
+                            jnp.float32)
+
+        def discover(ds, index_state, static, last_ts, last_size):
+            conds_sub, best, ch_rows, match_fn, match_rows_fn = static
             if scan_mode == "full":
-                cand = plans.candidates_full_scan_all(ds, conds_sub, last_ts,
-                                                      max_cand)
-            elif scan_mode == "window":
-                cand = plans.candidates_window_all(ds, conds_sub, last_size,
-                                                   max_window)
-            elif scan_mode == "trad_index":
-                cand = plans.candidates_trad_index_all(
-                    ds, conds_sub, best_pred, last_size, max_window, max_cand)
-            else:
-                cand = plans.candidates_bad_index_all(index_state, ch_rows,
-                                                      max_cand)
-            return plans.join_param_targets_all(
-                ds, cand, targets, param_fields, payload_bytes, num_brokers,
-                up_masks if flags.param_pushdown else None, flags.aggregation,
-                domains)
+                return plans.candidates_full_scan_all(ds, conds_sub, last_ts,
+                                                      max_cand, match_fn)
+            if scan_mode == "window":
+                return plans.candidates_window_all(ds, conds_sub, last_size,
+                                                   max_window, match_rows_fn)
+            if scan_mode == "trad_index":
+                return plans.candidates_trad_index_all(
+                    ds, conds_sub, best, last_size, max_window, max_cand,
+                    match_rows_fn)
+            return plans.candidates_bad_index_all(index_state, ch_rows,
+                                                  max_cand)
+
+        def run(ds, index_state, p_in, s_in):
+            res_p = res_s = None
+            if p_static is not None:
+                cand = discover(ds, index_state, p_static,
+                                p_in["last_ts"], p_in["last_size"])
+                res_p = plans.join_param_targets_all(
+                    ds, cand, p_in["targets"], p_in["param_field"],
+                    p_in["payload"], num_brokers,
+                    p_in["up_masks"] if pushdown else None, aggregated,
+                    p_in["domains"])
+            if s_static is not None:
+                cand = discover(ds, index_state, s_static,
+                                s_in["last_ts"], s_in["last_size"])
+                res_s = plans.join_spatial_all(
+                    ds, cand, s_in["locs"], s_in["brokers"], radii,
+                    s_in["payload"], num_brokers, spatial_fn)
+            return res_p, res_s
 
         fn = jax.jit(run)
         self._cache_put(key, fn)
         return fn
 
     def execute_all(self, flags: plans.ExecutionFlags, advance: bool = True,
-                    timed: bool = True) -> Dict[str, ExecutionReport]:
-        """Execute EVERY channel under one plan: all param-join channels run
-        in a single jitted call (stacked candidate discovery + vmapped join +
-        broker accounting); spatial channels keep the per-channel path.
+                    timed: bool = True,
+                    deliver: bool = False) -> Dict[str, ExecutionReport]:
+        """Execute EVERY channel — param-join AND spatial — in one jitted
+        call: stacked candidate discovery per join group, vmapped param join,
+        vmapped spatial join (per-channel radii over the stacked user sets),
+        fused broker accounting. No per-channel host round-trips remain on
+        the hot path.
 
         Result-for-result equivalent to looping ``execute_channel`` — each
         channel's report carries its own counts/bytes; ``wall_time_s`` is the
-        fused wall time amortized per channel.
+        fused wall time amortized per channel. ``deliver=True`` additionally
+        runs broker packing per channel and surfaces drop counts in
+        ``report.overflow``.
         """
         ordered = sorted(self.channels.values(), key=lambda s: s.index)
-        param_chs = [st for st in ordered if st.spec.join == "param"]
         reports: Dict[str, ExecutionReport] = {}
-        for st in ordered:
-            if st.spec.join == "spatial":
-                reports[st.spec.name] = self.execute_channel(
-                    st.spec.name, flags, advance=advance, timed=timed)
-        if not param_chs:
+        if not ordered:
             return reports
+        param_chs = [st for st in ordered if st.spec.join == "param"]
+        spatial_chs = [st for st in ordered if st.spec.join == "spatial"]
         max_cand = self.max_candidates
         if flags.scan_mode == "bad_index":
             # shared shape bucket: the largest per-channel watermark delta
@@ -509,45 +640,72 @@ class BADEngine:
             counts = np.asarray(self.index_state.counts)
             wms = np.asarray(self.index_state.watermarks)
             pending = max(int(counts[st.index] - wms[st.index])
-                          for st in param_chs)
+                          for st in ordered)
             bucket = _pow2_bucket(pending, 6)
             max_cand = min(bucket, self.max_candidates)
-        fn = self._exec_all_fn(param_chs, flags, max_cand)
-        targets, up_masks, domains = self._stacked_inputs(param_chs,
-                                                          flags.aggregation)
-        args = (self.dataset, self.index_state, targets, up_masks, domains,
-                jnp.asarray([st.spec.param_field for st in param_chs], jnp.int32),
-                jnp.asarray([st.spec.payload_bytes for st in param_chs], jnp.int32),
-                jnp.asarray([st.last_exec_ts for st in param_chs], jnp.int32),
-                jnp.asarray([st.last_exec_size for st in param_chs], jnp.int32))
+        fn = self._exec_all_fn(param_chs, spatial_chs, flags, max_cand)
+        p_in = s_in = None
+        if param_chs:
+            targets, up_masks, domains = self._stacked_inputs(
+                param_chs, flags.aggregation)
+            p_in = dict(
+                targets=targets, up_masks=up_masks, domains=domains,
+                param_field=jnp.asarray(
+                    [st.spec.param_field for st in param_chs], jnp.int32),
+                payload=jnp.asarray(
+                    [st.spec.payload_bytes for st in param_chs], jnp.int32),
+                last_ts=jnp.asarray(
+                    [st.last_exec_ts for st in param_chs], jnp.int32),
+                last_size=jnp.asarray(
+                    [st.last_exec_size for st in param_chs], jnp.int32))
+        if spatial_chs:
+            locs, ubrokers = self._stacked_spatial_inputs(spatial_chs)
+            s_in = dict(
+                locs=locs, brokers=ubrokers,
+                payload=jnp.asarray(
+                    [st.spec.payload_bytes for st in spatial_chs], jnp.int32),
+                last_ts=jnp.asarray(
+                    [st.last_exec_ts for st in spatial_chs], jnp.int32),
+                last_size=jnp.asarray(
+                    [st.last_exec_size for st in spatial_chs], jnp.int32))
+        args = (self.dataset, self.index_state, p_in, s_in)
         if timed:  # warm the trace so wall time measures execution
             jax.block_until_ready(fn(*args))
         t0 = time.perf_counter()
-        result = fn(*args)
-        jax.block_until_ready(result.num_results)
+        res_p, res_s = fn(*args)
+        jax.block_until_ready((res_p, res_s))
         wall = time.perf_counter() - t0
         if advance:
             self.index_state = bidx.advance_watermarks(
                 self.index_state,
-                jnp.asarray([st.index for st in param_chs], jnp.int32))
-            for st in param_chs:
+                jnp.asarray([st.index for st in ordered], jnp.int32))
+            for st in ordered:
                 st.last_exec_ts = self.now
                 st.last_exec_size = int(self.dataset.size)
                 st.executions += 1
-        # One bulk device->host transfer, then per-channel numpy views: the
-        # per-channel path's int()/slice pattern would cost dozens of device
-        # round-trips here.
-        host = jax.tree.map(np.asarray, result)
-        share = wall / len(param_chs)
-        for i, st in enumerate(param_chs):
-            reports[st.spec.name] = ExecutionReport(
-                channel=st.spec.name, flags=flags,
-                result=jax.tree.map(lambda a: a[i], host),
-                wall_time_s=share,
-                num_results=int(host.num_results[i]),
-                num_notified=int(host.num_notified[i]),
-                scanned=int(host.scanned[i]),
-                broker_bytes=host.broker_bytes[i])
+        # One bulk device->host transfer per join group, then per-channel
+        # numpy views: the per-channel path's int()/slice pattern would cost
+        # dozens of device round-trips here.
+        share = wall / len(ordered)
+        for chs, res in ((param_chs, res_p), (spatial_chs, res_s)):
+            if not chs:
+                continue
+            host = jax.tree.map(np.asarray, res)
+            for i, st in enumerate(chs):
+                overflow = None
+                if deliver:
+                    overflow = self._deliver(
+                        st, jax.tree.map(lambda a, i=i: a[i], res),
+                        flags.aggregation)
+                reports[st.spec.name] = ExecutionReport(
+                    channel=st.spec.name, flags=flags,
+                    result=jax.tree.map(lambda a, i=i: a[i], host),
+                    wall_time_s=share,
+                    num_results=int(host.num_results[i]),
+                    num_notified=int(host.num_notified[i]),
+                    scanned=int(host.scanned[i]),
+                    broker_bytes=host.broker_bytes[i],
+                    overflow=overflow)
         return reports
 
 

@@ -213,11 +213,13 @@ def join_param_targets(ds: R.ActiveDataset, cand: CandidateSet,
 
 def join_spatial(ds: R.ActiveDataset, cand: CandidateSet,
                  user_locations: jnp.ndarray, user_brokers: jnp.ndarray,
-                 radius: float, payload_bytes: int, num_brokers: int,
-                 spatial_fn=None) -> ChannelResult:
+                 radius, payload_bytes, num_brokers: int,
+                 spatial_fn=None, fused: bool = False) -> ChannelResult:
     """spatial_distance(user.location, record.location) < radius join
     (TweetsAboutCrime). ``spatial_fn`` lets the engine swap in the Pallas
-    kernel; default is the pure-jnp oracle."""
+    kernel; default is the pure-jnp oracle. ``fused`` switches broker
+    accounting to masked per-broker reductions (segment_sum serializes under
+    vmap), exactly as in ``join_param_targets``."""
     slots = jnp.maximum(cand.rows, 0) % ds.capacity
     locs = ds.location[slots]                              # (Rm, 2)
     if spatial_fn is None:
@@ -232,11 +234,19 @@ def join_spatial(ds: R.ActiveDataset, cand: CandidateSet,
     num_results = jnp.sum(pair_valid.astype(jnp.int32))
     bids = jnp.where(pair_valid, user_brokers[None, :], num_brokers)
     pair_bytes = jnp.where(pair_valid, payload_bytes, 0).astype(jnp.float32)
-    broker_bytes = jax.ops.segment_sum(pair_bytes.ravel(), bids.ravel(),
-                                       num_segments=num_brokers + 1)[:-1]
-    broker_results = jax.ops.segment_sum(pair_valid.astype(jnp.int32).ravel(),
-                                         bids.ravel(),
-                                         num_segments=num_brokers + 1)[:-1]
+    if fused:
+        broker_bytes = jnp.stack(
+            [jnp.sum(jnp.where(bids == b, pair_bytes, 0.0))
+             for b in range(num_brokers)])
+        broker_results = jnp.stack(
+            [jnp.sum((bids == b).astype(jnp.int32))
+             for b in range(num_brokers)])
+    else:
+        broker_bytes = jax.ops.segment_sum(pair_bytes.ravel(), bids.ravel(),
+                                           num_segments=num_brokers + 1)[:-1]
+        broker_results = jax.ops.segment_sum(pair_valid.astype(jnp.int32).ravel(),
+                                             bids.ravel(),
+                                             num_segments=num_brokers + 1)[:-1]
     return ChannelResult(pair_rows, pair_targets, pair_valid,
                          jnp.where(cand.valid, cand.rows, -1), cand.valid,
                          num_results, num_results, cand.scanned,
@@ -258,15 +268,21 @@ def _eval_channel_row(fields: jnp.ndarray, field_idx: jnp.ndarray,
 
 
 def candidates_full_scan_all(ds: R.ActiveDataset, conds: CompiledConditions,
-                             last_ts: jnp.ndarray, max_rows: int) -> CandidateSet:
+                             last_ts: jnp.ndarray, max_rows: int,
+                             match_fn=None) -> CandidateSet:
     """Stacked 'full' scan: ONE conditionsList pass covers every channel
-    (the per-channel variant re-evaluates its own conjunction per call)."""
+    (the per-channel variant re-evaluates its own conjunction per call).
+    ``match_fn``: optional (N, F) -> (N, C) evaluator (the Pallas
+    ``predicate_filter`` kernel); default is the jnp oracle."""
     cap = ds.capacity
     slots = jnp.arange(cap, dtype=jnp.int32)
     row_ids = _slot_row_ids(ds, slots)
     live = (row_ids >= 0) & (row_ids < ds.size)
     ts = ds.fields[:, R.TIMESTAMP]
-    match = evaluate_conditions(ds.fields, conds)          # (cap, C)
+    if match_fn is None:
+        match = evaluate_conditions(ds.fields, conds)      # (cap, C)
+    else:
+        match = match_fn(ds.fields)
 
     def one(last_ts_c, match_c):
         keep = live & (ts > last_ts_c) & match_c
@@ -277,46 +293,58 @@ def candidates_full_scan_all(ds: R.ActiveDataset, conds: CompiledConditions,
 
 
 def candidates_window_all(ds: R.ActiveDataset, conds: CompiledConditions,
-                          last_size: jnp.ndarray, max_rows: int) -> CandidateSet:
-    """Stacked delta scan: each channel reads its own [last_size, size) window."""
-    field_idx = jnp.asarray(conds.field_idx)               # (C, P)
-    op = jnp.asarray(conds.op)
-    value = jnp.asarray(conds.value)
-
-    def one(last_size_c, fi, o, v):
-        row_ids = last_size_c + jnp.arange(max_rows, dtype=jnp.int32)
-        in_range = row_ids < ds.size
-        fields = ds.fields[row_ids % ds.capacity]
-        keep = in_range & _eval_channel_row(fields, fi, o, v)
-        return CandidateSet(
-            jnp.where(keep, row_ids, -1), keep,
-            jnp.minimum(ds.size - last_size_c, max_rows).astype(jnp.int32))
-
-    return jax.vmap(one)(last_size, field_idx, op, value)
+                          last_size: jnp.ndarray, max_rows: int,
+                          match_fn=None) -> CandidateSet:
+    """Stacked delta scan: each channel reads its own [last_size, size) window.
+    ``match_fn``: optional (C, W, F) -> (C, W) evaluator of channel c's
+    conjunction on its own gathered row block (``predicate_filter_rows``);
+    default is the vmapped jnp oracle."""
+    row_ids = last_size[:, None] + jnp.arange(max_rows, dtype=jnp.int32)[None, :]
+    in_range = row_ids < ds.size                           # (C, W)
+    fields = ds.fields[row_ids % ds.capacity]              # (C, W, F)
+    match = _match_rows(fields, conds, match_fn)
+    keep = in_range & match
+    scanned = jnp.minimum(ds.size - last_size, max_rows).astype(jnp.int32)
+    return CandidateSet(jnp.where(keep, row_ids, -1), keep, scanned)
 
 
 def candidates_trad_index_all(ds: R.ActiveDataset, conds: CompiledConditions,
                               best_pred: jnp.ndarray, last_size: jnp.ndarray,
-                              max_rows: int, max_candidates: int) -> CandidateSet:
+                              max_rows: int, max_candidates: int,
+                              match_fn=None) -> CandidateSet:
     """Stacked traditional-index scan: per channel, the index read is its most
-    selective fixed predicate; the rest evaluate on the candidates."""
+    selective fixed predicate; the rest evaluate on the candidates (via
+    ``match_fn`` with the same (C, N, F) -> (C, N) contract as
+    ``candidates_window_all``)."""
     field_idx = jnp.asarray(conds.field_idx)
     op = jnp.asarray(conds.op)
     value = jnp.asarray(conds.value)
 
-    def one(best_c, last_size_c, fi_row, op_row, val_row):
+    def index_read(best_c, last_size_c, fi_row, op_row, val_row):
         row_ids = last_size_c + jnp.arange(max_rows, dtype=jnp.int32)
         in_range = row_ids < ds.size
         fields = ds.fields[row_ids % ds.capacity]
         idx_hit = apply_op(fields[:, fi_row[best_c]], op_row[best_c],
                            val_row[best_c]) & in_range
         cand_rows, cand_valid = _compact(row_ids, idx_hit, max_candidates)
-        cfields = ds.fields[jnp.maximum(cand_rows, 0) % ds.capacity]
-        keep = cand_valid & _eval_channel_row(cfields, fi_row, op_row, val_row)
-        return CandidateSet(jnp.where(keep, cand_rows, -1), keep,
-                            jnp.sum(idx_hit.astype(jnp.int32)))
+        return cand_rows, cand_valid, jnp.sum(idx_hit.astype(jnp.int32))
 
-    return jax.vmap(one)(best_pred, last_size, field_idx, op, value)
+    cand_rows, cand_valid, scanned = jax.vmap(index_read)(
+        best_pred, last_size, field_idx, op, value)
+    cfields = ds.fields[jnp.maximum(cand_rows, 0) % ds.capacity]  # (C, Rc, F)
+    keep = cand_valid & _match_rows(cfields, conds, match_fn)
+    return CandidateSet(jnp.where(keep, cand_rows, -1), keep, scanned)
+
+
+def _match_rows(fields: jnp.ndarray, conds: CompiledConditions,
+                match_fn) -> jnp.ndarray:
+    """(C, N, F) stacked row blocks -> (C, N): channel c's conjunction on its
+    own block, via ``match_fn`` (Pallas) or the vmapped jnp oracle."""
+    if match_fn is not None:
+        return match_fn(fields)
+    return jax.vmap(_eval_channel_row)(fields, jnp.asarray(conds.field_idx),
+                                       jnp.asarray(conds.op),
+                                       jnp.asarray(conds.value))
 
 
 def candidates_bad_index_all(index: bidx.BADIndexState, channels: jnp.ndarray,
@@ -351,6 +379,30 @@ def join_param_targets_all(ds: R.ActiveDataset, cand: CandidateSet,
     um = up_mask if up_mask is not None else jnp.zeros(
         (cand.rows.shape[0], 1), dtype=bool)
     return jax.vmap(one)(cand, targets, um, param_field, payload_bytes, domain)
+
+
+def join_spatial_all(ds: R.ActiveDataset, cand: CandidateSet,
+                     user_locations: jnp.ndarray, user_brokers: jnp.ndarray,
+                     radius: jnp.ndarray, payload_bytes: jnp.ndarray,
+                     num_brokers: int, spatial_fn=None) -> ChannelResult:
+    """vmapped ``join_spatial`` over the channel axis (TweetsAboutCrime at
+    fused scale).
+
+    ``cand`` carries a leading C axis; ``user_locations`` (C, U, 2) /
+    ``user_brokers`` (C, U) are the stacked per-channel user sets,
+    shape-bucketed by the engine with far-sentinel padding (padded users can
+    never fall inside any radius); ``radius`` / ``payload_bytes`` are
+    per-channel (C,) scalars. ``spatial_fn`` (e.g. the Pallas ``spatial_match``
+    wrapper) is batched by vmap — pallas_call lowers the channel axis onto a
+    leading grid dimension, so the whole join stays one fused device call.
+    """
+
+    def one(cand_c, locs_c, brokers_c, radius_c, payload_c):
+        return join_spatial(ds, cand_c, locs_c, brokers_c, radius_c,
+                            payload_c, num_brokers, spatial_fn, fused=True)
+
+    return jax.vmap(one)(cand, user_locations, user_brokers, radius,
+                         payload_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,11 @@ import jax.numpy as jnp
 from repro.kernels.spatial_match.kernel import (DEFAULT_TR, DEFAULT_TU,
                                                 spatial_match_kernel)
 
-_FAR = 1e30
+# Far sentinel for padded rows/users: coordinates so distant that dist^2
+# overflows float32 to +inf, which is never < radius^2. The engine's stacked
+# user sets reuse the same value for their shape-bucket padding.
+FAR = 1e30
+_FAR = FAR
 
 
 def _on_tpu() -> bool:
@@ -21,7 +25,16 @@ def _on_tpu() -> bool:
 
 def spatial_match(tweet_locs: jnp.ndarray, user_locs: jnp.ndarray,
                   radius) -> jnp.ndarray:
-    """(R, 2) x (U, 2) -> (R, U) bool; drop-in for ref.spatial_match."""
+    """(R, 2) x (U, 2) -> (R, U) bool; drop-in for ref.spatial_match.
+
+    Also accepts stacked (C, R, 2) x (C, U, 2) inputs with per-channel radii
+    (C,), vmapping the kernel over the channel axis (the fused executor's
+    layout — pallas_call lowers the batch onto a leading grid dimension).
+    """
+    if tweet_locs.ndim == 3:
+        radii = jnp.broadcast_to(jnp.asarray(radius, jnp.float32),
+                                 (tweet_locs.shape[0],))
+        return jax.vmap(spatial_match)(tweet_locs, user_locs, radii)
     return _padded(tweet_locs, user_locs,
                    jnp.asarray(radius, jnp.float32) ** 2,
                    interpret=not _on_tpu())

@@ -14,3 +14,72 @@ def make_tweets(rng, n, t0=1, match_drugs=0.1):
     fields = np.asarray(batch.fields).copy()
     fields = drug_tweak(fields, rng, match_drugs)
     return R.RecordBatch.from_numpy(fields, np.asarray(batch.location))
+
+
+# --- shared broker-buffer fuzz helpers (test_property + test_multi_channel;
+# --- they cannot import each other: test_property importorskips hypothesis)
+
+
+def random_broker_result(rng, n_rows, max_t, n_groups, cap):
+    """Random ChannelResult + group-sID table: arbitrary validity mask,
+    arbitrary targets, groups with 1..cap members (-1 padded). Also returns
+    the expected delivery order (valid pairs in ravel order)."""
+    import jax.numpy as jnp
+    from repro.core.plans import ChannelResult
+    valid = rng.random((n_rows, max_t)) < 0.5
+    tgts = rng.integers(0, n_groups, (n_rows, max_t)).astype(np.int32)
+    rows = rng.integers(0, 1000, (n_rows, max_t)).astype(np.int32)
+    counts = rng.integers(1, cap + 1, n_groups)
+    group_sids = np.full((n_groups, cap), -1, np.int32)
+    for g in range(n_groups):
+        group_sids[g, :counts[g]] = rng.integers(0, 10000, counts[g])
+    z = jnp.zeros((), jnp.int32)
+    res = ChannelResult(jnp.asarray(rows), jnp.asarray(tgts),
+                        jnp.asarray(valid), jnp.asarray(rows[:, 0]),
+                        jnp.asarray(valid[:, 0]), z, z, z,
+                        jnp.zeros((1,), jnp.float32),
+                        jnp.zeros((1,), jnp.int32))
+    flat = valid.ravel()
+    return res, group_sids, rows.ravel()[flat], tgts.ravel()[flat]
+
+
+def check_pack_invariants(res, group_sids, exp_rows, exp_tgts, max_pairs):
+    """Conservation (delivered + overflow == valid pairs), exact in-order
+    prefix, header member counts, and no overflow pair scattered over the
+    last slot (the pre-PR-1 clamping bug aliased overflow onto the tail)."""
+    import jax.numpy as jnp
+    from repro.core.broker import pack_payloads
+    out, delivered, overflow = pack_payloads(res, jnp.asarray(group_sids),
+                                             payload_words=2,
+                                             max_pairs=max_pairs)
+    total = exp_rows.size
+    d = int(delivered)
+    assert d + int(overflow) == total
+    assert d == min(total, max_pairs)
+    got = np.asarray(out)
+    assert got.shape[0] == max_pairs
+    np.testing.assert_array_equal(got[:d, 0], exp_rows[:d])
+    np.testing.assert_array_equal(got[:d, 1], exp_tgts[:d])
+    members = (group_sids[exp_tgts[:d]] >= 0).sum(axis=1) if d else []
+    np.testing.assert_array_equal(got[:d, 2], members)
+    assert (got[d:] == 0).all()
+
+
+def check_fanout_invariants(res, group_sids, exp_tgts, max_notify):
+    """Conservation over member sIDs, exact in-order prefix, every delivered
+    sID exists in the group table (none invented from -1 padding), tail
+    stays -1 (no last-slot aliasing)."""
+    import jax.numpy as jnp
+    from repro.core.broker import fanout_sids
+    exp_sids = group_sids[exp_tgts]
+    exp_sids = exp_sids[exp_sids >= 0]
+    out, delivered, overflow = fanout_sids(res, jnp.asarray(group_sids),
+                                           max_notify=max_notify)
+    d = int(delivered)
+    assert d + int(overflow) == exp_sids.size
+    assert d == min(exp_sids.size, max_notify)
+    got = np.asarray(out)
+    assert got.shape[0] == max_notify
+    np.testing.assert_array_equal(got[:d], exp_sids[:d])
+    assert (got[d:] == -1).all()
+    assert set(got[:d].tolist()) <= set(group_sids[group_sids >= 0].tolist())

@@ -9,30 +9,33 @@ from repro.core.broker import fanout_sids, pack_payloads
 from repro.core.channel import (ChannelSpec, most_threatening_tweets,
                                 trending_tweets_in_country, tweets_about_crime,
                                 tweets_about_drugs)
-from repro.core.engine import BADEngine
+from repro.core.engine import BADEngine, DeliveryStats
 from repro.core.plans import ChannelResult, ExecutionFlags
 from repro.core.predicates import Predicate
 
 from conftest import make_tweets
 
 
-def _small_engine(rng, with_spatial=True):
+def _small_engine(rng, with_spatial=True, with_param=True, use_pallas=False):
     eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
                     max_window=1024, max_candidates=256,
-                    brokers=("Broker1", "Broker2"))
-    eng.create_channel(tweets_about_drugs())
-    eng.create_channel(most_threatening_tweets())
-    eng.create_channel(trending_tweets_in_country(0, "EnglishTrending"))
+                    brokers=("Broker1", "Broker2"), use_pallas=use_pallas)
+    if with_param:
+        eng.create_channel(tweets_about_drugs())
+        eng.create_channel(most_threatening_tweets())
+        eng.create_channel(trending_tweets_in_country(0, "EnglishTrending"))
     if with_spatial:
         eng.create_channel(tweets_about_crime(3))
         eng.set_user_locations(
-            (rng.normal(size=(40, 2)) * 30).astype(np.float32))
-    eng.subscribe_bulk("TweetsAboutDrugs",
-                       rng.integers(0, 50, 300), rng.integers(0, 2, 300))
-    eng.subscribe_bulk("MostThreateningTweets",
-                       rng.integers(0, 50, 200), rng.integers(0, 2, 200))
-    eng.subscribe_bulk("EnglishTrending",
-                       rng.integers(0, 200, 250), rng.integers(0, 2, 250))
+            (rng.normal(size=(40, 2)) * 30).astype(np.float32),
+            rng.integers(0, 2, 40))
+    if with_param:
+        eng.subscribe_bulk("TweetsAboutDrugs",
+                           rng.integers(0, 50, 300), rng.integers(0, 2, 300))
+        eng.subscribe_bulk("MostThreateningTweets",
+                           rng.integers(0, 50, 200), rng.integers(0, 2, 200))
+        eng.subscribe_bulk("EnglishTrending",
+                           rng.integers(0, 200, 250), rng.integers(0, 2, 250))
     eng.ingest(make_tweets(rng, 700))
     return eng
 
@@ -42,15 +45,15 @@ ALL_MODE_FLAGS = [
     for m in ("full", "window", "trad_index", "bad_index")
     for a in (False, True)
 ]
+MODE_ONLY_FLAGS = [ExecutionFlags(scan_mode=m)
+                   for m in ("full", "window", "trad_index", "bad_index")]
 
 
-@pytest.mark.parametrize("flags", ALL_MODE_FLAGS,
-                         ids=lambda f: f"{f.scan_mode}"
-                         f"{'+agg+push' if f.aggregation else ''}")
-def test_execute_all_matches_sequential(rng, flags):
-    """execute_all == per-channel execute_channel on every reported count,
-    for >= 3 param channels (different domains/payloads) + one spatial."""
-    eng = _small_engine(rng)
+def _flag_id(f):
+    return f"{f.scan_mode}{'+agg+push' if f.aggregation else ''}"
+
+
+def _assert_fused_matches_sequential(eng, flags):
     seq = {name: eng.execute_channel(name, flags, advance=False, timed=False)
            for name in eng.channels}
     fused = eng.execute_all(flags, advance=False, timed=False)
@@ -61,6 +64,31 @@ def test_execute_all_matches_sequential(rng, flags):
         assert fused[name].scanned == seq[name].scanned, name
         np.testing.assert_allclose(fused[name].broker_bytes,
                                    seq[name].broker_bytes, err_msg=name)
+    return fused
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["oracle", "pallas"])
+@pytest.mark.parametrize("flags", ALL_MODE_FLAGS, ids=_flag_id)
+def test_execute_all_matches_sequential(rng, flags, use_pallas):
+    """execute_all == per-channel execute_channel on every reported count,
+    for >= 3 param channels (different domains/payloads) + one spatial —
+    with both the jnp oracle and the Pallas kernels behind the fused plan."""
+    eng = _small_engine(rng, use_pallas=use_pallas)
+    fused = _assert_fused_matches_sequential(eng, flags)
+    assert fused["TweetsAboutCrime3"].num_results > 0  # spatial is exercised
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["oracle", "pallas"])
+@pytest.mark.parametrize("flags", MODE_ONLY_FLAGS, ids=_flag_id)
+def test_execute_all_spatial_only_engine(rng, flags, use_pallas):
+    """A spatial-only engine runs entirely through the fused spatial join
+    (empty param group) and still matches the per-channel loop."""
+    eng = _small_engine(rng, with_param=False, use_pallas=use_pallas)
+    fused = _assert_fused_matches_sequential(eng, flags)
+    assert set(fused) == {"TweetsAboutCrime3"}
+    assert fused["TweetsAboutCrime3"].num_results > 0
 
 
 def test_execute_all_advances_all_watermarks(rng):
@@ -203,6 +231,105 @@ def test_execute_all_fresh_targets_after_recreate(rng):
     assert rep.num_results == 0          # nobody subscribes to state 5 anymore
     seq = eng.execute_channel("TweetsAboutDrugs", flags, advance=False)
     assert seq.num_results == 0
+
+
+def _spatial_spec(name, radius):
+    return ChannelSpec(name, (Predicate.parse(R.WEAPON_MENTIONED, "==", 1),),
+                       join="spatial", spatial_radius=radius)
+
+
+def _weapon_batch(n, ts, loc):
+    fields = np.zeros((n, 10), dtype=np.int32)
+    fields[:, R.WEAPON_MENTIONED] = 1
+    fields[:, R.TIMESTAMP] = ts
+    locs = np.full((n, 2), loc, dtype=np.float32)
+    return R.RecordBatch.from_numpy(fields, locs)
+
+
+def test_execute_all_fresh_spatial_plan_after_recreate(rng):
+    """Drop + re-create a same-named spatial channel with a different radius:
+    execute_all must compile a fresh fused plan (radius lives in the spec),
+    never serving the stale one."""
+    eng = BADEngine(dataset_capacity=1024, index_capacity=512,
+                    max_window=512, max_candidates=128)
+    eng.create_channel(_spatial_spec("Crime", radius=1000.0))
+    eng.set_user_locations(np.zeros((4, 2), dtype=np.float32))
+    eng.ingest(_weapon_batch(6, ts=10, loc=5.0))
+    flags = ExecutionFlags(scan_mode="window")
+    wide = eng.execute_all(flags, timed=False)["Crime"]
+    assert wide.num_results == 6 * 4            # radius 1000 covers everyone
+    eng.drop_channel("Crime")
+    eng.create_channel(_spatial_spec("Crime", radius=0.5))
+    eng.ingest(_weapon_batch(6, ts=20, loc=5.0))  # 5.0 away from every user
+    narrow = eng.execute_all(flags, advance=False, timed=False)["Crime"]
+    assert narrow.num_results == 0              # stale radius would report 24
+    seq = eng.execute_channel("Crime", flags, advance=False, timed=False)
+    assert seq.num_results == narrow.num_results == 0
+
+
+def test_execute_all_fresh_user_targets_after_relocation(rng):
+    """set_user_locations between fused executions must invalidate the
+    stacked user-set cache (version bump), not serve stale coordinates."""
+    eng = BADEngine(dataset_capacity=1024, index_capacity=512,
+                    max_window=512, max_candidates=128)
+    eng.create_channel(_spatial_spec("Crime", radius=1.0))
+    eng.set_user_locations(np.full((3, 2), 5.0, dtype=np.float32))
+    flags = ExecutionFlags(scan_mode="window")
+    eng.ingest(_weapon_batch(4, ts=10, loc=5.0))
+    near = eng.execute_all(flags, advance=False, timed=False)["Crime"]
+    assert near.num_results == 4 * 3
+    eng.set_user_locations(np.full((3, 2), 500.0, dtype=np.float32))
+    far = eng.execute_all(flags, advance=False, timed=False)["Crime"]
+    assert far.num_results == 0                 # stale users would report 12
+
+
+def test_execution_report_surfaces_overflow(rng):
+    """deliver=True runs broker packing and surfaces drop counts:
+    delivered + overflow == produced for both stages, identically between
+    the fused and per-channel paths; deliver=False leaves overflow None."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1", "B2"), group_cap=8,
+                    max_deliver_pairs=16, max_notify=32)
+    eng.create_channel(tweets_about_drugs())
+    eng.create_channel(tweets_about_crime(1))
+    eng.set_user_locations((rng.normal(size=(30, 2)) * 30).astype(np.float32))
+    eng.subscribe_bulk("TweetsAboutDrugs",
+                       rng.integers(0, 50, 200), rng.integers(0, 2, 200))
+    eng.ingest(make_tweets(rng, 500, match_drugs=0.3))
+    for agg in (False, True):
+        flags = ExecutionFlags(scan_mode="window", aggregation=agg,
+                               param_pushdown=agg)
+        fused = eng.execute_all(flags, advance=False, timed=False,
+                                deliver=True)
+        for name in eng.channels:
+            rep = eng.execute_channel(name, flags, advance=False, timed=False,
+                                      deliver=True)
+            o = rep.overflow
+            assert isinstance(o, DeliveryStats)
+            assert o.delivered_pairs + o.overflow_pairs == rep.num_results
+            assert o.delivered_sids + o.overflow_sids == rep.num_notified
+            assert o.overflow > 0               # caps are tiny: drops happen
+            assert fused[name].overflow == o
+        assert eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                                   timed=False).overflow is None
+
+
+def test_broker_buffers_random_invariants(rng):
+    """Seeded mini-fuzz of pack_payloads/fanout_sids: the hypothesis suite in
+    test_property.py runs the SAME shared checkers (conftest) when hypothesis
+    is installed; this keeps the invariants exercised without it."""
+    from conftest import (check_fanout_invariants, check_pack_invariants,
+                          random_broker_result)
+    for trial in range(25):
+        res, group_sids, exp_rows, exp_tgts = random_broker_result(
+            rng, n_rows=int(rng.integers(1, 30)),
+            max_t=int(rng.integers(1, 5)),
+            n_groups=int(rng.integers(1, 6)), cap=int(rng.integers(1, 4)))
+        check_pack_invariants(res, group_sids, exp_rows, exp_tgts,
+                              max_pairs=int(rng.integers(1, 12)))
+        check_fanout_invariants(res, group_sids, exp_tgts,
+                                max_notify=int(rng.integers(1, 16)))
 
 
 def test_subscribe_bulk_rejects_out_of_domain_atomically():

@@ -12,6 +12,9 @@ from repro.core.subscriptions import Aggregator, SubscriptionTable, aggregate
 from repro.kernels.flash_decode import ref as fd_ref
 from repro.kernels.predicate_filter import ops as pf_ops
 
+from conftest import (check_fanout_invariants, check_pack_invariants,
+                      random_broker_result)
+
 SETTINGS = dict(max_examples=25, deadline=None)
 
 
@@ -98,6 +101,34 @@ def test_bad_index_membership_invariant(mask):
     got = rows[np.asarray(valid)].tolist()
     want = [i for i, m in enumerate(mask) if m]
     assert got == want
+
+
+broker_shapes = (st.integers(0, 2 ** 31 - 1), st.integers(1, 40),
+                 st.integers(1, 5), st.integers(1, 8), st.integers(1, 4))
+
+
+@given(*broker_shapes, st.integers(1, 16))
+@settings(**SETTINGS)
+def test_pack_payloads_invariants(seed, n_rows, max_t, n_groups, cap,
+                                  max_pairs):
+    """Conservation (delivered + overflow == valid pairs), exact in-order
+    prefix, and no overflow pair scattered over the last slot (the pre-PR-1
+    clamping bug aliased overflowing pairs onto slot max_pairs - 1)."""
+    res, group_sids, exp_rows, exp_tgts = random_broker_result(
+        np.random.default_rng(seed), n_rows, max_t, n_groups, cap)
+    check_pack_invariants(res, group_sids, exp_rows, exp_tgts, max_pairs)
+
+
+@given(*broker_shapes, st.integers(1, 24))
+@settings(**SETTINGS)
+def test_fanout_sids_invariants(seed, n_rows, max_t, n_groups, cap,
+                                max_notify):
+    """Conservation over member sIDs, exact in-order prefix, every delivered
+    sID exists in the group table (none invented from padding), tail stays
+    -1 (no last-slot aliasing)."""
+    res, group_sids, _, exp_tgts = random_broker_result(
+        np.random.default_rng(seed), n_rows, max_t, n_groups, cap)
+    check_fanout_invariants(res, group_sids, exp_tgts, max_notify)
 
 
 @given(st.integers(1, 6), st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
