@@ -13,7 +13,7 @@ from repro.core.channel import tweets_about_crime
 from repro.core.engine import BADEngine
 from repro.core.plans import ExecutionFlags
 from repro.data.synthetic import tweet_batch
-from benchmarks.common import emit, exec_time
+from benchmarks.common import emit, exec_time, scale
 
 
 def run(rng) -> None:
@@ -21,14 +21,15 @@ def run(rng) -> None:
         eng = BADEngine(dataset_capacity=1 << 16, index_capacity=1 << 15,
                         max_window=1 << 15, max_candidates=1 << 14)
         eng.create_channel(tweets_about_crime(n_conds))
-        users = (rng.normal(size=(2000, 2)) * 60).astype(np.float32)
+        users = (rng.normal(size=(scale(2000), 2)) * 60).astype(np.float32)
         eng.set_user_locations(users)
-        eng.ingest(tweet_batch(rng, 16_384, t0=100))
+        n_tweets = scale(16_384, 1024)
+        eng.ingest(tweet_batch(rng, n_tweets, t0=100))
         name = f"TweetsAboutCrime{n_conds}"
         t_trad, i_t = exec_time(eng, name, ExecutionFlags(scan_mode="trad_index"))
         t_bad, i_b = exec_time(eng, name, ExecutionFlags(scan_mode="bad_index"))
         assert i_t["results"] == i_b["results"]
-        sel = i_b["scanned"] / 16_384
+        sel = i_b["scanned"] / n_tweets
         emit(f"fig16/conds{n_conds}/trad_index", t_trad,
              f"candidates={i_t['scanned']}")
         emit(f"fig16/conds{n_conds}/bad_index", t_bad,

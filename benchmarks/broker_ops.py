@@ -1,28 +1,45 @@
 """Table 2: broker receive / convert-to-wire / send-out timings,
-original vs aggregated result layout."""
+original vs aggregated result layout — plus the fused-delivery extensions:
+
+  fused_delivery -- the convert+send stages for C channels as ONE jitted
+      ``deliver_all`` call (vmapped pack/fanout, one-hot per-broker
+      accounting, flat spill capture) vs the per-channel host loop calling
+      ``pack_payloads``/``fanout_sids`` C times. Acceptance target: fused
+      wins at >= 4 channels.
+  spill_drain    -- forced overflow through tiny delivery buffers, then
+      ``drain_spilled()`` rounds until the queue is empty: the cost of making
+      overflow survivable instead of silently dropping it.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.broker import fanout_sids, pack_payloads
+from repro.core.broker import (broker_traffic_summary, deliver_all,
+                               fanout_sids, pack_payloads)
+from repro.core.engine import BADEngine
+from repro.core.channel import tweets_about_drugs, trending_tweets_in_country
 from repro.core.plans import ExecutionFlags
-from benchmarks.common import build_drug_engine, emit, timeit
+from benchmarks.common import build_drug_engine, emit, scale, timeit
+
+LANGS = ["En", "Pt", "Es", "Ar", "Ja", "De", "Fr"]
 
 
-def run(rng) -> None:
+def bench_table2(rng) -> None:
     # group_cap ~ per-parameter population: the wire format holds the
     # actual sID lists (the paper's variable-length records), not a
     # frame-sized pad
-    eng = build_drug_engine(rng, n_subs=8000, n_new=8192,
+    eng = build_drug_engine(rng, n_subs=scale(8000), n_new=scale(8192),
                             match_rate=0.05, states=10, preload=0,
                             group_cap=512)
     rows = {}
     for name, agg in (("original", False), ("optimized", True)):
         flags = ExecutionFlags(scan_mode="bad_index", aggregation=agg)
-        rep = eng.execute_channel("TweetsAboutDrugs", flags, advance=False)
+        rep = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                                  deliver=True)
         sids = eng.group_sids_array("TweetsAboutDrugs", agg)
 
         # receive: platform -> broker transfer (device->host of the payloads)
@@ -37,14 +54,121 @@ def run(rng) -> None:
         t_send = timeit(lambda: fanout_sids(rep.result, sids,
                                             max_notify=1 << 15)[0])
         rows[name] = (t_recv, t_conv, t_send)
+        # delivery accounting folded into the traffic summary: drops (and
+        # spill-recoverable drops) are first-class, not just byte counts
+        summ = broker_traffic_summary(rep.result, rep.overflow)
         emit(f"table2/{name}/receive", t_recv,
-             f"rows={int(count)};bytes={rep.broker_bytes.sum():.0f}")
-        emit(f"table2/{name}/convert", t_conv, f"rows={int(count)}")
-        emit(f"table2/{name}/send", t_send, f"notified={rep.num_notified}")
+             f"rows={int(count)};bytes={summ['total_bytes']:.0f}")
+        emit(f"table2/{name}/convert", t_conv,
+             f"rows={int(count)};delivered={summ['delivered_pairs']};"
+             f"spilled={summ['spilled_pairs']};dropped={summ['dropped_pairs']}")
+        emit(f"table2/{name}/send", t_send,
+             f"notified={rep.num_notified};delivered={summ['delivered_sids']};"
+             f"spilled={summ['spilled_sids']};dropped={summ['dropped_sids']}")
+        eng.spill.clear()
     o, p = rows["original"], rows["optimized"]
     emit("table2/ratio", 0.0,
          f"recv_x{o[0]/max(p[0],1e-9):.2f};conv_x{o[1]/max(p[1],1e-9):.2f};"
          f"send_x{o[2]/max(p[2],1e-9):.2f} (paper: 5.1/1.9/1.0)")
+
+
+def _delivery_engine(rng, n_channels: int, n_subs: int) -> BADEngine:
+    eng = BADEngine(dataset_capacity=1 << 16, index_capacity=1 << 14,
+                    max_window=1 << 14, max_candidates=1 << 11,
+                    brokers=("B1", "B2", "B3", "B4"), group_cap=64,
+                    max_deliver_pairs=1 << 11, max_notify=1 << 13)
+    specs = [tweets_about_drugs()] + [
+        trending_tweets_in_country(i, f"{LANGS[i]}Trending")
+        for i in range(n_channels - 1)]
+    for spec in specs:
+        eng.create_channel(spec)
+        eng.subscribe_bulk(spec.name,
+                           rng.integers(0, spec.param_domain, n_subs),
+                           rng.integers(0, 4, n_subs))
+    from repro.data.synthetic import tweet_batch
+    eng.ingest(tweet_batch(rng, scale(16_384), t0=1))
+    return eng
+
+
+def bench_fused_delivery(rng, n_channels: int, n_subs: int = None) -> None:
+    """Convert+send for C channels: one fused jitted ``deliver_all`` vs the
+    per-channel host loop (C x pack_payloads + C x fanout_sids)."""
+    n_subs = scale(20_000, 1024) if n_subs is None else n_subs
+    eng = _delivery_engine(rng, n_channels, n_subs)
+    flags = ExecutionFlags(scan_mode="bad_index", aggregation=True)
+    reps = eng.execute_all(flags, advance=False, timed=False)
+    chs = sorted(eng.channels.values(), key=lambda s: s.index)
+    # stacked inputs exactly as execute_all(deliver=True) binds them
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[reps[st.spec.name].result for st in chs])
+    stacked = jax.tree.map(jnp.asarray, stacked)
+    sids_all = eng._stacked_sids(chs, aggregated=True)
+    tb = eng._stacked_inputs(chs, True)[0].brokers
+    pw, mp, mn, sc = (eng.deliver_payload_words, eng.max_deliver_pairs,
+                      eng.max_notify, eng.max_spill)
+    nb = eng.brokers.num_brokers
+    fused_fn = jax.jit(lambda res, sids, tb: deliver_all(
+        res, sids, pw, mp, mn, sc, target_brokers=tb, num_brokers=nb))
+
+    per_sids = [eng.group_sids_array(st.spec.name, True) for st in chs]
+
+    def host_loop():
+        out = []
+        for st, sids in zip(chs, per_sids):
+            res = reps[st.spec.name].result
+            out.append(pack_payloads(res, sids, pw, mp)[0])
+            out.append(fanout_sids(res, sids, mn)[0])
+        return out
+
+    def fused():
+        return fused_fn(stacked, sids_all, tb)
+
+    d = fused()   # warm + parity: fused delivered == per-channel delivered
+    for i, (st, sids) in enumerate(zip(chs, per_sids)):
+        _, dlv, _ = pack_payloads(reps[st.spec.name].result, sids, pw, mp)
+        assert int(d.pack.delivered[i]) == int(dlv), st.spec.name
+    t_loop = timeit(host_loop)
+    t_fused = timeit(fused)
+    total = int(np.asarray(d.pack.produced).sum())
+    name = f"table2/fused_delivery/c{n_channels}"
+    emit(f"{name}/per_channel_loop", t_loop, f"pairs={total}")
+    emit(f"{name}/fused", t_fused, f"pairs={total}")
+    emit(f"{name}/speedup", 0.0,
+         f"x{t_loop / max(t_fused, 1e-9):.2f} (target >1 at >= 4 channels)")
+
+
+def bench_spill_drain(rng) -> None:
+    """Forced overflow -> SpillQueue -> drain_spilled() rounds to empty."""
+    eng = build_drug_engine(rng, n_subs=scale(8000), n_new=scale(8192),
+                            match_rate=0.05, states=10, preload=0,
+                            group_cap=64)
+    # tiny delivery buffers force most of the tick into the spill queue
+    eng.max_deliver_pairs, eng.max_notify = 16, 64
+    eng._deliver_jit = None
+    flags = ExecutionFlags(scan_mode="bad_index", aggregation=True)
+    rep = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                              timed=False, deliver=True)
+    o = rep.overflow
+    t0 = time.perf_counter()
+    rounds = redelivered = 0
+    while eng.spill.pending_pairs() + eng.spill.pending_sids() > 0:
+        rounds += 1
+        for dr in eng.drain_spilled().values():
+            redelivered += dr.stats.delivered_pairs + dr.stats.delivered_sids
+    t_drain = time.perf_counter() - t0
+    emit("table2/spill_drain/tick", 0.0,
+         f"delivered={o.delivered_pairs + o.delivered_sids};"
+         f"spilled={o.spilled_pairs + o.spilled_sids};"
+         f"dropped={o.dropped_pairs + o.dropped_sids}")
+    emit("table2/spill_drain/drain_to_empty", t_drain,
+         f"rounds={rounds};redelivered={redelivered}")
+
+
+def run(rng) -> None:
+    bench_table2(rng)
+    for n in (2, 4, 7):
+        bench_fused_delivery(rng, n)
+    bench_spill_drain(rng)
 
 
 if __name__ == "__main__":

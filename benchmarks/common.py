@@ -1,4 +1,10 @@
-"""Shared benchmark scaffolding: CPU-scaled BAD workloads + timing."""
+"""Shared benchmark scaffolding: CPU-scaled BAD workloads + timing.
+
+Smoke mode (``benchmarks.run --smoke`` / ``set_smoke()``) shrinks every
+suite's sizes through ``scale()`` so the whole driver finishes in CI minutes;
+``emit`` records each measurement into ``RESULTS`` so the driver can dump a
+machine-readable ``BENCH_*.json`` artifact alongside the CSV stream.
+"""
 from __future__ import annotations
 
 import time
@@ -20,6 +26,24 @@ N_TWEETS_PERIOD = 32_768
 DATASET_CAP = 1 << 17
 PRELOAD = 60_000
 
+# smoke mode: CI-sized runs (same structure, ~16x smaller counts)
+SMOKE = False
+# every emit() lands here: [{"name", "us_per_call", "derived"}, ...]
+RESULTS: List[Dict[str, object]] = []
+
+
+def set_smoke() -> None:
+    """Shrink the shared workload constants for CI smoke runs. Suites route
+    their own hardcoded sizes through ``scale()``."""
+    global SMOKE, N_SUBS, N_TWEETS_PERIOD, PRELOAD
+    SMOKE = True
+    N_SUBS, N_TWEETS_PERIOD, PRELOAD = 3_000, 2_048, 4_096
+
+
+def scale(n: int, floor: int = 256) -> int:
+    """A suite-declared size, shrunk ~16x in smoke mode (never below floor)."""
+    return n if not SMOKE else max(floor, n // 16)
+
 
 def timeit(fn: Callable, *args, repeats: int = 3) -> float:
     fn(*args)                                    # warm (trace+compile)
@@ -32,9 +56,13 @@ def timeit(fn: Callable, *args, repeats: int = 3) -> float:
     return best
 
 
-def build_drug_engine(rng, n_subs: int = N_SUBS, n_new: int = N_TWEETS_PERIOD,
+def build_drug_engine(rng, n_subs: int = None, n_new: int = None,
                       match_rate: float = 0.02, group_cap=None,
-                      states: int = 50, preload: int = PRELOAD) -> BADEngine:
+                      states: int = 50, preload: int = None) -> BADEngine:
+    # size defaults resolve at CALL time so set_smoke() applies to them
+    n_subs = N_SUBS if n_subs is None else n_subs
+    n_new = N_TWEETS_PERIOD if n_new is None else n_new
+    preload = PRELOAD if preload is None else preload
     # engines built repeatedly inside a sweep must see IDENTICAL data
     rng = np.random.default_rng(4242)
     eng = BADEngine(dataset_capacity=DATASET_CAP, index_capacity=1 << 15,
@@ -69,4 +97,6 @@ def exec_time(eng: BADEngine, channel: str, flags: ExecutionFlags,
 
 
 def emit(name: str, seconds: float, derived: str) -> None:
+    RESULTS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                    "derived": derived})
     print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

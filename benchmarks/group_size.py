@@ -12,18 +12,20 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.plans import ExecutionFlags
-from benchmarks.common import build_drug_engine, emit, exec_time
+from benchmarks.common import build_drug_engine, emit, exec_time, scale
 
 CA = 4  # encoded state id
-N_SUBS = 16_384
 
 
 def run(rng) -> None:
-    caps = [N_SUBS, N_SUBS // 4, N_SUBS // 16, 2048, 512, 128, 32, 8, 1]
+    n_subs = scale(16_384, 1024)
+    caps = sorted({n_subs, n_subs // 4, n_subs // 16, 2048, 512, 128, 32,
+                   8, 1} & set(range(1, n_subs + 1)) | {n_subs},
+                  reverse=True)
     flags = ExecutionFlags(scan_mode="bad_index", aggregation=True)
     times = {}
     for cap in caps:
-        eng = build_drug_engine(rng, n_subs=N_SUBS, n_new=8192,
+        eng = build_drug_engine(rng, n_subs=n_subs, n_new=scale(8192, 1024),
                                 match_rate=0.02, group_cap=cap, states=1,
                                 preload=0)
         t, info = exec_time(eng, "TweetsAboutDrugs", flags)

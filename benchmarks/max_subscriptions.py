@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.plans import ExecutionFlags
-from benchmarks.common import build_drug_engine, emit, exec_time
+from benchmarks.common import build_drug_engine, emit, exec_time, scale
 
 DEADLINE_S = 0.250   # CPU-scaled period budget
 COMBOS = {
@@ -24,8 +24,9 @@ COMBOS = {
 def max_subs(rng, flags) -> int:
     n = 2048
     best = 0
-    while n <= 262_144:
-        eng = build_drug_engine(rng, n_subs=n, n_new=8192, match_rate=0.02,
+    while n <= scale(262_144, 8192):
+        eng = build_drug_engine(rng, n_subs=n, n_new=scale(8192, 1024),
+                                match_rate=0.02,
                                 preload=0)
         t, _ = exec_time(eng, "TweetsAboutDrugs", flags, repeats=2)
         if t > DEADLINE_S:

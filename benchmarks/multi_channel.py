@@ -24,9 +24,8 @@ from repro.core.channel import (most_threatening_tweets, tweets_about_crime,
 from repro.core.engine import BADEngine
 from repro.core.plans import ExecutionFlags
 from repro.data.synthetic import tweet_batch
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, scale, timeit
 
-N_BULK = 100_000
 LANGS = ["En", "Pt", "Es", "Ar", "Ja"]
 
 
@@ -49,8 +48,9 @@ def _fresh_drug_engine() -> BADEngine:
 
 
 def bench_bulk_load(rng, repeats: int = 3) -> None:
-    params = rng.integers(0, 50, N_BULK).astype(np.int32)
-    brokers = rng.integers(0, 4, N_BULK).astype(np.int32)
+    n_bulk = scale(100_000, 4096)
+    params = rng.integers(0, 50, n_bulk).astype(np.int32)
+    brokers = rng.integers(0, 4, n_bulk).astype(np.int32)
     t_replay = t_bulk = float("inf")
     for _ in range(repeats):
         eng = _fresh_drug_engine()
@@ -64,11 +64,11 @@ def bench_bulk_load(rng, repeats: int = 3) -> None:
         eng.subscribe_bulk("TweetsAboutDrugs", params, brokers)
         t_bulk = min(t_bulk, time.perf_counter() - t0)
         g_bulk = eng.channels["TweetsAboutDrugs"].aggregator.build()
-    assert g_bulk.num_subscriptions == g_replay.num_subscriptions == N_BULK
+    assert g_bulk.num_subscriptions == g_replay.num_subscriptions == n_bulk
     assert g_bulk.num_groups == g_replay.num_groups
-    emit("multi_channel/bulk_load/replay", t_replay, f"subs={N_BULK}")
+    emit("multi_channel/bulk_load/replay", t_replay, f"subs={n_bulk}")
     emit("multi_channel/bulk_load/vectorized", t_bulk,
-         f"subs={N_BULK};groups={g_bulk.num_groups}")
+         f"subs={n_bulk};groups={g_bulk.num_groups}")
     emit("multi_channel/bulk_load/speedup", 0.0,
          f"x{t_replay / t_bulk:.1f} (target >= 10x)")
 
@@ -83,10 +83,11 @@ def _channel_set(n: int, with_spatial: bool = False):
 
 
 def _loaded_engine(rng, specs, n_subs: int, n_tweets: int, n_users: int,
-                   use_pallas: bool = False) -> BADEngine:
+                   use_pallas: bool = False, group_cap=None) -> BADEngine:
     eng = BADEngine(dataset_capacity=1 << 16, index_capacity=1 << 14,
                     max_window=1 << 14, max_candidates=1 << 12,
-                    brokers=("B1", "B2", "B3", "B4"), use_pallas=use_pallas)
+                    brokers=("B1", "B2", "B3", "B4"), use_pallas=use_pallas,
+                    group_cap=group_cap)
     for spec in specs:
         eng.create_channel(spec)
         if spec.join == "param":
@@ -101,19 +102,28 @@ def _loaded_engine(rng, specs, n_subs: int, n_tweets: int, n_users: int,
     return eng
 
 
-def bench_fused_execution(rng, n_channels: int, n_subs: int = 20_000,
-                          n_tweets: int = 16_384, with_spatial: bool = False,
-                          n_users: int = 2048, tag: str = "") -> None:
+def bench_fused_execution(rng, n_channels: int, n_subs: int = None,
+                          n_tweets: int = None, with_spatial: bool = False,
+                          n_users: int = None, tag: str = "",
+                          deliver: bool = False) -> None:
+    n_subs = scale(20_000, 1024) if n_subs is None else n_subs
+    n_tweets = scale(16_384, 1024) if n_tweets is None else n_tweets
+    n_users = scale(2048, 256) if n_users is None else n_users
     specs = _channel_set(n_channels, with_spatial)
-    eng = _loaded_engine(rng, specs, n_subs, n_tweets, n_users)
+    # delivery wire lines carry the sID list per group: bound the group cap
+    # to the realistic per-parameter population, not the 40KB frame default
+    eng = _loaded_engine(rng, specs, n_subs, n_tweets, n_users,
+                         group_cap=64 if deliver else None)
     flags = ExecutionFlags.fully_optimized()
 
     def sequential():
-        return [eng.execute_channel(s.name, flags, advance=False, timed=False)
+        return [eng.execute_channel(s.name, flags, advance=False, timed=False,
+                                    deliver=deliver)
                 for s in specs]
 
     def fused():
-        return eng.execute_all(flags, advance=False, timed=False)
+        return eng.execute_all(flags, advance=False, timed=False,
+                               deliver=deliver)
 
     seq_reports = sequential()          # warm every per-channel trace
     fused_reports = fused()             # warm the fused trace
@@ -121,8 +131,11 @@ def bench_fused_execution(rng, n_channels: int, n_subs: int = 20_000,
         r = next(r for r in seq_reports if r.channel == s.name)
         assert fused_reports[s.name].num_results == r.num_results
         assert fused_reports[s.name].num_notified == r.num_notified
+        if deliver:                     # ... and so must delivery accounting
+            assert fused_reports[s.name].overflow == r.overflow
     t_seq = timeit(sequential)
     t_fused = timeit(fused)
+    eng.spill.clear()                   # timing loops re-spill the same tick
     total = sum(r.num_results for r in seq_reports)
     name = f"multi_channel/exec/c{n_channels}{tag}"
     emit(f"{name}/sequential", t_seq, f"results={total}")
@@ -131,10 +144,13 @@ def bench_fused_execution(rng, n_channels: int, n_subs: int = 20_000,
 
 
 def bench_fused_pallas_vs_oracle(rng, n_channels: int = 4,
-                                 n_subs: int = 20_000,
-                                 n_tweets: int = 16_384,
-                                 n_users: int = 2048) -> None:
+                                 n_subs: int = None,
+                                 n_tweets: int = None,
+                                 n_users: int = None) -> None:
     """Same mixed param+spatial fused plan, Pallas kernels vs jnp oracle."""
+    n_subs = scale(20_000, 1024) if n_subs is None else n_subs
+    n_tweets = scale(16_384, 1024) if n_tweets is None else n_tweets
+    n_users = scale(2048, 256) if n_users is None else n_users
     specs = _channel_set(n_channels, with_spatial=True)
     seed = rng.integers(0, 2 ** 31)
     times = {}
@@ -173,6 +189,11 @@ def run(rng) -> None:
     # call (acceptance: >= 4 channels, fused-vs-sequential + speedup)
     for n in (4, 8):
         bench_fused_execution(rng, n, with_spatial=True, tag="mixed")
+    # end-to-end WITH broker delivery: the convert+send stages ride the same
+    # jitted call in the fused path vs one jitted delivery per channel in the
+    # sequential loop (acceptance: fused delivery wins at >= 4 channels)
+    for n in (4, 7):
+        bench_fused_execution(rng, n, tag="deliver", deliver=True)
     bench_fused_pallas_vs_oracle(rng)
 
 

@@ -13,10 +13,12 @@ from repro.core.channel import most_threatening_tweets
 from repro.core.engine import BADEngine
 from repro.core.plans import ExecutionFlags
 from repro.data.synthetic import tweet_batch
-from benchmarks.common import emit, exec_time
+from benchmarks.common import emit, exec_time, scale
 
 
-def build(rng, match_frac: float, n_subs=20_000, n_new=16_384):
+def build(rng, match_frac: float, n_subs=None, n_new=None):
+    n_subs = scale(20_000, 1024) if n_subs is None else n_subs
+    n_new = scale(16_384, 1024) if n_new is None else n_new
     eng = BADEngine(dataset_capacity=1 << 16, index_capacity=1 << 15,
                     max_window=1 << 15, max_candidates=1 << 12)
     eng.create_channel(most_threatening_tweets())

@@ -13,7 +13,7 @@ from repro.core.channel import trending_tweets_in_country
 from repro.core.engine import BADEngine
 from repro.core.plans import ExecutionFlags
 from repro.data.synthetic import tweet_batch
-from benchmarks.common import emit, exec_time
+from benchmarks.common import emit, exec_time, scale
 
 
 def run(rng) -> None:
@@ -22,11 +22,11 @@ def run(rng) -> None:
                     group_cap=1024)
     eng.create_channel(trending_tweets_in_country(0, "EnglishTrending"))
     eng.create_channel(trending_tweets_in_country(1, "PortugueseTrending"))
-    n_subs = 30_000
+    n_subs = scale(30_000, 2048)
     countries = rng.integers(0, 200, n_subs).astype(np.int32)
     eng.subscribe_bulk("EnglishTrending", countries, np.zeros(n_subs, np.int32))
     eng.subscribe_bulk("PortugueseTrending", countries, np.zeros(n_subs, np.int32))
-    b = tweet_batch(rng, 24_576, t0=100)
+    b = tweet_batch(rng, scale(24_576, 2048), t0=100)
     f = np.asarray(b.fields).copy()
     f[:, R.RETWEET_COUNT] = np.where(rng.random(f.shape[0]) < 0.05,
                                      rng.integers(100_001, 5_000_000, f.shape[0]),

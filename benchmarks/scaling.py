@@ -14,26 +14,28 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.plans import ExecutionFlags
-from benchmarks.common import build_drug_engine, emit, exec_time
+from benchmarks.common import build_drug_engine, emit, exec_time, scale
 
-TOTAL = 32_768
 FLAGS = ExecutionFlags.fully_optimized()
 
 
 def run(rng) -> None:
+    total = scale(32_768, 4096)
     times = {}
     for nodes in (2, 4, 8):
-        eng = build_drug_engine(rng, n_subs=20_000, n_new=TOTAL // nodes,
+        eng = build_drug_engine(rng, n_subs=scale(20_000, 1024),
+                                n_new=total // nodes,
                                 match_rate=0.03, preload=0)
         t, _ = exec_time(eng, "TweetsAboutDrugs", FLAGS)
         times[nodes] = t
         emit(f"fig18/speedup/nodes{nodes}", t,
              f"speedup_x{times[2]/max(t,1e-9):.2f} (ideal x{nodes/2:.0f})")
     for rate in (1000, 2000):
-        per_node = rate * 8        # 8s of CPU-scaled ingest per node
+        per_node = scale(rate * 8, 512)  # 8s of CPU-scaled ingest per node
         base = None
         for nodes in (2, 4, 8):
-            eng = build_drug_engine(rng, n_subs=20_000, n_new=per_node,
+            eng = build_drug_engine(rng, n_subs=scale(20_000, 1024),
+                                    n_new=per_node,
                                     match_rate=0.03, preload=0)
             t, _ = exec_time(eng, "TweetsAboutDrugs", FLAGS)
             base = base or t

@@ -8,16 +8,33 @@ their *work* is real and measurable, mirroring Table 2's three stages:
               original layout that is one record copy per subscription; for the
               aggregated layout one record copy per group + the sID list.
   send     -- per-subscriber dispatch; identical between layouts (Table 2).
+
+Two delivery paths share the same single-channel kernels:
+
+  per-channel -- ``pack_payloads`` / ``fanout_sids``: one channel's result,
+                 one host call each (the Table 2 reference path).
+  fused       -- ``pack_payloads_all`` / ``fanout_sids_all`` / ``deliver_all``:
+                 every channel's convert+send in ONE jitted computation over
+                 the stacked channel axis, with per-channel caps and one-hot
+                 per-broker accounting, so delivery runs inside the SAME
+                 device program as execution. The fused stages are
+                 gather-formulated (each output slot binary-searches its
+                 source pair in per-channel prefix sums), so the work is
+                 proportional to the delivery capacity + total overflow, not
+                 to the C x max-pending x member-cap padded grid. Overflowed
+                 pairs/sIDs land in compacted flat channel-major spill
+                 streams for the engine's host-side SpillQueue.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plans
 from repro.core.plans import ChannelResult
 
 HEADER_WORDS = 4  # [row_id, target_idx, member_count, payload_words]
@@ -36,6 +53,119 @@ class BrokerRegistry:
         return len(self.names)
 
 
+@dataclasses.dataclass(frozen=True)
+class DeliveryStats:
+    """Broker delivery accounting for one executed channel (opt-in via
+    ``deliver=True``): result pairs packed by the convert stage and end
+    subscribers fanned out by the send stage, vs captured into the spill
+    queue vs dropped outright (spill buffers full).
+
+    Conservation, per stage: delivered + spilled + dropped == produced.
+    ``overflow_*`` keeps the pre-spill-queue view (everything that missed the
+    delivery buffer, recoverable or not)."""
+
+    delivered_pairs: int
+    spilled_pairs: int
+    dropped_pairs: int
+    delivered_sids: int
+    spilled_sids: int
+    dropped_sids: int
+    # convert-stage delivered pairs per broker (one-hot accounting); () when
+    # the caller supplied no broker table
+    delivered_pairs_broker: Tuple[int, ...] = ()
+
+    @property
+    def overflow_pairs(self) -> int:
+        return self.spilled_pairs + self.dropped_pairs
+
+    @property
+    def overflow_sids(self) -> int:
+        return self.spilled_sids + self.dropped_sids
+
+    @property
+    def overflow(self) -> int:
+        return self.overflow_pairs + self.overflow_sids
+
+    @property
+    def produced_pairs(self) -> int:
+        return self.delivered_pairs + self.overflow_pairs
+
+    @property
+    def produced_sids(self) -> int:
+        return self.delivered_sids + self.overflow_sids
+
+    def merged(self, other: "DeliveryStats") -> "DeliveryStats":
+        return DeliveryStats(
+            self.delivered_pairs + other.delivered_pairs,
+            self.spilled_pairs + other.spilled_pairs,
+            self.dropped_pairs + other.dropped_pairs,
+            self.delivered_sids + other.delivered_sids,
+            self.spilled_sids + other.spilled_sids,
+            self.dropped_sids + other.dropped_sids,
+            self.delivered_pairs_broker or other.delivered_pairs_broker)
+
+
+# ---------------------------------------------------------------------------
+# single-channel kernels (shared by the per-channel API and the vmapped path)
+# ---------------------------------------------------------------------------
+
+
+def _pack_one(result: ChannelResult, group_sids: jnp.ndarray,
+              payload_words: int, max_pairs: int, cap):
+    """Convert stage for ONE channel: compact the valid pairs, in ravel order,
+    into a (max_pairs, HEADER + sid_cap + payload_words) wire buffer.
+
+    ``cap`` (traced scalar, clamped to ``max_pairs``) is the per-channel
+    delivery cap: valid pairs past it are never written — they surface in the
+    returned ``spill_mask`` (flat ravel order) for spill capture. Returns
+    (buffer, delivered, produced, spill_mask, delivered_mask)."""
+    cap_eff = jnp.minimum(jnp.asarray(cap, jnp.int32), max_pairs)
+    sid_cap = group_sids.shape[1] if group_sids.ndim == 2 else 1
+    rows = result.pair_rows.ravel()
+    tgts = result.pair_targets.ravel()
+    valid = result.pair_valid.ravel()
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    within = pos < cap_eff
+    dest = jnp.where(valid & within, pos, max_pairs)
+    width = HEADER_WORDS + sid_cap + payload_words
+    out = jnp.zeros((max_pairs + 1, width), dtype=jnp.int32)
+    tgt_safe = jnp.maximum(tgts, 0)
+    sids = group_sids[tgt_safe] if group_sids.ndim == 2 else tgt_safe[:, None]
+    members = jnp.sum((sids >= 0).astype(jnp.int32), axis=-1)
+    header = jnp.stack([rows, tgts, members,
+                        jnp.full_like(rows, payload_words)], axis=-1)
+    payload = jnp.broadcast_to(rows[:, None], (rows.shape[0], payload_words))
+    line = jnp.concatenate([header, sids, payload], axis=-1)
+    out = out.at[dest].set(jnp.where(valid[:, None], line, 0), mode="drop")
+    produced = jnp.sum(valid.astype(jnp.int32))
+    delivered = jnp.minimum(produced, cap_eff)
+    return out[:max_pairs], delivered, produced, valid & ~within, valid & within
+
+
+def _fanout_one(result: ChannelResult, group_sids: jnp.ndarray,
+                max_notify: int, cap):
+    """Send stage for ONE channel: the flat in-order list of end subscribers.
+    Returns (buffer, delivered, produced, member_sids, spill_mask) where
+    ``member_sids`` is the full flat member stream (-1 where invalid) and
+    ``spill_mask`` flags members past the per-channel cap."""
+    cap_eff = jnp.minimum(jnp.asarray(cap, jnp.int32), max_notify)
+    tgts = result.pair_targets.ravel()
+    valid = result.pair_valid.ravel()
+    tgt_safe = jnp.maximum(tgts, 0)
+    sids = group_sids[tgt_safe] if group_sids.ndim == 2 else tgt_safe[:, None]
+    member_valid = (sids >= 0) & valid[:, None]
+    flat = jnp.where(member_valid, sids, -1).ravel()
+    mask = flat >= 0
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    within = pos < cap_eff
+    dest = jnp.where(mask & within, pos, max_notify)
+    out = jnp.full((max_notify + 1,), -1, dtype=jnp.int32)
+    out = out.at[dest].set(flat, mode="drop")
+    produced = jnp.sum(mask.astype(jnp.int32))
+    delivered = jnp.minimum(produced, cap_eff)
+    return out[:max_notify], delivered, produced, flat, mask & ~within
+
+
 def pack_payloads(result: ChannelResult, group_sids: jnp.ndarray,
                   payload_words: int, max_pairs: int
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -49,25 +179,10 @@ def pack_payloads(result: ChannelResult, group_sids: jnp.ndarray,
     Returns (buffer, delivered, overflow): pairs beyond ``max_pairs`` are
     dropped — never scattered over the last slot — and counted in overflow.
     """
-    cap = group_sids.shape[1] if group_sids.ndim == 2 else 1
-    rows = result.pair_rows.ravel()
-    tgts = result.pair_targets.ravel()
-    valid = result.pair_valid.ravel()
-    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
-    dest = jnp.where(valid & (pos < max_pairs), pos, max_pairs)
-    width = HEADER_WORDS + cap + payload_words
-    out = jnp.zeros((max_pairs + 1, width), dtype=jnp.int32)
-    tgt_safe = jnp.maximum(tgts, 0)
-    sids = group_sids[tgt_safe] if group_sids.ndim == 2 else tgt_safe[:, None]
-    members = jnp.sum((sids >= 0).astype(jnp.int32), axis=-1)
-    header = jnp.stack([rows, tgts, members,
-                        jnp.full_like(rows, payload_words)], axis=-1)
-    payload = jnp.broadcast_to(rows[:, None], (rows.shape[0], payload_words))
-    line = jnp.concatenate([header, sids, payload], axis=-1)
-    out = out.at[dest].set(jnp.where(valid[:, None], line, 0), mode="drop")
-    count = jnp.sum(valid.astype(jnp.int32))
-    delivered = jnp.minimum(count, max_pairs)
-    return out[:max_pairs], delivered, count - delivered
+    out, delivered, produced, _, _ = _pack_one(result, group_sids,
+                                               payload_words, max_pairs,
+                                               max_pairs)
+    return out, delivered, produced - delivered
 
 
 def fanout_sids(result: ChannelResult, group_sids: jnp.ndarray,
@@ -77,27 +192,295 @@ def fanout_sids(result: ChannelResult, group_sids: jnp.ndarray,
 
     Returns (buffer, delivered, overflow) — overflow counts sIDs dropped
     because the notify buffer was full."""
-    tgts = result.pair_targets.ravel()
-    valid = result.pair_valid.ravel()
+    out, delivered, produced, _, _ = _fanout_one(result, group_sids,
+                                                 max_notify, max_notify)
+    return out, delivered, produced - delivered
+
+
+# ---------------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+# fused multi-channel delivery: one jitted call covers every channel's
+# convert+send, so execution and delivery share a single device program.
+#
+# Formulation: GATHER, not scatter. Each output slot (payload line, notify
+# slot, spill slot) locates its source pair by binary search over per-channel
+# prefix sums, so the work is proportional to the DELIVERY CAPACITY
+# (C x (max_pairs + max_notify) + spill) — never to the shape-bucketed
+# C x max-pending x member-cap grid the stacked results are padded to. The
+# only full-grid passes are O(C x P) elementwise counts/prefix sums.
+# ---------------------------------------------------------------------------
+
+
+class PackedDelivery(NamedTuple):
+    """Stacked convert-stage output (leading channel axis C)."""
+
+    payload: jnp.ndarray     # (C, max_pairs, width) int32 wire buffers
+    delivered: jnp.ndarray   # (C,) int32 pairs written
+    produced: jnp.ndarray    # (C,) int32 valid pairs (pre-cap)
+    spill_mask: jnp.ndarray  # (C, Rm*maxT) bool: valid pairs past the cap
+    per_broker: jnp.ndarray  # (C, B) int32 delivered pairs per broker
+
+
+class FanoutDelivery(NamedTuple):
+    """Stacked send-stage output (leading channel axis C)."""
+
+    notify: jnp.ndarray       # (C, max_notify) int32 flat sID dispatch
+    delivered: jnp.ndarray    # (C,) int32 sIDs written
+    produced: jnp.ndarray     # (C,) int32 member sIDs (pre-cap)
+
+
+class FusedDelivery(NamedTuple):
+    """Both stages plus the compacted flat spill streams (channel identity
+    preserved) for the engine's SpillQueue."""
+
+    pack: PackedDelivery
+    fan: FanoutDelivery
+    pair_spill: plans.PairStream   # overflowed (row, channel, target) pairs
+    sid_spill: plans.ValueStream   # overflowed (sid, channel) end subscribers
+
+
+def _pair_layout(result: ChannelResult, caps, cap_limit: int):
+    """Shared per-channel pair bookkeeping for the stacked delivery stages:
+    (valid2, rows2, tgt2, cumv, produced, cap), all (C, P)-shaped. ``cumv``
+    is the inclusive per-channel prefix count of valid pairs (ravel order) —
+    slot q's source pair is ``searchsorted(cumv[c], q, 'right')``."""
+    C = result.pair_valid.shape[0]
+    valid2 = result.pair_valid.reshape(C, -1)
+    rows2 = result.pair_rows.reshape(C, -1)
+    tgt2 = result.pair_targets.reshape(C, -1)
+    cumv = jnp.cumsum(valid2.astype(jnp.int32), axis=1)
+    produced = cumv[:, -1]
+    if caps is None:
+        cap = jnp.full((C,), cap_limit, dtype=jnp.int32)
+    else:
+        cap = jnp.minimum(jnp.asarray(caps, jnp.int32), cap_limit)
+    return valid2, rows2, tgt2, cumv, produced, cap
+
+
+def _member_counts(group_sids: jnp.ndarray, valid2: jnp.ndarray,
+                   tgt2: jnp.ndarray) -> jnp.ndarray:
+    """(C, P) member count per pair via the per-target table — O(C*T*cap) on
+    the TABLE plus an O(C*P) gather, never O(C*P*cap) per-pair reductions.
+    Requires group rows to pack members as a -1-padded PREFIX (the layout
+    every table builder in subscriptions.py produces)."""
+    if group_sids.shape[-1] == 0:       # identity fanout: 1 member per pair
+        return jnp.where(valid2 & (tgt2 >= 0), 1, 0).astype(jnp.int32)
+    m_table = jnp.sum((group_sids >= 0).astype(jnp.int32), axis=-1)  # (C, T)
+    ch = jnp.arange(valid2.shape[0], dtype=jnp.int32)[:, None]
+    return jnp.where(valid2, m_table[ch, jnp.maximum(tgt2, 0)], 0)
+
+
+def _source_pair(cum: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel binary search: source index for each output rank. ``cum``
+    (C, P) inclusive prefix counts, ``q`` (C, Q) target ranks -> (C, Q)."""
+    return jax.vmap(lambda c, k: jnp.searchsorted(c, k, side="right"))(cum, q)
+
+
+def _gather(arr2: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take_along_axis(arr2, p, axis=1)
+
+
+def pack_payloads_all(result: ChannelResult, group_sids: jnp.ndarray,
+                      payload_words: int, max_pairs: int,
+                      caps: Optional[jnp.ndarray] = None,
+                      target_brokers: Optional[jnp.ndarray] = None,
+                      num_brokers: int = 0) -> PackedDelivery:
+    """Convert stage for EVERY channel at once. ``result`` leaves carry a
+    leading C axis (the fused join output); ``group_sids`` is (C, T, cap) for
+    group/flat tables or (C, 0) to select the identity fanout (spatial
+    channels). Each channel's delivered prefix is bit-identical to
+    ``pack_payloads`` on its slice.
+
+    ``caps`` (C,) bounds delivery per channel (default: the shared buffer
+    size). ``target_brokers`` (C, T) — broker id by target index — enables
+    one-hot per-broker accounting of *delivered* pairs, returned as
+    (C, num_brokers); the masked reductions run over the (C, max_pairs)
+    output slots, not the pending grid.
+    """
+    C = result.pair_valid.shape[0]
+    valid2, rows2, tgt2, cumv, produced, cap_p = _pair_layout(
+        result, caps, max_pairs)
+    identity = group_sids.shape[-1] == 0
+    P = valid2.shape[1]
+    ch = jnp.arange(C, dtype=jnp.int32)[:, None]
+    delivered = jnp.minimum(produced, cap_p)
+    q = jnp.broadcast_to(jnp.arange(max_pairs, dtype=jnp.int32), (C, max_pairs))
+    p = jnp.minimum(_source_pair(cumv, q), P - 1)          # (C, max_pairs)
+    ok = q < delivered[:, None]
+    rows = jnp.where(ok, _gather(rows2, p), 0)
+    tgts = jnp.where(ok, _gather(tgt2, p), 0)
+    members = jnp.where(ok, _gather(_member_counts(group_sids, valid2, tgt2),
+                                    p), 0)
     tgt_safe = jnp.maximum(tgts, 0)
-    sids = group_sids[tgt_safe] if group_sids.ndim == 2 else tgt_safe[:, None]
-    member_valid = (sids >= 0) & valid[:, None]
-    flat = jnp.where(member_valid, sids, -1).ravel()
-    mask = flat >= 0
-    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
-    dest = jnp.where(mask & (pos < max_notify), pos, max_notify)
-    out = jnp.full((max_notify + 1,), -1, dtype=jnp.int32)
-    out = out.at[dest].set(flat, mode="drop")
-    count = jnp.sum(mask.astype(jnp.int32))
-    delivered = jnp.minimum(count, max_notify)
-    return out[:max_notify], delivered, count - delivered
+    sids = tgt_safe[..., None] if identity else group_sids[ch, tgt_safe]
+    header = jnp.stack([rows, tgts, members,
+                        jnp.where(ok, payload_words, 0)], axis=-1)
+    payload = jnp.broadcast_to(rows[..., None],
+                               rows.shape + (payload_words,))
+    line = jnp.concatenate([header, jnp.where(ok[..., None], sids, 0),
+                            payload], axis=-1)
+    out = jnp.where(ok[..., None], line, 0)
+    if target_brokers is None or num_brokers == 0:
+        per_broker = jnp.zeros((C, 0), dtype=jnp.int32)
+    else:
+        bids = jnp.where(ok, target_brokers[ch, tgt_safe], num_brokers)
+        one_hot = bids[..., None] == jnp.arange(num_brokers, dtype=jnp.int32)
+        per_broker = jnp.sum(one_hot.astype(jnp.int32), axis=1)
+    spill_mask = valid2 & (cumv - 1 >= cap_p[:, None])
+    return PackedDelivery(out, delivered, produced, spill_mask, per_broker)
 
 
-def broker_traffic_summary(result: ChannelResult) -> Dict[str, np.ndarray]:
-    return {
+def _member_value(group_sids: jnp.ndarray, ch, tgt_safe: jnp.ndarray,
+                  j: jnp.ndarray) -> jnp.ndarray:
+    """sID of member ``j`` of the pair targeting ``tgt_safe``, per channel."""
+    if group_sids.shape[-1] == 0:
+        return tgt_safe                     # identity fanout, j is always 0
+    return group_sids[ch, tgt_safe, jnp.minimum(j, group_sids.shape[-1] - 1)]
+
+
+def fanout_sids_all(result: ChannelResult, group_sids: jnp.ndarray,
+                    max_notify: int,
+                    caps: Optional[jnp.ndarray] = None) -> FanoutDelivery:
+    """Send stage for EVERY channel at once, with per-channel caps. Each
+    notify slot binary-searches its source pair in the per-channel member
+    prefix sums and gathers the sID directly — O(max_notify log P) per
+    channel, no member grid. Delivered prefixes are bit-identical to
+    ``fanout_sids`` per channel (tables pack members as a -1-padded prefix).
+    """
+    return _fanout_parts(result, group_sids, max_notify, caps)[0]
+
+
+def _fanout_parts(result: ChannelResult, group_sids: jnp.ndarray,
+                  max_notify: int, caps):
+    """The send stage plus its internal member bookkeeping, so ``deliver_all``
+    can resolve spill slots against the same prefix sums without
+    re-deriving them."""
+    C = result.pair_valid.shape[0]
+    valid2, _, tgt2, _, _, cap_n = _pair_layout(result, caps, max_notify)
+    members = _member_counts(group_sids, valid2, tgt2)         # (C, P)
+    cumm = jnp.cumsum(members, axis=1)
+    produced = cumm[:, -1]
+    delivered = jnp.minimum(produced, cap_n)
+    k = jnp.broadcast_to(jnp.arange(max_notify, dtype=jnp.int32),
+                         (C, max_notify))
+    notify = _member_lookup(group_sids, tgt2, members, cumm, k,
+                            k < delivered[:, None])
+    return FanoutDelivery(notify, delivered, produced), (tgt2, members, cumm,
+                                                         cap_n)
+
+
+def _member_lookup(group_sids, tgt2, members, cumm, k, ok) -> jnp.ndarray:
+    """Resolve per-channel member ranks ``k`` (C, Q) to sIDs: binary-search
+    the owning pair, derive the in-pair offset, gather. -1 where not ``ok``."""
+    P = tgt2.shape[1]
+    ch = jnp.arange(tgt2.shape[0], dtype=jnp.int32)[:, None]
+    p = jnp.minimum(_source_pair(cumm, k), P - 1)
+    j = k - (_gather(cumm, p) - _gather(members, p))           # rank in pair
+    tgt_safe = jnp.maximum(_gather(tgt2, p), 0)
+    return jnp.where(ok, _member_value(group_sids, ch, tgt_safe, j), -1)
+
+
+def deliver_all(result: ChannelResult, group_sids: jnp.ndarray,
+                payload_words: int, max_pairs: int, max_notify: int,
+                spill_cap: int,
+                caps_pairs: Optional[jnp.ndarray] = None,
+                caps_notify: Optional[jnp.ndarray] = None,
+                target_brokers: Optional[jnp.ndarray] = None,
+                num_brokers: int = 0) -> FusedDelivery:
+    """The whole fused convert+send, plus spill capture: everything that
+    missed a delivery buffer lands — with its channel identity — in a flat
+    channel-major spill stream holding up to ``spill_cap`` entries PER
+    CHANNEL per lane (the first ``spill_cap`` overflow entries of each
+    channel are always captured; the rest are truncated for the caller to
+    count as drops — one channel's overflow can never crowd out another's,
+    which also makes the capture exactly what the per-channel path at C == 1
+    would capture). Spill slots gather their entry straight from the
+    per-channel overflow windows — spill work is O(C * spill_cap),
+    independent of the pending grid. Pure and jit-compatible — the engine
+    runs it inside the same jitted call as candidate discovery and the
+    joins."""
+    pack = pack_payloads_all(result, group_sids, payload_words, max_pairs,
+                             caps_pairs, target_brokers, num_brokers)
+    valid2, rows2, tgt2, cumv, produced, cap_p = _pair_layout(
+        result, caps_pairs, max_pairs)
+    P = valid2.shape[1]
+
+    # pairs lane: spill slot (c, i) -> in-channel pair rank cap_c + i ->
+    # source pair, by binary search + gather
+    ov_p = produced - pack.delivered                           # (C,)
+    ch_r, k_r, valid_r, total_p = _spill_slots(ov_p, cap_p, spill_cap)
+    pr = _row_search(cumv, P + 1, ch_r, k_r)
+    take = lambda arr2: jnp.where(valid_r, arr2[ch_r, pr], -1)
+    pair_spill = plans.PairStream(take(rows2), jnp.where(valid_r, ch_r, -1),
+                                  take(tgt2), valid_r, total_p)
+
+    # sids lane: same scheme over the send stage's member prefix sums
+    fan, (tgt2, members, cumm, cap_n) = _fanout_parts(
+        result, group_sids, max_notify, caps_notify)
+    ov_s = fan.produced - fan.delivered
+    ch_s, k_s, valid_s, total_s = _spill_slots(ov_s, cap_n, spill_cap)
+    sid_cap = 1 if group_sids.shape[-1] == 0 else group_sids.shape[-1]
+    p_s = _row_search(cumm, P * sid_cap + 1, ch_s, k_s)
+    j_s = k_s - (cumm[ch_s, p_s] - members[ch_s, p_s])
+    tgt_s = jnp.maximum(tgt2[ch_s, p_s], 0)
+    vals = jnp.where(valid_s,
+                     _member_value(group_sids, ch_s, tgt_s, j_s), -1)
+    sid_spill = plans.ValueStream(vals, jnp.where(valid_s, ch_s, -1),
+                                  valid_s, total_s)
+    return FusedDelivery(pack, fan, pair_spill, sid_spill)
+
+
+def _row_search(cum2: jnp.ndarray, offset: int, ch: jnp.ndarray,
+                k: jnp.ndarray) -> jnp.ndarray:
+    """``searchsorted(cum2[ch_i], k_i, 'right')`` for per-slot channels, as
+    ONE global search over the offset-flattened prefix array (``offset`` >
+    any row value makes it non-decreasing across row boundaries) — avoids a
+    (slots x P) dynamic-row gather that a vmapped per-element search would
+    materialize."""
+    C, P = cum2.shape
+    flat = (cum2 + offset * jnp.arange(C, dtype=jnp.int32)[:, None]).ravel()
+    idx = jnp.searchsorted(flat, k + offset * ch, side="right")
+    return jnp.clip(idx.astype(jnp.int32) - ch * P, 0, P - 1)
+
+
+def _spill_slots(ov: jnp.ndarray, cap, spill_cap: int):
+    """Per-channel spill windows flattened channel-major: slot r = c *
+    spill_cap + i holds channel c's i-th overflow entry (in-channel rank
+    cap_c + i), valid while i < min(ov_c, spill_cap). Identical capture to
+    running the per-channel path with the same ``spill_cap`` — no
+    cross-channel crowd-out. ``total`` is the full (pre-truncation) overflow
+    across channels."""
+    C = ov.shape[0]
+    r = jnp.arange(C * spill_cap, dtype=jnp.int32)
+    ch = r // spill_cap
+    i = r % spill_cap
+    return ch, cap[ch] + i, i < jnp.minimum(ov, spill_cap)[ch], jnp.sum(ov)
+
+
+def broker_traffic_summary(result: ChannelResult,
+                           delivery: Optional[DeliveryStats] = None
+                           ) -> Dict[str, np.ndarray]:
+    """Per-broker traffic view of one channel result. With ``delivery`` (the
+    DeliveryStats of a deliver=True execution) the summary also carries the
+    delivery accounting — delivered / spilled / dropped per stage and the
+    per-broker delivered split — so benchmarks surface drops instead of only
+    byte counts."""
+    out = {
         "bytes_per_broker": np.asarray(result.broker_bytes),
         "results_per_broker": np.asarray(result.broker_results),
         "total_bytes": np.asarray(result.broker_bytes.sum()),
         "total_results": np.asarray(result.num_results),
         "total_notified": np.asarray(result.num_notified),
     }
+    if delivery is not None:
+        out.update({
+            "delivered_pairs": np.asarray(delivery.delivered_pairs),
+            "spilled_pairs": np.asarray(delivery.spilled_pairs),
+            "dropped_pairs": np.asarray(delivery.dropped_pairs),
+            "delivered_sids": np.asarray(delivery.delivered_sids),
+            "spilled_sids": np.asarray(delivery.spilled_sids),
+            "dropped_sids": np.asarray(delivery.dropped_sids),
+            "delivered_pairs_per_broker":
+                np.asarray(delivery.delivered_pairs_broker, dtype=np.int64),
+        })
+    return out

@@ -15,15 +15,23 @@ paths); the default jnp oracle is the parity reference, and the two are
 result-identical by construction (asserted by the parity suite).
 
 Broker delivery (``deliver=True`` on ``execute_channel`` / ``execute_all``)
-runs the broker's convert+send stages (``pack_payloads`` / ``fanout_sids``)
-and surfaces dropped-on-overflow counts in ``ExecutionReport.overflow`` — no
-silently lost notifications.
+runs the broker's convert+send stages and surfaces per-stage accounting in
+``ExecutionReport.overflow`` (a ``DeliveryStats``). On ``execute_all`` the
+delivery is FUSED: ``broker.deliver_all`` runs inside the same jitted call as
+candidate discovery and the joins, so a multi-channel tick never leaves the
+device between discovery and subscriber fanout. No notification is silently
+lost: pairs/sIDs that miss a delivery buffer are captured — with their
+channel identity — into the bounded host-side ``SpillQueue`` and re-delivered
+exactly once by ``drain_spilled()`` on subsequent ticks; only spill-buffer
+exhaustion drops, and drops are counted
+(delivered + spilled + dropped == produced, per stage).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +41,8 @@ from repro.core import bad_index as bidx
 from repro.core import plans
 from repro.core import records as R
 from repro.core import subscriptions as subs
-from repro.core.broker import BrokerRegistry, fanout_sids, pack_payloads
+from repro.core.broker import (BrokerRegistry, DeliveryStats, FusedDelivery,
+                               deliver_all, fanout_sids, pack_payloads)
 from repro.core.channel import ChannelSpec
 from repro.core.predicates import (CompiledConditions, compile_conditions,
                                    evaluate_conditions)
@@ -66,21 +75,141 @@ class ChannelState:
         self._host_targets = {}
 
 
-@dataclasses.dataclass(frozen=True)
-class DeliveryStats:
-    """Broker delivery accounting for one executed channel (opt-in via
-    ``deliver=True``): result pairs packed by ``pack_payloads`` and end
-    subscribers fanned out by ``fanout_sids`` vs dropped on buffer overflow.
-    Conservation: delivered + overflow == produced, per stage."""
+class SpillQueue:
+    """Bounded host-side capture of overflowed notifications.
 
-    delivered_pairs: int
-    overflow_pairs: int
-    delivered_sids: int
-    overflow_sids: int
+    Two lanes, mirroring the broker's two delivery stages: *pairs* (result
+    pairs that missed the convert-stage wire buffer, keyed by channel and
+    target layout so a drain re-packs against the right table) and *sids*
+    (end-subscriber ids that missed the send-stage notify buffer). Entries
+    keep their channel identity; each lane is bounded by ``capacity`` —
+    pushes past it are rejected (the caller counts them as dropped, so
+    nothing is ever lost *silently*).
 
-    @property
-    def overflow(self) -> int:
-        return self.overflow_pairs + self.overflow_sids
+    Pair entries record the channel's subscription ``version`` at spill time:
+    target indices are only meaningful against the table they were produced
+    from, so a drain discards (and counts as dropped) entries whose channel
+    re-subscribed in between. Raw sIDs never go stale.
+    """
+
+    def __init__(self, capacity: int = 1 << 16):
+        self.capacity = capacity
+        self._pairs: Dict[Tuple[str, bool], Deque] = {}
+        self._sids: Dict[str, Deque] = {}
+        self._n_pairs = 0
+        self._n_sids = 0
+
+    def push_pairs(self, channel: str, aggregated: bool, rows: np.ndarray,
+                   targets: np.ndarray, version: int) -> int:
+        """Append up to the remaining capacity; returns entries accepted."""
+        n = min(len(rows), self.capacity - self._n_pairs)
+        if n > 0:
+            q = self._pairs.setdefault((channel, aggregated),
+                                       collections.deque())
+            q.append((np.asarray(rows[:n]), np.asarray(targets[:n]), version))
+            self._n_pairs += n
+        return max(n, 0)
+
+    def _push_front_pairs(self, channel: str, aggregated: bool,
+                          rows: np.ndarray, targets: np.ndarray,
+                          version: int) -> None:
+        """Requeue a just-popped tail at the FRONT (drain order preserved,
+        no capacity check — the pop already released the room)."""
+        if len(rows):
+            q = self._pairs.setdefault((channel, aggregated),
+                                       collections.deque())
+            q.appendleft((np.asarray(rows), np.asarray(targets), version))
+            self._n_pairs += len(rows)
+
+    def pop_pairs(self, channel: str, aggregated: bool, n: int,
+                  current_version: Optional[int]
+                  ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Remove up to ``n`` entries in FIFO order. Entries whose version no
+        longer matches ``current_version`` are discarded and counted in the
+        returned ``stale`` (they index a table that no longer exists).
+        Returns (rows, targets, stale)."""
+        q = self._pairs.get((channel, aggregated))
+        rows, tgts, stale, taken = [], [], 0, 0
+        while q and taken < n:
+            r, t, v = q.popleft()
+            take = min(len(r), n - taken)
+            if take < len(r):
+                q.appendleft((r[take:], t[take:], v))
+            self._n_pairs -= take
+            if v != current_version:
+                stale += take
+            else:
+                rows.append(r[:take])
+                tgts.append(t[:take])
+            taken += take
+        if q is not None and not q:
+            del self._pairs[(channel, aggregated)]
+        cat = lambda xs: (np.concatenate(xs) if xs
+                          else np.zeros((0,), np.int32))
+        return cat(rows), cat(tgts), stale
+
+    def push_sids(self, channel: str, sids: np.ndarray) -> int:
+        n = min(len(sids), self.capacity - self._n_sids)
+        if n > 0:
+            self._sids.setdefault(channel, collections.deque()).append(
+                np.asarray(sids[:n]))
+            self._n_sids += n
+        return max(n, 0)
+
+    def _push_front_sids(self, channel: str, sids: np.ndarray) -> None:
+        if len(sids):
+            self._sids.setdefault(channel, collections.deque()).appendleft(
+                np.asarray(sids))
+            self._n_sids += len(sids)
+
+    def pop_sids(self, channel: str, n: int) -> np.ndarray:
+        q = self._sids.get(channel)
+        out, taken = [], 0
+        while q and taken < n:
+            s = q.popleft()
+            take = min(len(s), n - taken)
+            if take < len(s):
+                q.appendleft(s[take:])
+            self._n_sids -= take
+            out.append(s[:take])
+            taken += take
+        if q is not None and not q:
+            del self._sids[channel]
+        return np.concatenate(out) if out else np.zeros((0,), np.int32)
+
+    def pair_keys(self) -> List[Tuple[str, bool]]:
+        return list(self._pairs.keys())
+
+    def sid_keys(self) -> List[str]:
+        return list(self._sids.keys())
+
+    def pending_pairs(self, channel: Optional[str] = None) -> int:
+        if channel is None:
+            return self._n_pairs
+        return sum(sum(len(r) for r, _, _ in q)
+                   for (name, _), q in self._pairs.items() if name == channel)
+
+    def pending_sids(self, channel: Optional[str] = None) -> int:
+        if channel is None:
+            return self._n_sids
+        return sum(len(s) for s in self._sids.get(channel, ()))
+
+    def clear(self) -> None:
+        self._pairs.clear()
+        self._sids.clear()
+        self._n_pairs = self._n_sids = 0
+
+
+@dataclasses.dataclass
+class DrainReport:
+    """One channel's ``drain_spilled`` round: ``stats`` accounts the retry
+    (delivered = re-delivered this round, spilled = still queued, dropped =
+    stale/unroutable); ``payload`` / ``notify`` are the re-packed wire buffer
+    and re-sent sID buffer (delivered prefix meaningful)."""
+
+    stats: DeliveryStats
+    payload: Optional[np.ndarray] = None
+    notify: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -110,7 +239,9 @@ class BADEngine:
                  group_cap: Optional[int] = None,
                  max_deliver_pairs: int = 1 << 12,
                  max_notify: int = 1 << 14,
-                 deliver_payload_words: int = 8):
+                 deliver_payload_words: int = 8,
+                 max_spill: int = 1 << 13,
+                 spill_capacity: int = 1 << 16):
         self.schema = schema
         self.dataset = R.ActiveDataset.create(dataset_capacity, schema)
         self.index_capacity = index_capacity
@@ -124,6 +255,11 @@ class BADEngine:
         self.max_deliver_pairs = max_deliver_pairs
         self.max_notify = max_notify
         self.deliver_payload_words = deliver_payload_words
+        # device-side spill capture buffer per delivery call (flat across the
+        # call's channels) and the host-side bounded retry queue
+        self.max_spill = max_spill
+        self.spill = SpillQueue(spill_capacity)
+        self._deliver_jit: Optional[Callable] = None
         self.user_locations = jnp.zeros((1, 2), dtype=jnp.float32)
         self.user_brokers = jnp.zeros((1,), dtype=jnp.int32)
         # keys the stacked-user-set cache; bumped by set_user_locations
@@ -395,21 +531,73 @@ class BADEngine:
             self._exec_cache.pop(next(iter(self._exec_cache)))
         self._exec_cache[key] = fn
 
+    def _delivery_fn(self) -> Callable:
+        """The per-channel reference delivery: the SAME fused kernels as
+        ``execute_all(deliver=True)`` run on a C==1 stack, so the two paths
+        are stats-identical by construction."""
+        if self._deliver_jit is None:
+            pw, mp = self.deliver_payload_words, self.max_deliver_pairs
+            mn, sc = self.max_notify, self.max_spill
+            nb = self.brokers.num_brokers
+            self._deliver_jit = jax.jit(
+                lambda res, sids, tb: deliver_all(
+                    res, sids, pw, mp, mn, sc,
+                    target_brokers=tb, num_brokers=nb))
+        return self._deliver_jit
+
     def _deliver(self, st: ChannelState, result: plans.ChannelResult,
                  aggregated: bool) -> DeliveryStats:
-        """Run the broker convert+send stages on one channel's result and
-        account overflow (ROADMAP: surface drops instead of losing them)."""
+        """Run the broker convert+send stages on one channel's result,
+        capture overflow into the spill queue, and account every pair/sID
+        (delivered + spilled + dropped == produced, per stage)."""
+        res1 = jax.tree.map(lambda a: a[None], result)
         if st.spec.join == "spatial":
-            # spatial targets ARE end-user ids; any 1-D table selects the
+            # spatial targets ARE end-user ids; a 0-wide table selects the
             # brokers' identity fanout (they read targets directly and never
-            # index a 1-D table's values), so pass an empty shape-only flag
-            sids = jnp.zeros((0,), dtype=jnp.int32)
+            # index the table's values)
+            sids = jnp.zeros((1, 0), dtype=jnp.int32)
+            tb = self.user_brokers[None]
         else:
-            sids = self.group_sids_array(st.spec.name, aggregated)
-        _, dp, op = pack_payloads(result, sids, self.deliver_payload_words,
-                                  self.max_deliver_pairs)
-        _, ds_, os_ = fanout_sids(result, sids, self.max_notify)
-        return DeliveryStats(int(dp), int(op), int(ds_), int(os_))
+            sids = self.group_sids_array(st.spec.name, aggregated)[None]
+            tb = self._targets(st, aggregated).brokers[None]
+        d = self._delivery_fn()(res1, sids, tb)
+        return self._spill_and_stats([st], aggregated, d)[st.spec.name]
+
+    def _spill_and_stats(self, chs: List[ChannelState], aggregated: bool,
+                         d: FusedDelivery) -> Dict[str, DeliveryStats]:
+        """Host side of a delivery: push the captured flat spill streams into
+        the SpillQueue per channel (entries past the queue's capacity — or
+        past the device capture buffer — become counted drops) and assemble
+        each channel's conserving DeliveryStats."""
+        pack_d = np.asarray(d.pack.delivered)
+        pack_p = np.asarray(d.pack.produced)
+        fan_d = np.asarray(d.fan.delivered)
+        fan_p = np.asarray(d.fan.produced)
+        per_broker = np.asarray(d.pack.per_broker)
+        pvalid = np.asarray(d.pair_spill.valid)
+        prows = np.asarray(d.pair_spill.rows)[pvalid]
+        pchan = np.asarray(d.pair_spill.channels)[pvalid]
+        ptgts = np.asarray(d.pair_spill.targets)[pvalid]
+        svalid = np.asarray(d.sid_spill.valid)
+        svals = np.asarray(d.sid_spill.values)[svalid]
+        schan = np.asarray(d.sid_spill.channels)[svalid]
+        out: Dict[str, DeliveryStats] = {}
+        for i, st in enumerate(chs):
+            name = st.spec.name
+            sel = pchan == i
+            spilled_p = self.spill.push_pairs(name, aggregated, prows[sel],
+                                              ptgts[sel], st.version)
+            sel = schan == i
+            spilled_s = self.spill.push_sids(name, svals[sel])
+            ov_p = int(pack_p[i] - pack_d[i])
+            ov_s = int(fan_p[i] - fan_d[i])
+            out[name] = DeliveryStats(
+                delivered_pairs=int(pack_d[i]), spilled_pairs=spilled_p,
+                dropped_pairs=ov_p - spilled_p,
+                delivered_sids=int(fan_d[i]), spilled_sids=spilled_s,
+                dropped_sids=ov_s - spilled_s,
+                delivered_pairs_broker=tuple(int(x) for x in per_broker[i]))
+        return out
 
     def execute_channel(self, channel: str,
                         flags: plans.ExecutionFlags,
@@ -526,15 +714,46 @@ class BADEngine:
         self._stacked_cache["spatial"] = (key, val)
         return val
 
+    def _stacked_sids(self, chs: List[ChannelState],
+                      aggregated: bool) -> jnp.ndarray:
+        """Stacked device group-sID tables (C, Tmax, cap) for fused delivery,
+        -1 padded, shape-bucketed alongside ``_stacked_inputs`` and cached by
+        the same channel-version key."""
+        key = tuple((st.spec.name, st.version) for st in chs)
+        hit = self._stacked_cache.get(("sids", aggregated))
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        hosts = []
+        for st in chs:
+            if aggregated:
+                groups = st._groups or st.aggregator.build()
+                st._groups = groups
+                hosts.append(np.asarray(groups.group_sids, np.int32))
+            else:
+                hosts.append(np.asarray(self._flat_table(st).sids,
+                                        np.int32)[:, None])
+        n = len(chs)
+        tmax = _pow2_bucket(max(h.shape[0] for h in hosts), 3)
+        cap = max(h.shape[1] for h in hosts)
+        sids = np.full((n, tmax, cap), -1, np.int32)
+        for i, h in enumerate(hosts):
+            sids[i, :h.shape[0], :h.shape[1]] = h
+        val = jnp.asarray(sids)
+        self._stacked_cache[("sids", aggregated)] = (key, val)
+        return val
+
     def _exec_all_fn(self, param_chs: List[ChannelState],
                      spatial_chs: List[ChannelState],
-                     flags: plans.ExecutionFlags, max_cand: int) -> Callable:
+                     flags: plans.ExecutionFlags, max_cand: int,
+                     deliver: bool = False) -> Callable:
         """ONE compiled plan for every channel: stacked candidate discovery
         per join group (param / spatial), vmapped joins, fused broker
         accounting. With ``use_pallas`` the discovery runs the Pallas
         ``predicate_filter`` kernel and the spatial join the Pallas
-        ``spatial_match`` kernel (both batched over the channel axis)."""
-        key = ("all", flags, max_cand,
+        ``spatial_match`` kernel (both batched over the channel axis). With
+        ``deliver`` the broker convert+send stages (``deliver_all``) run in
+        the SAME call — no host round-trip between discovery and fanout."""
+        key = ("all", flags, max_cand, deliver,
                tuple((st.spec, st.index) for st in param_chs),
                tuple((st.spec, st.index) for st in spatial_chs))
         cached = self._exec_cache.get(key)
@@ -590,8 +809,11 @@ class BADEngine:
             return plans.candidates_bad_index_all(index_state, ch_rows,
                                                   max_cand)
 
+        pw, mp = self.deliver_payload_words, self.max_deliver_pairs
+        mn, sc = self.max_notify, self.max_spill
+
         def run(ds, index_state, p_in, s_in):
-            res_p = res_s = None
+            res_p = res_s = del_p = del_s = None
             if p_static is not None:
                 cand = discover(ds, index_state, p_static,
                                 p_in["last_ts"], p_in["last_size"])
@@ -600,13 +822,23 @@ class BADEngine:
                     p_in["payload"], num_brokers,
                     p_in["up_masks"] if pushdown else None, aggregated,
                     p_in["domains"])
+                if deliver:
+                    del_p = deliver_all(
+                        res_p, p_in["sids"], pw, mp, mn, sc,
+                        target_brokers=p_in["targets"].brokers,
+                        num_brokers=num_brokers)
             if s_static is not None:
                 cand = discover(ds, index_state, s_static,
                                 s_in["last_ts"], s_in["last_size"])
                 res_s = plans.join_spatial_all(
                     ds, cand, s_in["locs"], s_in["brokers"], radii,
                     s_in["payload"], num_brokers, spatial_fn)
-            return res_p, res_s
+                if deliver:
+                    del_s = deliver_all(
+                        res_s, s_in["sids"], pw, mp, mn, sc,
+                        target_brokers=s_in["brokers"],
+                        num_brokers=num_brokers)
+            return res_p, res_s, del_p, del_s
 
         fn = jax.jit(run)
         self._cache_put(key, fn)
@@ -623,9 +855,12 @@ class BADEngine:
 
         Result-for-result equivalent to looping ``execute_channel`` — each
         channel's report carries its own counts/bytes; ``wall_time_s`` is the
-        fused wall time amortized per channel. ``deliver=True`` additionally
-        runs broker packing per channel and surfaces drop counts in
-        ``report.overflow``.
+        fused wall time amortized per channel. ``deliver=True`` runs the
+        broker convert+send stages (``broker.deliver_all``) INSIDE the same
+        jitted call — stacked wire packing, stacked sID fanout, one-hot
+        per-broker accounting, flat spill capture — and surfaces per-channel
+        ``DeliveryStats`` in ``report.overflow``, stats-identical to the
+        per-channel ``_deliver`` path.
         """
         ordered = sorted(self.channels.values(), key=lambda s: s.index)
         reports: Dict[str, ExecutionReport] = {}
@@ -643,7 +878,8 @@ class BADEngine:
                           for st in ordered)
             bucket = _pow2_bucket(pending, 6)
             max_cand = min(bucket, self.max_candidates)
-        fn = self._exec_all_fn(param_chs, spatial_chs, flags, max_cand)
+        fn = self._exec_all_fn(param_chs, spatial_chs, flags, max_cand,
+                               deliver)
         p_in = s_in = None
         if param_chs:
             targets, up_masks, domains = self._stacked_inputs(
@@ -658,6 +894,8 @@ class BADEngine:
                     [st.last_exec_ts for st in param_chs], jnp.int32),
                 last_size=jnp.asarray(
                     [st.last_exec_size for st in param_chs], jnp.int32))
+            if deliver:
+                p_in["sids"] = self._stacked_sids(param_chs, flags.aggregation)
         if spatial_chs:
             locs, ubrokers = self._stacked_spatial_inputs(spatial_chs)
             s_in = dict(
@@ -668,12 +906,14 @@ class BADEngine:
                     [st.last_exec_ts for st in spatial_chs], jnp.int32),
                 last_size=jnp.asarray(
                     [st.last_exec_size for st in spatial_chs], jnp.int32))
+            if deliver:
+                s_in["sids"] = jnp.zeros((len(spatial_chs), 0), jnp.int32)
         args = (self.dataset, self.index_state, p_in, s_in)
         if timed:  # warm the trace so wall time measures execution
             jax.block_until_ready(fn(*args))
         t0 = time.perf_counter()
-        res_p, res_s = fn(*args)
-        jax.block_until_ready((res_p, res_s))
+        res_p, res_s, del_p, del_s = fn(*args)
+        jax.block_until_ready((res_p, res_s, del_p, del_s))
         wall = time.perf_counter() - t0
         if advance:
             self.index_state = bidx.advance_watermarks(
@@ -685,18 +925,18 @@ class BADEngine:
                 st.executions += 1
         # One bulk device->host transfer per join group, then per-channel
         # numpy views: the per-channel path's int()/slice pattern would cost
-        # dozens of device round-trips here.
+        # dozens of device round-trips here. Delivery stats arrive the same
+        # way: the fused call already packed/fanned out every channel, so the
+        # host only pushes spills and reads (C,)-shaped counters.
         share = wall / len(ordered)
-        for chs, res in ((param_chs, res_p), (spatial_chs, res_s)):
+        for chs, res, dlv in ((param_chs, res_p, del_p),
+                              (spatial_chs, res_s, del_s)):
             if not chs:
                 continue
             host = jax.tree.map(np.asarray, res)
+            stats = (self._spill_and_stats(chs, flags.aggregation, dlv)
+                     if deliver else {})
             for i, st in enumerate(chs):
-                overflow = None
-                if deliver:
-                    overflow = self._deliver(
-                        st, jax.tree.map(lambda a, i=i: a[i], res),
-                        flags.aggregation)
                 reports[st.spec.name] = ExecutionReport(
                     channel=st.spec.name, flags=flags,
                     result=jax.tree.map(lambda a, i=i: a[i], host),
@@ -705,8 +945,114 @@ class BADEngine:
                     num_notified=int(host.num_notified[i]),
                     scanned=int(host.scanned[i]),
                     broker_bytes=host.broker_bytes[i],
-                    overflow=overflow)
+                    overflow=stats.get(st.spec.name))
         return reports
+
+    # ------------------------------------------------------------------
+    # spill retry
+    # ------------------------------------------------------------------
+
+    def _synthetic_result(self, rows: np.ndarray,
+                          tgts: np.ndarray) -> plans.ChannelResult:
+        """A shape-bucketed ChannelResult holding exactly the given (row,
+        target) pairs — the drain path's re-entry into the broker kernels."""
+        n = len(rows)
+        bucket = _pow2_bucket(n, 6)
+        r = np.full((bucket,), -1, np.int32)
+        t = np.full((bucket,), -1, np.int32)
+        r[:n], t[:n] = rows, tgts
+        valid = np.arange(bucket) < n
+        z = jnp.zeros((), jnp.int32)
+        nb = self.brokers.num_brokers
+        return plans.ChannelResult(
+            jnp.asarray(r)[:, None], jnp.asarray(t)[:, None],
+            jnp.asarray(valid)[:, None], jnp.asarray(r), jnp.asarray(valid),
+            z, z, z, jnp.zeros((nb,), jnp.float32), jnp.zeros((nb,), jnp.int32))
+
+    def drain_spilled(self) -> Dict[str, DrainReport]:
+        """Re-deliver spilled notifications, exactly once per stage.
+
+        Pairs lane: pop up to ``max_deliver_pairs`` for ONE (channel, layout)
+        lane per channel per round (layouts re-pack against different tables
+        with different wire widths, so a round's ``DrainReport.payload`` is
+        always one coherent buffer; a channel spilled under both layouts
+        drains the other lane next round) and re-run the convert stage
+        against the channel's CURRENT table of that layout; entries whose
+        channel version moved (or whose channel was dropped) are unroutable
+        and counted as dropped. Sids lane: pop up to ``max_notify`` per
+        channel and re-run the send stage (raw sIDs never go stale).
+        Anything that misses this round's buffers is requeued at the front —
+        never duplicated, never lost. Call once per tick until
+        ``spill.pending_pairs() + spill.pending_sids() == 0``.
+        """
+        out: Dict[str, DrainReport] = {}
+
+        def merge(name: str, rep: DrainReport) -> None:
+            prev = out.get(name)
+            if prev is None:
+                out[name] = rep
+            else:
+                out[name] = DrainReport(
+                    prev.stats.merged(rep.stats),
+                    rep.payload if prev.payload is None else prev.payload,
+                    rep.notify if prev.notify is None else prev.notify)
+
+        drained_pairs = set()
+        for name, aggregated in self.spill.pair_keys():
+            if name in drained_pairs:
+                # one pair lane per channel per round: a channel spilled
+                # under BOTH layouts re-packs against different tables with
+                # different wire widths — its other lane drains next round,
+                # so DrainReport.payload is always a single coherent buffer
+                continue
+            drained_pairs.add(name)
+            st = self.channels.get(name)
+            version = st.version if st is not None else None
+            rows, tgts, stale = self.spill.pop_pairs(
+                name, aggregated, self.max_deliver_pairs, version)
+            dropped = stale
+            payload = None
+            delivered = respilled = 0
+            if st is None:
+                dropped += len(rows)
+            elif len(rows):
+                res = self._synthetic_result(rows, tgts)
+                if st.spec.join == "spatial":
+                    sids = jnp.zeros((0,), dtype=jnp.int32)
+                else:
+                    sids = self.group_sids_array(name, aggregated)
+                buf, dlv, _ = pack_payloads(res, sids,
+                                            self.deliver_payload_words,
+                                            self.max_deliver_pairs)
+                delivered = int(dlv)
+                payload = np.asarray(buf)
+                if delivered < len(rows):   # exact in-order prefix delivered
+                    self.spill._push_front_pairs(
+                        name, aggregated, rows[delivered:], tgts[delivered:],
+                        st.version)
+                    respilled = len(rows) - delivered
+            if delivered or dropped or respilled:
+                merge(name, DrainReport(
+                    DeliveryStats(delivered, respilled, dropped, 0, 0, 0),
+                    payload=payload))
+
+        for name in self.spill.sid_keys():
+            sids = self.spill.pop_sids(name, self.max_notify)
+            if not len(sids):
+                continue
+            # identity fanout: targets ARE the sIDs, so the send stage
+            # re-emits them verbatim in spill order
+            res = self._synthetic_result(sids, sids)
+            buf, dlv, _ = fanout_sids(res, jnp.zeros((0,), jnp.int32),
+                                      self.max_notify)
+            delivered = int(dlv)
+            respilled = len(sids) - delivered
+            if respilled:
+                self.spill._push_front_sids(name, sids[delivered:])
+            merge(name, DrainReport(
+                DeliveryStats(0, 0, 0, delivered, respilled, 0),
+                notify=np.asarray(buf)))
+        return out
 
 
 def _pow2_bucket(n: int, floor_bits: int) -> int:

@@ -406,6 +406,104 @@ def join_spatial_all(ds: R.ActiveDataset, cand: CandidateSet,
 
 
 # ---------------------------------------------------------------------------
+# Flat pair streams: the stacked (C, ...) pair axes as ONE channel-major
+# stream proportional to total pending work instead of C x max-pending.
+# PairStream/ValueStream are the wire types of the broker's fused spill
+# capture (dropped pairs/sIDs keep their channel identity; the broker fills
+# them by per-channel-window gathers). The flatten_* builders below are the
+# standalone scatter-compaction API over arbitrary masks — exercised by the
+# property suites and the landing zone for eventually routing the fused join
+# output itself through a compacted stream (ROADMAP).
+# ---------------------------------------------------------------------------
+
+
+class PairStream(NamedTuple):
+    """Flat channel-major (row, channel, target) pair stream.
+
+    ``valid`` marks the live slots; ``total`` is the pre-truncation count
+    across ALL channels. ``flatten_pairs_all`` emits a compacted in-order
+    prefix (``sum(valid) == min(total, max_total)``); the broker's spill
+    capture emits per-channel windows (each channel's in-order overflow
+    prefix, up to its window size). Invalid slots hold -1.
+    """
+
+    rows: jnp.ndarray       # (P,) int32
+    channels: jnp.ndarray   # (P,) int32
+    targets: jnp.ndarray    # (P,) int32
+    valid: jnp.ndarray      # (P,) bool
+    total: jnp.ndarray      # () int32
+
+
+class ValueStream(NamedTuple):
+    """Flat channel-major (value, channel) stream (e.g. overflowed sIDs);
+    same ``valid``/``total`` semantics as ``PairStream``."""
+
+    values: jnp.ndarray     # (P,) int32
+    channels: jnp.ndarray   # (P,) int32
+    valid: jnp.ndarray      # (P,) bool
+    total: jnp.ndarray      # () int32
+
+
+def _compact_flat_indices(mask: jnp.ndarray, out_size: int):
+    """Indices of set mask positions, compacted in order into ``out_size``
+    slots. Returns (idx, valid, total); positions past the buffer are dropped
+    (never aliased onto the last slot), exactly like ``_compact``."""
+    n = mask.shape[0]
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    dest = jnp.where(mask, pos, out_size)
+    idx = jnp.zeros((out_size + 1,), dtype=jnp.int32)
+    idx = idx.at[dest].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    total = jnp.sum(mask.astype(jnp.int32))
+    valid = jnp.arange(out_size, dtype=jnp.int32) < total
+    return idx[:out_size], valid, total
+
+
+def flatten_pairs_all(pair_rows: jnp.ndarray, pair_targets: jnp.ndarray,
+                      mask: jnp.ndarray, max_total: int) -> PairStream:
+    """Compact a stacked (C, ...) masked pair set into one flat channel-major
+    (row, channel, target) stream of at most ``max_total`` entries.
+
+    Work downstream of this stream is proportional to the TOTAL pending pairs
+    across channels, not ``C x max-pending`` — the shape-bucketed stacked
+    layout's padding never survives the compaction.
+    """
+    C = pair_rows.shape[0]
+    rows = pair_rows.reshape(C, -1)
+    tgts = pair_targets.reshape(C, -1)
+    per = rows.shape[1]
+    idx, valid, total = _compact_flat_indices(mask.reshape(-1), max_total)
+    neg = jnp.full_like(idx, -1)
+    return PairStream(
+        jnp.where(valid, rows.reshape(-1)[idx], neg),
+        jnp.where(valid, (idx // per).astype(jnp.int32), neg),
+        jnp.where(valid, tgts.reshape(-1)[idx], neg),
+        valid, total)
+
+
+def flatten_result_pairs(result: ChannelResult, max_total: int) -> PairStream:
+    """The stacked fused-join output as a compacted flat pair stream: every
+    valid (record row, channel, target) pair across all channels, in
+    channel-major delivery order."""
+    return flatten_pairs_all(result.pair_rows, result.pair_targets,
+                             result.pair_valid, max_total)
+
+
+def flatten_values_all(values: jnp.ndarray, mask: jnp.ndarray,
+                       max_total: int) -> ValueStream:
+    """Compact stacked (C, M) masked values into one flat channel-major
+    (value, channel) stream of at most ``max_total`` entries."""
+    C = values.shape[0]
+    vals = values.reshape(C, -1)
+    per = vals.shape[1]
+    idx, valid, total = _compact_flat_indices(mask.reshape(-1), max_total)
+    neg = jnp.full_like(idx, -1)
+    return ValueStream(
+        jnp.where(valid, vals.reshape(-1)[idx], neg),
+        jnp.where(valid, (idx // per).astype(jnp.int32), neg),
+        valid, total)
+
+
+# ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
 

@@ -65,6 +65,88 @@ def check_pack_invariants(res, group_sids, exp_rows, exp_tgts, max_pairs):
     assert (got[d:] == 0).all()
 
 
+def random_stacked_broker_result(rng, n_channels, n_rows, max_t, n_groups,
+                                 cap):
+    """C independent random ChannelResults stacked on a leading channel axis
+    (the fused join's output layout) + stacked (C, T, cap) group-sID tables.
+    Also returns the per-channel expected delivery orders."""
+    import jax
+    singles = [random_broker_result(rng, n_rows, max_t, n_groups, cap)
+               for _ in range(n_channels)]
+    stacked = jax.tree.map(lambda *xs: jax.numpy.stack(xs),
+                           *[s[0] for s in singles])
+    group_sids = np.stack([s[1] for s in singles])
+    return stacked, group_sids, [s[2] for s in singles], [s[3] for s in singles]
+
+
+def check_deliver_all_invariants(stacked, group_sids, exp_rows, exp_tgts,
+                                 max_pairs, max_notify, spill_cap,
+                                 num_brokers=2):
+    """The fused-delivery contract, per channel: conservation per stage
+    (delivered + captured-spill + uncaptured == produced), delivered prefix
+    identical to the single-channel kernels, spill streams channel-major and
+    exact, per-broker one-hot accounting sums to delivered."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.broker import deliver_all, fanout_sids, pack_payloads
+    C = group_sids.shape[0]
+    tb = np.arange(group_sids.shape[1], dtype=np.int32)[None, :] % num_brokers
+    tb = np.broadcast_to(tb, (C, group_sids.shape[1]))
+    d = deliver_all(stacked, jnp.asarray(group_sids), 2, max_pairs,
+                    max_notify, spill_cap, target_brokers=jnp.asarray(tb),
+                    num_brokers=num_brokers)
+    pair_ch = np.asarray(d.pair_spill.channels)[np.asarray(d.pair_spill.valid)]
+    sid_ch = np.asarray(d.sid_spill.channels)[np.asarray(d.sid_spill.valid)]
+    assert (np.diff(pair_ch) >= 0).all() and (np.diff(sid_ch) >= 0).all()
+    spill_rows = np.asarray(d.pair_spill.rows)[np.asarray(d.pair_spill.valid)]
+    spill_tgts = np.asarray(d.pair_spill.targets)[np.asarray(d.pair_spill.valid)]
+    spill_sids = np.asarray(d.sid_spill.values)[np.asarray(d.sid_spill.valid)]
+    pair_total = sid_total = 0
+    for c in range(C):
+        one = jax.tree.map(lambda a, c=c: a[c], stacked)
+        sids_c = jnp.asarray(group_sids[c])
+        buf, dlv, ov = pack_payloads(one, sids_c, 2, max_pairs)
+        assert int(d.pack.delivered[c]) == int(dlv)
+        assert int(d.pack.produced[c]) == int(dlv) + int(ov)
+        np.testing.assert_array_equal(np.asarray(d.pack.payload[c]),
+                                      np.asarray(buf))
+        nbuf, ndlv, nov = fanout_sids(one, sids_c, max_notify)
+        assert int(d.fan.delivered[c]) == int(ndlv)
+        assert int(d.fan.produced[c]) == int(ndlv) + int(nov)
+        np.testing.assert_array_equal(np.asarray(d.fan.notify[c]),
+                                      np.asarray(nbuf))
+        assert int(np.asarray(d.pack.per_broker[c]).sum()) == int(dlv)
+        # spill streams: exactly the overflow tail of this channel's expected
+        # in-order delivery, truncated by the PER-CHANNEL spill window (one
+        # channel's overflow can never crowd out another's)
+        dl = int(dlv)
+        want_rows, want_tgts = exp_rows[c][dl:], exp_tgts[c][dl:]
+        sel = pair_ch == c
+        take = min(len(want_rows), spill_cap)
+        np.testing.assert_array_equal(spill_rows[sel], want_rows[:take])
+        np.testing.assert_array_equal(spill_tgts[sel], want_tgts[:take])
+        pair_total += len(want_rows)
+        full_sids = group_sids[c][exp_tgts[c]]
+        full_sids = full_sids[full_sids >= 0]
+        want_sids = full_sids[int(ndlv):]
+        take = min(len(want_sids), spill_cap)
+        np.testing.assert_array_equal(spill_sids[sid_ch == c],
+                                      want_sids[:take])
+        sid_total += len(want_sids)
+    assert int(d.pair_spill.total) == pair_total
+    assert int(d.sid_spill.total) == sid_total
+
+
+def check_delivery_conservation(stats, num_results, num_notified):
+    """delivered + spilled + dropped == produced, per stage."""
+    assert (stats.delivered_pairs + stats.spilled_pairs + stats.dropped_pairs
+            == num_results)
+    assert (stats.delivered_sids + stats.spilled_sids + stats.dropped_sids
+            == num_notified)
+    assert stats.delivered_pairs + stats.overflow_pairs == num_results
+    assert stats.delivered_sids + stats.overflow_sids == num_notified
+
+
 def check_fanout_invariants(res, group_sids, exp_tgts, max_notify):
     """Conservation over member sIDs, exact in-order prefix, every delivered
     sID exists in the group table (none invented from -1 padding), tail

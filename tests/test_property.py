@@ -12,8 +12,9 @@ from repro.core.subscriptions import Aggregator, SubscriptionTable, aggregate
 from repro.kernels.flash_decode import ref as fd_ref
 from repro.kernels.predicate_filter import ops as pf_ops
 
-from conftest import (check_fanout_invariants, check_pack_invariants,
-                      random_broker_result)
+from conftest import (check_deliver_all_invariants, check_fanout_invariants,
+                      check_pack_invariants, random_broker_result,
+                      random_stacked_broker_result)
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -129,6 +130,53 @@ def test_fanout_sids_invariants(seed, n_rows, max_t, n_groups, cap,
     res, group_sids, _, exp_tgts = random_broker_result(
         np.random.default_rng(seed), n_rows, max_t, n_groups, cap)
     check_fanout_invariants(res, group_sids, exp_tgts, max_notify)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(1, 16),
+       st.integers(1, 3), st.integers(1, 5), st.integers(1, 3),
+       st.integers(1, 10), st.integers(1, 14), st.integers(1, 24))
+@settings(max_examples=20, deadline=None)
+def test_deliver_all_invariants(seed, n_channels, n_rows, max_t, n_groups,
+                                cap, max_pairs, max_notify, spill_cap):
+    """Fused (vmapped) delivery == the single-channel kernels per channel:
+    identical buffers/counts, conservation per stage, channel-major flat
+    spill streams carrying exactly each channel's overflow tail (truncated
+    only by the shared spill buffer), one-hot per-broker sums."""
+    stacked, group_sids, exp_rows, exp_tgts = random_stacked_broker_result(
+        np.random.default_rng(seed), n_channels, n_rows, max_t, n_groups, cap)
+    check_deliver_all_invariants(stacked, group_sids, exp_rows, exp_tgts,
+                                 max_pairs, max_notify, spill_cap)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(1, 12),
+       st.integers(1, 3), st.integers(1, 40))
+@settings(**SETTINGS)
+def test_flatten_pairs_stream_invariants(seed, n_channels, n_rows, max_t,
+                                         max_total):
+    """The compacted flat (row, channel, target) stream is exactly the
+    channel-major masked pairs: in-order prefix, conservation of ``total``,
+    -1 tail (no last-slot aliasing)."""
+    from repro.core.plans import flatten_pairs_all
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 999, (n_channels, n_rows, max_t)).astype(np.int32)
+    tgts = rng.integers(0, 99, (n_channels, n_rows, max_t)).astype(np.int32)
+    mask = rng.random((n_channels, n_rows, max_t)) < 0.5
+    s = flatten_pairs_all(jnp.asarray(rows), jnp.asarray(tgts),
+                          jnp.asarray(mask), max_total)
+    flat = mask.reshape(n_channels, -1)
+    want_rows = rows.reshape(n_channels, -1)[flat]
+    want_ch = np.broadcast_to(
+        np.arange(n_channels)[:, None], flat.shape)[flat]
+    total = int(mask.sum())
+    assert int(s.total) == total
+    k = min(total, max_total)
+    assert int(np.asarray(s.valid).sum()) == k
+    np.testing.assert_array_equal(np.asarray(s.rows)[:k], want_rows[:k])
+    np.testing.assert_array_equal(np.asarray(s.channels)[:k], want_ch[:k])
+    np.testing.assert_array_equal(
+        np.asarray(s.targets)[:k], tgts.reshape(n_channels, -1)[flat][:k])
+    assert (np.asarray(s.rows)[k:] == -1).all()
+    assert (np.asarray(s.channels)[k:] == -1).all()
 
 
 @given(st.integers(1, 6), st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
