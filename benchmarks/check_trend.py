@@ -1,0 +1,87 @@
+"""Bench trend check: compare a BENCH_*.json dump against committed floors.
+
+CI's ``bench-smoke`` job runs the suite with ``--smoke --json
+BENCH_smoke.json``; this tool then compares the *ratio* rows (speedup lines
+whose ``derived`` column carries an ``xN.N`` multiplier) against
+``benchmarks/thresholds.json`` and exits non-zero when any tracked row
+regresses more than ``tolerance`` (default 30%) below its committed
+baseline. The job is non-blocking (``continue-on-error``), so a failure
+flags the PR without gating it — absolute CI timings are noisy, but the
+RATIOS (fused vs sequential, incremental vs rebuild, aggregated vs
+original) are stable enough to trend.
+
+Usage:
+    python -m benchmarks.check_trend BENCH_smoke.json \
+        [--thresholds benchmarks/thresholds.json] [--tolerance 0.30]
+
+thresholds.json format — ``baseline`` is the ratio measured when the row
+was committed; a row is healthy while ``measured >= baseline * (1 -
+tolerance)``. Missing rows fail (a deleted/renamed suite must update the
+thresholds file consciously).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+RATIO_RE = re.compile(r"x(\d+(?:\.\d+)?)")
+
+
+def parse_ratio(derived: str):
+    m = RATIO_RE.search(derived)
+    return float(m.group(1)) if m else None
+
+
+def check(results, thresholds, tolerance: float):
+    by_name = {}
+    for row in results:
+        r = parse_ratio(str(row.get("derived", "")))
+        if r is not None:
+            by_name[row["name"]] = r
+    failures, report = [], []
+    for entry in thresholds:
+        name, baseline = entry["name"], float(entry["baseline"])
+        floor = baseline * (1.0 - tolerance)
+        got = by_name.get(name)
+        if got is None:
+            failures.append(f"MISSING  {name} (baseline x{baseline:g})")
+            continue
+        status = "ok" if got >= floor else "REGRESSED"
+        report.append(f"{status:>9}  {name}: x{got:g} "
+                      f"(baseline x{baseline:g}, floor x{floor:.2f})")
+        if got < floor:
+            failures.append(report[-1])
+    return failures, report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json", help="BENCH_*.json produced by "
+                    "`python -m benchmarks.run --json`")
+    ap.add_argument("--thresholds", default="benchmarks/thresholds.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional regression below baseline")
+    args = ap.parse_args()
+    with open(args.bench_json) as f:
+        bench = json.load(f)
+    with open(args.thresholds) as f:
+        thresholds = json.load(f)
+    failures, report = check(bench.get("results", []), thresholds,
+                             args.tolerance)
+    for line in report:
+        print(line)
+    if failures:
+        print(f"\n{len(failures)} tracked ratio(s) regressed >"
+              f"{args.tolerance:.0%} or went missing:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(thresholds)} tracked ratios within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

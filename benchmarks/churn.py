@@ -1,0 +1,162 @@
+"""Sustained subscription churn: incremental (epoch/delta) vs rebuild.
+
+The pre-churn-engine control plane paid O(S) on every subscription change
+(full re-aggregation + full stacked-cache rebuild + usually a retrace per
+tick). The churn engine pays O(Δ): the aggregator touches only the affected
+(param, broker) keys and the device caches are patched in place. This suite
+measures the end-to-end difference — bulk add + bulk remove + fused
+``execute_all(deliver=True)`` per tick — at several live-subscription sizes
+and add/remove mixes, plus spatial-cohort churn.
+
+Acceptance: incremental sustains >= 5x the rebuild baseline's
+subscriptions/sec at 100k+ live subscriptions with ZERO retraces and zero
+rebuilds across steady-state ticks (both are quoted in the derived column).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.channel import tweets_about_crime, tweets_about_drugs
+from repro.core.churn import ChurnWorkload, run_ticks
+from repro.core.engine import BADEngine
+from repro.core.plans import ExecutionFlags
+from benchmarks.common import emit
+
+TICKS = 6          # timed ticks (after the untimed warm phase)
+WARMUP = 4
+ROUNDS = 4         # control-plane batches per executed tick (paper regime:
+                   # subscriptions arrive continuously between periods)
+
+
+def _loaded_engine(seed: int, n_live: int, incremental: bool,
+                   with_cohort: bool = False):
+    rng = np.random.default_rng(seed)
+    # buffers sized to the churn workload: small ingest batches, and
+    # delivery caps ABOVE the per-tick result/notify volume — spill+drain
+    # (host-driven, eagerly compiled per shape bucket) is delivery work,
+    # not the maintenance cost this suite isolates
+    eng = BADEngine(dataset_capacity=1 << 14, index_capacity=1 << 13,
+                    max_window=1 << 11, max_candidates=1 << 10,
+                    brokers=("B1", "B2", "B3", "B4"), group_cap=64,
+                    max_deliver_pairs=1 << 12, max_notify=1 << 15,
+                    max_spill=1 << 9, incremental=incremental)
+    eng.create_channel(tweets_about_drugs())
+    sids = eng.subscribe_bulk("TweetsAboutDrugs",
+                              rng.integers(0, 50, n_live),
+                              rng.integers(0, 4, n_live))
+    if with_cohort:
+        eng.create_channel(tweets_about_crime(3))
+        n_users = max(256, n_live // 16)
+        eng.set_user_locations(
+            rng.uniform(-100, 100, size=(n_users, 2)).astype(np.float32),
+            rng.integers(0, 4, n_users))
+        eng.subscribe_users("TweetsAboutCrime3",
+                            rng.choice(n_users, n_users // 2, replace=False))
+    return eng, {"TweetsAboutDrugs": sids}, rng
+
+
+def _run_mode(seed: int, n_live: int, incremental: bool, adds: int,
+              removes: int, user_churn: int = 0):
+    with_cohort = user_churn > 0
+    eng, live, rng = _loaded_engine(seed, n_live, incremental, with_cohort)
+    wl = [ChurnWorkload("TweetsAboutDrugs", adds_per_tick=adds,
+                        removes_per_tick=removes, num_brokers=4,
+                        user_channel="TweetsAboutCrime3" if with_cohort
+                        else None,
+                        user_churn_per_tick=user_churn)]
+    kw = dict(flags=ExecutionFlags.fully_optimized(), deliver=True,
+              ingest_per_tick=128, live_sids=live, churn_rounds=ROUNDS)
+    # warm phase (untimed): absorbs trace/compile AND the one-time capacity
+    # crossing as the slot table settles into its steady padded bucket
+    run_ticks(eng, wl, WARMUP, rng, warmup=WARMUP, **kw)
+    return run_ticks(eng, wl, TICKS, rng, warmup=0, **kw)
+
+
+def bench_sustained(rng, n_live: int, label: str) -> None:
+    """Balanced add/remove churn (live count hovers) — the steady state the
+    delta protocol is built for."""
+    churn = max(256, n_live // 400)
+    seed = int(rng.integers(0, 2 ** 31))
+    reps = {}
+    for mode, incremental in (("incremental", True), ("rebuild", False)):
+        rep = _run_mode(seed, n_live, incremental, churn, churn)
+        reps[mode] = rep
+        m = rep.maintenance
+        emit(f"churn/sustained/{label}/{mode}", rep.wall_s / rep.ticks,
+             f"subs_per_s={rep.subs_per_s:.0f};live={rep.live_subs}"
+             f";retraces={m.traces};rebuilds={m.rebuilds}"
+             f";patches={m.patches};results={rep.results}")
+    # identical seeds -> identical op streams -> identical SUBSCRIBER-level
+    # outcomes (group partitions may differ within compact_slack, so the
+    # pair/result count is not the invariant — the notified sIDs are)
+    assert reps["incremental"].delivered_sids == \
+        reps["rebuild"].delivered_sids, \
+        (reps["incremental"].delivered_sids, reps["rebuild"].delivered_sids)
+    ratio = reps["incremental"].subs_per_s / max(reps["rebuild"].subs_per_s,
+                                                 1e-9)
+    steady = reps["incremental"].maintenance
+    emit(f"churn/sustained/{label}/speedup", 0.0,
+         f"x{ratio:.1f} (target >= 5x at 100k+); "
+         f"steady retraces={steady.traces} rebuilds={steady.rebuilds}")
+
+
+def bench_mixed(rng, n_live: int, label: str) -> None:
+    """Unbalanced mixes: add-heavy growth (may legitimately cross padded
+    capacity -> counted rebuilds) and remove-heavy shrink (exercises slot
+    free-lists + key compaction)."""
+    churn = max(256, n_live // 400)
+    for tag, adds, removes in (("add_heavy", churn, churn // 4),
+                               ("remove_heavy", churn // 4, churn)):
+        seed = int(rng.integers(0, 2 ** 31))
+        out = {}
+        for mode, incremental in (("incremental", True), ("rebuild", False)):
+            rep = _run_mode(seed, n_live, incremental, adds, removes)
+            out[mode] = rep
+            m = rep.maintenance
+            emit(f"churn/mixed/{label}/{tag}/{mode}", rep.wall_s / rep.ticks,
+                 f"subs_per_s={rep.subs_per_s:.0f};live={rep.live_subs}"
+                 f";retraces={m.traces};rebuilds={m.rebuilds}")
+        ratio = out["incremental"].subs_per_s / max(
+            out["rebuild"].subs_per_s, 1e-9)
+        emit(f"churn/mixed/{label}/{tag}/speedup", 0.0, f"x{ratio:.1f}")
+
+
+def bench_cohort(rng, n_live: int, label: str) -> None:
+    """Spatial-cohort churn riding the same ticks: user subscribe/unsubscribe
+    patch the stacked user-target rows in place."""
+    churn = max(256, n_live // 400)
+    seed = int(rng.integers(0, 2 ** 31))
+    out = {}
+    for mode, incremental in (("incremental", True), ("rebuild", False)):
+        rep = _run_mode(seed, n_live, incremental, churn, churn,
+                        user_churn=max(64, churn // 8))
+        out[mode] = rep
+        m = rep.maintenance
+        emit(f"churn/cohort/{label}/{mode}", rep.wall_s / rep.ticks,
+             f"subs_per_s={rep.subs_per_s:.0f};user_ops="
+             f"{rep.user_adds + rep.user_removes}"
+             f";retraces={m.traces};rebuilds={m.rebuilds}")
+    ratio = out["incremental"].subs_per_s / max(out["rebuild"].subs_per_s,
+                                                1e-9)
+    emit(f"churn/cohort/{label}/speedup", 0.0, f"x{ratio:.1f}")
+
+
+def run(rng) -> None:
+    # NOT routed through scale(): the O(Δ) vs O(S) separation is a function
+    # of the live-set size, so shrinking it 16x would benchmark the regime
+    # below the crossover. These sizes run in seconds; only the large
+    # points stay out of smoke mode.
+    for n, label in ((10_000, "10k"), (100_000, "100k")):
+        bench_sustained(rng, n, label)
+    bench_mixed(rng, 100_000, "100k")
+    bench_cohort(rng, 100_000, "100k")
+    from benchmarks.common import SMOKE
+    if not SMOKE:
+        # the shared fused execute+deliver floor (~constant per tick) bounds
+        # the ratio at small S; the target >= 5x emerges from ~1M live
+        bench_sustained(rng, 400_000, "400k")
+        bench_sustained(rng, 1_000_000, "1M")
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

@@ -20,7 +20,7 @@ import time
 
 import numpy as np
 
-from benchmarks import (aggregation, bad_index, broker_ops, common,
+from benchmarks import (aggregation, bad_index, broker_ops, churn, common,
                         group_size, kernel_perf, max_subscriptions,
                         multi_channel, query_plan, real_world, scaling)
 
@@ -35,6 +35,7 @@ SUITES = {
     "fig21_real_world": real_world.run,
     "kernel_perf": kernel_perf.run,
     "multi_channel": multi_channel.run,
+    "churn_sustained": churn.run,
 }
 
 

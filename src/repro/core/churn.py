@@ -1,0 +1,214 @@
+"""Sustained-churn driver: O(Δ) subscription maintenance under load.
+
+The paper's strategic aggregation (§4.1) assumes subscriptions arrive
+continuously; this module drives that regime end to end. ``run_ticks``
+interleaves bulk subscription adds/removals (and optional spatial-cohort
+churn) with fused ``execute_all(deliver=True)`` ticks, and reports the
+sustained control-plane throughput together with the engine's maintenance
+counters — at steady state the epoch/delta protocol should show *patches*
+advancing while *traces* and *rebuilds* stay flat (every device cache is
+patched in place; nothing recompiles).
+
+The driver owns the live-sID bookkeeping (which subscriptions exist and can
+be removed) so the engine under test is exercised purely through its public
+control-plane API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.engine import BADEngine, MaintenanceStats
+from repro.core.plans import ExecutionFlags
+from repro.data.synthetic import tweet_batch
+
+
+@dataclasses.dataclass
+class ChurnReport:
+    """One ``run_ticks`` run. ``wall_s`` covers the TIMED ticks only
+    (``warmup`` ticks are excluded so trace/compile time is not billed to
+    steady-state throughput); ``maintenance`` is the engine counter delta
+    over the timed ticks."""
+
+    ticks: int
+    adds: int
+    removes: int
+    user_adds: int
+    user_removes: int
+    wall_s: float
+    maintenance: MaintenanceStats
+    live_subs: int
+    results: int
+    delivered_pairs: int
+    delivered_sids: int
+    spilled: int
+    dropped: int
+
+    @property
+    def subs_per_s(self) -> float:
+        """Sustained control-plane throughput: subscription mutations
+        (adds + removes + cohort churn) per wall second, execution and
+        delivery included."""
+        ops = self.adds + self.removes + self.user_adds + self.user_removes
+        return ops / max(self.wall_s, 1e-9)
+
+    @property
+    def ticks_per_s(self) -> float:
+        return self.ticks / max(self.wall_s, 1e-9)
+
+
+class _LivePool:
+    """Amortized append + O(k) swap-remove sample over the live sIDs —
+    driver bookkeeping must stay o(live) per batch or it would be billed to
+    the engine under test."""
+
+    def __init__(self, init: np.ndarray):
+        self.n = len(init)
+        self.buf = np.empty((max(1024, 2 * self.n),), np.int32)
+        self.buf[:self.n] = init
+
+    def add(self, new: np.ndarray) -> None:
+        need = self.n + len(new)
+        if need > len(self.buf):
+            nb = np.empty((max(need, 2 * len(self.buf)),), np.int32)
+            nb[:self.n] = self.buf[:self.n]
+            self.buf = nb
+        self.buf[self.n:need] = new
+        self.n = need
+
+    def sample_remove(self, rng: np.random.Generator,
+                      n_rm: int) -> np.ndarray:
+        """Remove ~n_rm random live sIDs (unique positions; duplicates in
+        the draw collapse) and return them."""
+        pick = np.unique(rng.integers(0, self.n, n_rm))
+        out = self.buf[pick].copy()
+        k = len(pick)
+        n0 = self.n - k
+        mark = np.zeros((k,), bool)
+        mark[pick[pick >= n0] - n0] = True
+        self.buf[pick[pick < n0]] = self.buf[n0:self.n][~mark]
+        self.n = n0
+        return out
+
+    def view(self) -> np.ndarray:
+        return self.buf[:self.n]
+
+
+@dataclasses.dataclass
+class ChurnWorkload:
+    """Per-tick churn mix for one param channel."""
+
+    channel: str
+    adds_per_tick: int = 512
+    removes_per_tick: int = 512
+    param_domain: int = 50
+    num_brokers: int = 1
+    # spatial cohort churn (requires the engine to hold a spatial channel
+    # with an explicit cohort); 0 disables
+    user_channel: Optional[str] = None
+    user_churn_per_tick: int = 0
+
+
+def run_ticks(engine: BADEngine,
+              workloads: List[ChurnWorkload],
+              ticks: int,
+              rng: np.random.Generator,
+              flags: ExecutionFlags = None,
+              deliver: bool = True,
+              ingest_per_tick: int = 256,
+              make_batch: Callable = None,
+              warmup: int = 2,
+              live_sids: Optional[Dict[str, np.ndarray]] = None,
+              churn_rounds: int = 1) -> ChurnReport:
+    """Drive ``ticks`` churn ticks: per workload, bulk-add then bulk-remove
+    subscriptions, optionally churn a spatial cohort, ingest a record batch,
+    run the fused ``execute_all`` (optionally with fused delivery), and
+    drain any spilled notifications.
+
+    ``live_sids`` (channel -> sID array) seeds the removable population —
+    pass the sIDs of a preloaded engine; it is updated in place. The first
+    ``warmup`` ticks are untimed (they absorb trace/compile and the first
+    capacity rebuild); the returned report covers the rest.
+
+    ``churn_rounds`` control-plane batches land per executed tick — the
+    paper's regime, where subscriptions arrive continuously between channel
+    periods. Every batch pays the maintenance cost (the rebuild baseline
+    re-aggregates per BATCH, exactly as the pre-churn-engine control plane
+    did on every ``subscribe_bulk``).
+    """
+    flags = flags or ExecutionFlags.fully_optimized()
+    make_batch = make_batch or (lambda r, n, t0: tweet_batch(r, n, t0=t0))
+    live: Dict[str, _LivePool] = {
+        w.channel: _LivePool(np.zeros((0,), np.int32)) for w in workloads}
+    if live_sids:
+        live.update({k: _LivePool(np.asarray(v, np.int32))
+                     for k, v in live_sids.items()})
+    adds = removes = user_adds = user_removes = 0
+    results = dp = ds = sp = dr = 0
+    t0_clock = 0.0
+    snap = engine.maintenance.snapshot()
+    now = engine.now
+    for tick in range(ticks):
+        if tick == warmup:
+            snap = engine.maintenance.snapshot()
+            t0_clock = time.perf_counter()
+        timed = tick >= warmup
+        for _ in range(max(1, churn_rounds)):
+            for w in workloads:
+                if w.adds_per_tick:
+                    params = rng.integers(0, w.param_domain,
+                                          w.adds_per_tick).astype(np.int32)
+                    brokers = rng.integers(0, w.num_brokers,
+                                           w.adds_per_tick).astype(np.int32)
+                    new = engine.subscribe_bulk(w.channel, params, brokers)
+                    live[w.channel].add(new)
+                    if timed:
+                        adds += len(new)
+                n_rm = min(w.removes_per_tick, live[w.channel].n)
+                if n_rm:
+                    rm = live[w.channel].sample_remove(rng, n_rm)
+                    gone = engine.remove_subscriptions(w.channel, rm)
+                    if timed:
+                        removes += gone
+                if w.user_channel and w.user_churn_per_tick:
+                    nu = engine.user_locations.shape[0]
+                    k = w.user_churn_per_tick
+                    out = engine.unsubscribe_users(
+                        w.user_channel, rng.integers(0, nu, k))
+                    inn = engine.subscribe_users(
+                        w.user_channel, rng.integers(0, nu, k))
+                    if timed:
+                        user_removes += out
+                        user_adds += inn
+        if ingest_per_tick:
+            now += 100
+            engine.ingest(make_batch(rng, ingest_per_tick, now))
+        reports = engine.execute_all(flags, timed=False, deliver=deliver)
+        if timed:
+            for rep in reports.values():
+                results += rep.num_results
+                if rep.overflow is not None:
+                    dp += rep.overflow.delivered_pairs
+                    ds += rep.overflow.delivered_sids
+                    sp += rep.overflow.spilled_pairs + rep.overflow.spilled_sids
+                    dr += rep.overflow.dropped_pairs + rep.overflow.dropped_sids
+        while engine.spill.pending_pairs() + engine.spill.pending_sids() > 0:
+            for drr in engine.drain_spilled().values():
+                if timed:
+                    dp += drr.stats.delivered_pairs
+                    ds += drr.stats.delivered_sids
+                    dr += drr.stats.dropped_pairs + drr.stats.dropped_sids
+    wall = time.perf_counter() - t0_clock if ticks > warmup else 0.0
+    if live_sids is not None:    # hand the surviving population back
+        for k, pool in live.items():
+            live_sids[k] = pool.view().copy()
+    return ChurnReport(
+        ticks=max(0, ticks - warmup), adds=adds, removes=removes,
+        user_adds=user_adds, user_removes=user_removes, wall_s=wall,
+        maintenance=engine.maintenance.since(snap),
+        live_subs=sum(pool.n for pool in live.values()),
+        results=results, delivered_pairs=dp, delivered_sids=ds,
+        spilled=sp, dropped=dr)

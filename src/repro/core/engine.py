@@ -50,6 +50,83 @@ from repro.core.user_params import UserParameters
 
 
 @dataclasses.dataclass
+class MaintenanceStats:
+    """Counters for the epoch/delta maintenance machinery.
+
+    ``traces`` counts jit TRACES of engine-owned device functions — the
+    increment sits inside the traced Python bodies, so cached executions
+    never count; ``rebuilds`` counts full stacked-cache rebuilds;
+    ``patches`` counts in-place delta patch applications. Steady-state churn
+    should show ``patches`` advancing while ``traces`` and ``rebuilds`` stay
+    flat (the churn suite asserts exactly that)."""
+
+    traces: int = 0
+    rebuilds: int = 0
+    patches: int = 0
+
+    def snapshot(self) -> "MaintenanceStats":
+        return dataclasses.replace(self)
+
+    def since(self, prior: "MaintenanceStats") -> "MaintenanceStats":
+        return MaintenanceStats(self.traces - prior.traces,
+                                self.rebuilds - prior.rebuilds,
+                                self.patches - prior.patches)
+
+
+class UserCohort:
+    """Stable-slot set of global user ids subscribed to ONE spatial channel.
+
+    Slot index == row in that channel's stacked user-set (and the pair
+    target index its results carry), so cohort churn patches device rows in
+    place exactly like the Aggregator's group slots; freed slots are reused,
+    never leaked into padded capacity."""
+
+    def __init__(self):
+        self._uids: List[int] = []          # per slot; -1 when free
+        self._slot: Dict[int, int] = {}     # live uid -> slot
+        self._free: List[int] = []
+
+    @property
+    def num_slots(self) -> int:
+        return len(self._uids)
+
+    @property
+    def num_users(self) -> int:
+        return len(self._slot)
+
+    def add(self, uids: np.ndarray) -> set:
+        """Attach users; returns the slots touched (already-present ids are
+        no-ops)."""
+        touched = set()
+        for u in np.asarray(uids, dtype=np.int32).ravel().tolist():
+            if u in self._slot:
+                continue
+            if self._free:
+                s = self._free.pop()
+                self._uids[s] = u
+            else:
+                s = len(self._uids)
+                self._uids.append(u)
+            self._slot[u] = s
+            touched.add(s)
+        return touched
+
+    def remove(self, uids: np.ndarray) -> set:
+        touched = set()
+        for u in np.asarray(uids, dtype=np.int32).ravel().tolist():
+            s = self._slot.pop(u, None)
+            if s is not None:
+                self._uids[s] = -1
+                self._free.append(s)
+                touched.add(s)
+        return touched
+
+    def slot_uids(self) -> np.ndarray:
+        """(num_slots,) int32 uid per slot, -1 holes."""
+        return np.asarray(self._uids, dtype=np.int32).reshape(-1)
+
+
+@dataclasses.dataclass
 class ChannelState:
     spec: ChannelSpec
     index: int                      # row in the stacked conditionsList / BADIndexState
@@ -58,21 +135,105 @@ class ChannelState:
     last_exec_ts: int = 0
     last_exec_size: int = 0
     executions: int = 0
-    # device-resident TargetArrays + host group/flat views, cached per channel
-    # and explicitly invalidated whenever the subscription set changes;
-    # ``version`` keys the engine's stacked multi-channel caches
-    version: int = 0
+    # ``epoch`` is a total order over this channel's subscription state:
+    # bumped on EVERY control-plane change. It keys spill staleness and the
+    # engine's epoch-tracked device caches; ``delta_log`` holds the
+    # (epoch, GroupDelta) records a cache reflecting epoch e applies to
+    # catch up to the present — any gap (log overflow, out-of-band mutation)
+    # forces that cache to fully rebuild instead.
+    epoch: int = 0
+    delta_log: Deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=64))
+    # spatial channels: explicit subscriber cohort (None = every user, the
+    # legacy global-UserLocations semantics), with its own epoch/delta log
+    cohort: Optional[UserCohort] = None
+    user_epoch: int = 0
+    user_delta_log: Deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=64))
+    # device-resident TargetArrays + host group/flat views, cached per
+    # channel and dropped whenever the subscription set changes (the
+    # per-channel path is the from-scratch reference the delta-maintained
+    # stacked caches are tested against)
     _targets_flat: Optional[plans.TargetArrays] = None
     _targets_grouped: Optional[plans.TargetArrays] = None
     _groups: Optional[subs.SubscriptionGroups] = None
     _flat: Optional[subs.SubscriptionTable] = None
     _host_targets: Dict[bool, Tuple] = dataclasses.field(default_factory=dict)
+    _cohort_users: Optional[Tuple] = None
+
+    def note_change(self) -> None:
+        """Advance the epoch and log the aggregator's accumulated delta so
+        epoch-tracked caches can patch in place instead of rebuilding."""
+        delta = self.aggregator.take_delta()
+        self.epoch += 1
+        self.delta_log.append((self.epoch, delta))
+        self._drop_host_caches()
+
+    def note_user_change(self, touched_slots: set) -> None:
+        """Cohort churn: slots remap, so spatial pair spills go stale (epoch
+        bump) and the stacked user-set cache gets a patchable delta."""
+        self.epoch += 1
+        self.user_epoch += 1
+        self.user_delta_log.append((self.user_epoch,
+                                    frozenset(touched_slots)))
+        self._drop_host_caches()
 
     def invalidate_targets(self) -> None:
-        self.version += 1
+        """Out-of-band invalidation (no delta recorded): the safety hatch
+        for callers that mutate the aggregator directly — every
+        epoch-tracked cache sees the gap and fully rebuilds."""
+        self.aggregator.take_delta()
+        self.epoch += 1
+        self._drop_host_caches()
+
+    def _drop_host_caches(self) -> None:
         self._targets_flat = self._targets_grouped = None
         self._groups = self._flat = None
         self._host_targets = {}
+        self._cohort_users = None
+
+
+@dataclasses.dataclass
+class _GroupCache:
+    """Epoch-tracked stacked device targets for the fused param-join path.
+
+    Capacity-padded (tmax slots / dmax domain / mmax fan-out / cap members)
+    so shapes — and therefore the fused plan's trace — are stable across
+    churn; group deltas patch rows in place and ``epochs`` records the
+    per-channel subscription epoch the arrays reflect."""
+
+    names: Tuple[str, ...]
+    aggregated: bool
+    epochs: List[int]
+    tmax: int
+    dmax: int
+    mmax: int
+    cap: int
+    targets: plans.TargetArrays
+    up_masks: jnp.ndarray           # (C, dmax) bool
+    domains: jnp.ndarray            # (C,) int32
+    sids: jnp.ndarray               # (C, tmax, cap) int32
+
+
+@dataclasses.dataclass
+class _SpatialCache:
+    """Epoch-tracked stacked per-channel user sets for the fused spatial
+    join; cohort deltas patch slot rows in place. ``identity`` is True when
+    every channel serves the full global user set — delivery then uses the
+    0-width identity fanout exactly as before cohorts existed."""
+
+    names: Tuple[str, ...]
+    user_version: int
+    cohorted: Tuple[bool, ...]
+    epochs: List[int]               # per-channel user_epoch reflected
+    ub: int
+    locs: jnp.ndarray               # (C, ub, 2) f32, -FAR holes
+    brokers: jnp.ndarray            # (C, ub) int32
+    uids: jnp.ndarray               # (C, ub) int32 global uid per slot, -1 holes
+
+    @property
+    def identity(self) -> bool:
+        return not any(self.cohorted)
 
 
 class SpillQueue:
@@ -80,16 +241,17 @@ class SpillQueue:
 
     Two lanes, mirroring the broker's two delivery stages: *pairs* (result
     pairs that missed the convert-stage wire buffer, keyed by channel and
-    target layout so a drain re-packs against the right table) and *sids*
-    (end-subscriber ids that missed the send-stage notify buffer). Entries
-    keep their channel identity; each lane is bounded by ``capacity`` —
-    pushes past it are rejected (the caller counts them as dropped, so
-    nothing is ever lost *silently*).
+    target LAYOUT — False = flat rows, True = compacted group rows,
+    "slot" = aggregator slot rows — so a drain re-packs against the right
+    table) and *sids* (end-subscriber ids that missed the send-stage notify
+    buffer). Entries keep their channel identity; each lane is bounded by
+    ``capacity`` — pushes past it are rejected (the caller counts them as
+    dropped, so nothing is ever lost *silently*).
 
-    Pair entries record the channel's subscription ``version`` at spill time:
+    Pair entries record the channel's subscription EPOCH at spill time:
     target indices are only meaningful against the table they were produced
     from, so a drain discards (and counts as dropped) entries whose channel
-    re-subscribed in between. Raw sIDs never go stale.
+    churned in between. Raw sIDs never go stale.
     """
 
     def __init__(self, capacity: int = 1 << 16):
@@ -241,7 +403,8 @@ class BADEngine:
                  max_notify: int = 1 << 14,
                  deliver_payload_words: int = 8,
                  max_spill: int = 1 << 13,
-                 spill_capacity: int = 1 << 16):
+                 spill_capacity: int = 1 << 16,
+                 incremental: bool = True):
         self.schema = schema
         self.dataset = R.ActiveDataset.create(dataset_capacity, schema)
         self.index_capacity = index_capacity
@@ -271,9 +434,17 @@ class BADEngine:
         # compiled plan caches (single-channel and fused all-channel), keyed
         # on the specs/flags they close over; cleared on channel create/drop
         self._exec_cache: Dict = {}
-        # stacked device targets for execute_all: one warm entry per layout
-        # (aggregated / flat), each validated by its channel-version key
+        # stacked device state for execute_all: one epoch-tracked entry per
+        # layout (aggregated / flat / spatial). With ``incremental`` the
+        # aggregated + spatial entries are patched in place from group /
+        # cohort deltas (capacity-padded shapes, so no retrace); without it
+        # every epoch move rebuilds from host (the pre-churn-engine
+        # behavior, kept as the benchmark baseline)
         self._stacked_cache: Dict = {}
+        self.incremental = incremental
+        self.maintenance = MaintenanceStats()
+        self._patch_groups_jit: Optional[Callable] = None
+        self._patch_spatial_jit: Optional[Callable] = None
 
     # ------------------------------------------------------------------
     # control plane
@@ -315,7 +486,7 @@ class BADEngine:
         bid = self.brokers.names[broker]
         sid = st.aggregator.add_subscription(param, bid, sid)
         st.user_params.add(param)
-        st.invalidate_targets()
+        st.note_change()
         return sid
 
     def subscribe_bulk(self, channel: str, params: np.ndarray,
@@ -336,9 +507,16 @@ class BADEngine:
         nb = self.brokers.num_brokers
         if brokers.size and (int(brokers.min()) < 0 or int(brokers.max()) >= nb):
             raise ValueError(f"broker ids out of [0, {nb}) for {channel}")
-        sids = st.aggregator.add_bulk(params, brokers)
-        st.user_params.add_bulk(params)
-        st.invalidate_targets()
+        if self.incremental:
+            sids = st.aggregator.add_bulk(params, brokers)
+            st.user_params.add_bulk(params)
+            st.note_change()
+        else:
+            # the rebuild baseline: O(S) re-aggregation (group identity not
+            # preserved) + out-of-band invalidation (full cache rebuild)
+            sids = st.aggregator.rebuild_bulk(params, brokers)
+            st.user_params.add_bulk(params)
+            st.invalidate_targets()
         return sids
 
     def unsubscribe(self, channel: str, param: int, broker: str, sid: int) -> bool:
@@ -346,8 +524,55 @@ class BADEngine:
         ok = st.aggregator.remove_subscription(param, self.brokers.names[broker], sid)
         if ok:
             st.user_params.remove(param)
-            st.invalidate_targets()
+            st.note_change()
         return ok
+
+    def remove_subscriptions(self, channel: str, sids: np.ndarray) -> int:
+        """Bulk removal by sID: O(Δ) routing through the aggregator's
+        sid->slot map, UserParameters refcounts decremented for every
+        subscription actually removed (so the early semi-join mask can
+        SHRINK as interests lapse), one epoch bump. Unknown sIDs are
+        ignored; returns the number removed."""
+        st = self.channels[channel]
+        params = st.aggregator.remove_bulk(np.asarray(sids))
+        if params.size:
+            st.user_params.remove_bulk(params)
+            st.note_change()
+        return int(params.size)
+
+    def subscribe_users(self, channel: str, user_ids: np.ndarray) -> int:
+        """Attach users to a spatial channel's cohort. The first call
+        converts the channel from the legacy all-users semantics to an
+        explicit cohort holding exactly the given ids. Returns the number
+        newly attached."""
+        st = self.channels[channel]
+        if st.spec.join != "spatial":
+            raise ValueError(f"{channel} is not a spatial channel")
+        uids = np.asarray(user_ids, dtype=np.int32).ravel()
+        nu = self.user_locations.shape[0]
+        if uids.size and (int(uids.min()) < 0 or int(uids.max()) >= nu):
+            raise ValueError(f"user ids out of [0, {nu})")
+        created = st.cohort is None
+        if created:
+            st.cohort = UserCohort()
+        touched = st.cohort.add(uids)
+        if touched or created:
+            # cohort CREATION alone changes semantics (all-users ->
+            # explicit cohort) and remaps spill target space: bump even
+            # when no id was new
+            st.note_user_change(touched)
+        return len(touched)
+
+    def unsubscribe_users(self, channel: str, user_ids: np.ndarray) -> int:
+        """Detach users from a spatial channel's cohort (no-op for ids not
+        in it). Returns the number detached."""
+        st = self.channels[channel]
+        if st.cohort is None:
+            return 0
+        touched = st.cohort.remove(np.asarray(user_ids, dtype=np.int32))
+        if touched:
+            st.note_user_change(touched)
+        return len(touched)
 
     def set_user_locations(self, locations: np.ndarray,
                            brokers: Optional[np.ndarray] = None) -> None:
@@ -388,16 +613,18 @@ class BADEngine:
         self.index_state = new
         self._ingest_fn = None  # shapes changed; re-trace
         self._exec_cache.clear()  # compiled plans bind conds + channel rows
-        # stacked targets are keyed by (name, version); a same-named channel
-        # re-created at version 0 would collide, so drop them here too
+        # stacked caches track per-channel epochs; a same-named channel
+        # re-created at epoch 0 would collide, so drop them here too
         self._stacked_cache.clear()
 
     def _build_ingest(self):
         conds = self._conds
         use_pallas = self.use_pallas
+        maint = self.maintenance
 
         @jax.jit
         def ingest_step(ds, index_state, batch):
+            maint.traces += 1          # Python body runs at trace time only
             ds, row_ids = _append(ds, batch)
             if use_pallas:
                 from repro.kernels.predicate_filter import ops as pf_ops
@@ -465,6 +692,39 @@ class BADEngine:
             st._flat = subs.flatten_groups(groups)
         return st._flat
 
+    def _cohort_device(self, st: ChannelState) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray,
+                                                        jnp.ndarray]:
+        """One cohort channel's device (locs, brokers, slot->uid table),
+        cached on the ChannelState by (user_epoch, user_version) — the
+        per-channel join AND the delivery/drain paths read the same upload."""
+        key = (st.user_epoch, self._user_version)
+        if st._cohort_users is not None and st._cohort_users[0] == key:
+            return st._cohort_users[1]
+        locs, brokers, uids = self._cohort_rows(st)
+        val = (jnp.asarray(locs.reshape(-1, 2)), jnp.asarray(brokers),
+               jnp.asarray(uids)[:, None])
+        st._cohort_users = (key, val)
+        return val
+
+    def _channel_users(self, st: ChannelState) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+        """One channel's user set for the per-channel spatial join: the
+        global tables when it has no cohort, else the cohort's slot-shaped
+        gather (holes at the far sentinel, so slot indices — the pair
+        targets — line up with the fused stacked rows)."""
+        if st.spec.join != "spatial" or st.cohort is None:
+            return self.user_locations, self.user_brokers
+        return self._cohort_device(st)[:2]
+
+    def _spatial_sids_table(self, st: ChannelState) -> Optional[jnp.ndarray]:
+        """Slot->uid delivery table for a cohort spatial channel ((U, 1),
+        -1 holes); None selects the legacy identity fanout (no cohort:
+        targets already ARE global user ids)."""
+        if st.cohort is None:
+            return None
+        return self._cohort_device(st)[2]
+
     def group_sids_array(self, channel: str, aggregated: bool) -> jnp.ndarray:
         st = self.channels[channel]
         if aggregated:
@@ -496,8 +756,11 @@ class BADEngine:
         use_pallas = self.use_pallas
         ch_idx = st.index
 
+        maint = self.maintenance
+
         def run(ds, index_state, targets, up_mask, last_ts, last_size,
                 user_locations, user_brokers):
+            maint.traces += 1          # trace-time side effect: counts traces
             if flags.scan_mode == "full":
                 cand = plans.candidates_full_scan(ds, conds_one, last_ts, max_cand)
             elif flags.scan_mode == "window":
@@ -539,10 +802,14 @@ class BADEngine:
             pw, mp = self.deliver_payload_words, self.max_deliver_pairs
             mn, sc = self.max_notify, self.max_spill
             nb = self.brokers.num_brokers
-            self._deliver_jit = jax.jit(
-                lambda res, sids, tb: deliver_all(
-                    res, sids, pw, mp, mn, sc,
-                    target_brokers=tb, num_brokers=nb))
+            maint = self.maintenance
+
+            def deliver(res, sids, tb):
+                maint.traces += 1
+                return deliver_all(res, sids, pw, mp, mn, sc,
+                                   target_brokers=tb, num_brokers=nb)
+
+            self._deliver_jit = jax.jit(deliver)
         return self._deliver_jit
 
     def _deliver(self, st: ChannelState, result: plans.ChannelResult,
@@ -552,23 +819,34 @@ class BADEngine:
         (delivered + spilled + dropped == produced, per stage)."""
         res1 = jax.tree.map(lambda a: a[None], result)
         if st.spec.join == "spatial":
-            # spatial targets ARE end-user ids; a 0-wide table selects the
-            # brokers' identity fanout (they read targets directly and never
-            # index the table's values)
-            sids = jnp.zeros((1, 0), dtype=jnp.int32)
-            tb = self.user_brokers[None]
+            tbl = self._spatial_sids_table(st)
+            if tbl is None:
+                # spatial targets ARE end-user ids; a 0-wide table selects
+                # the brokers' identity fanout (they read targets directly
+                # and never index the table's values)
+                sids = jnp.zeros((1, 0), dtype=jnp.int32)
+                tb = self.user_brokers[None]
+            else:
+                # cohort channel: targets are cohort SLOTS; the slot->uid
+                # table maps them to global user ids, brokers follow the
+                # cohort rows
+                sids = tbl[None]
+                tb = self._channel_users(st)[1][None]
         else:
             sids = self.group_sids_array(st.spec.name, aggregated)[None]
             tb = self._targets(st, aggregated).brokers[None]
         d = self._delivery_fn()(res1, sids, tb)
         return self._spill_and_stats([st], aggregated, d)[st.spec.name]
 
-    def _spill_and_stats(self, chs: List[ChannelState], aggregated: bool,
+    def _spill_and_stats(self, chs: List[ChannelState], layout,
                          d: FusedDelivery) -> Dict[str, DeliveryStats]:
         """Host side of a delivery: push the captured flat spill streams into
         the SpillQueue per channel (entries past the queue's capacity — or
         past the device capture buffer — become counted drops) and assemble
-        each channel's conserving DeliveryStats."""
+        each channel's conserving DeliveryStats. ``layout`` tags the pair
+        lane with the TARGET INDEX SPACE the producing join used (False =
+        flat rows, True = compacted group rows, "slot" = aggregator slot
+        rows) so the drain re-packs against the matching table."""
         pack_d = np.asarray(d.pack.delivered)
         pack_p = np.asarray(d.pack.produced)
         fan_d = np.asarray(d.fan.delivered)
@@ -585,8 +863,8 @@ class BADEngine:
         for i, st in enumerate(chs):
             name = st.spec.name
             sel = pchan == i
-            spilled_p = self.spill.push_pairs(name, aggregated, prows[sel],
-                                              ptgts[sel], st.version)
+            spilled_p = self.spill.push_pairs(name, layout, prows[sel],
+                                              ptgts[sel], st.epoch)
             sel = schan == i
             spilled_s = self.spill.push_sids(name, svals[sel])
             ov_p = int(pack_p[i] - pack_d[i])
@@ -622,7 +900,7 @@ class BADEngine:
         args = (self.dataset, self.index_state, targets, up_mask,
                 jnp.asarray(st.last_exec_ts, jnp.int32),
                 jnp.asarray(st.last_exec_size, jnp.int32),
-                self.user_locations, self.user_brokers)
+                *self._channel_users(st))
         if timed:  # warm the trace so wall time measures execution, not tracing
             jax.block_until_ready(fn(*args))
         t0 = time.perf_counter()
@@ -648,99 +926,347 @@ class BADEngine:
     # ------------------------------------------------------------------
 
     def _stacked_inputs(self, chs: List[ChannelState], aggregated: bool):
-        """Device-resident shape-bucketed targets for all param channels.
+        """Device-resident shape-bucketed targets for all param channels —
+        see ``_group_state`` for the epoch/delta maintenance contract."""
+        c = self._group_state(chs, aggregated)
+        return c.targets, c.up_masks, c.domains
 
-        Per-channel targets are padded to shared power-of-two buckets (max
-        target count / join fan-out across channels, real max domain) so the
-        fused trace survives subscription growth; -1 / 0 padding can never
-        form a valid pair. Cached until any channel's subscription version
-        moves.
-        """
-        key = tuple((st.spec.name, st.version) for st in chs)
-        hit = self._stacked_cache.get(aggregated)
-        if hit is not None and hit[0] == key:
-            return hit[1]
-        hosts = [self._targets_host(st, aggregated) for st in chs]
+    def _stacked_sids(self, chs: List[ChannelState],
+                      aggregated: bool) -> jnp.ndarray:
+        """Stacked device group-sID tables (C, tmax, cap) for fused
+        delivery; rows align with the target slots of the SAME cache entry
+        (one patch updates both)."""
+        return self._group_state(chs, aggregated).sids
+
+    def _group_state(self, chs: List[ChannelState],
+                     aggregated: bool) -> _GroupCache:
+        """The fused path's stacked group state, maintained by the
+        epoch/delta protocol.
+
+        Shapes are capacity-padded to shared power-of-two buckets (tmax slot
+        rows / real max domain / mmax join fan-out), so the fused trace is
+        stable across churn; -1 / 0 padding can never form a valid pair. On
+        an epoch move the entry is PATCHED in place from the channels' group
+        deltas (O(delta) host work + one jitted scatter per changed channel);
+        it fully rebuilds only when padded capacity is exceeded, a delta is
+        unavailable (log gap / out-of-band mutation), the channel set
+        changed, or the engine runs with ``incremental=False`` — the flat
+        layout always rebuilds (per-subscription rows have no stable slot
+        identity)."""
+        names = tuple(st.spec.name for st in chs)
+        epochs = [st.epoch for st in chs]
+        cache = self._stacked_cache.get(("groups", aggregated))
+        if cache is not None and cache.names == names:
+            if cache.epochs == epochs:
+                return cache
+            if self.incremental and aggregated:
+                patches = self._group_patches(cache, chs)
+                if patches is not None:
+                    self._apply_group_patches(cache, chs, patches)
+                    return cache
+        cache = self._build_group_state(chs, aggregated)
+        self._stacked_cache[("groups", aggregated)] = cache
+        return cache
+
+    def _build_group_state(self, chs: List[ChannelState],
+                           aggregated: bool) -> _GroupCache:
+        self.maintenance.rebuilds += 1
+        names = tuple(st.spec.name for st in chs)
         n = len(chs)
-        tmax = _pow2_bucket(max(h[0].shape[0] for h in hosts), 3)
         dmax = max(st.spec.param_domain for st in chs)
-        mmax = _pow2_bucket(max(h[3].shape[1] for h in hosts), 3)
+        if aggregated and self.incremental:
+            # slot-indexed arrays: row == aggregator slot, free slots
+            # zero-count — the layout group deltas patch directly
+            hosts = [st.aggregator.slot_arrays() for st in chs]
+            tmax = _pow2_bucket(max(h[0].shape[0] for h in hosts), 3)
+            mmax = _pow2_bucket(
+                max(st.aggregator.max_param_fanout() for st in chs), 3)
+            cap = max(st.aggregator.cap for st in chs)
+            by_param = np.full((n, dmax, mmax), -1, np.int32)
+            by_count = np.zeros((n, dmax), np.int32)
+            sids = np.full((n, tmax, cap), -1, np.int32)
+            for i, (st, h) in enumerate(zip(chs, hosts)):
+                for p, row in st.aggregator.param_items():
+                    by_param[i, p, :len(row)] = row
+                    by_count[i, p] = len(row)
+                sids[i, :h[3].shape[0], :h[3].shape[1]] = h[3]
+        else:
+            # compacted build() rows (the pre-churn-engine layout); the flat
+            # table IS this with one row per subscription
+            hosts2 = [self._targets_host(st, aggregated) for st in chs]
+            hosts = [(h[0], h[1], h[2]) for h in hosts2]
+            tmax = _pow2_bucket(max(h[0].shape[0] for h in hosts2), 3)
+            mmax = _pow2_bucket(max(h[3].shape[1] for h in hosts2), 3)
+            by_param = np.full((n, dmax, mmax), -1, np.int32)
+            by_count = np.zeros((n, dmax), np.int32)
+            srcs = []
+            for st in chs:
+                if aggregated:
+                    groups = st._groups or st.aggregator.build()
+                    st._groups = groups
+                    srcs.append(np.asarray(groups.group_sids, np.int32))
+                else:
+                    srcs.append(np.asarray(self._flat_table(st).sids,
+                                           np.int32)[:, None])
+            cap = max(h.shape[1] for h in srcs)
+            sids = np.full((n, tmax, cap), -1, np.int32)
+            for i, (h2, h) in enumerate(zip(hosts2, srcs)):
+                d, m = h2[3].shape
+                by_param[i, :d, :m] = h2[3]
+                by_count[i, :d] = h2[4]
+                sids[i, :h.shape[0], :h.shape[1]] = h
         params = np.zeros((n, tmax), np.int32)
         brokers = np.zeros((n, tmax), np.int32)
         counts = np.zeros((n, tmax), np.int32)
-        by_param = np.full((n, dmax, mmax), -1, np.int32)
-        by_count = np.zeros((n, dmax), np.int32)
         up_masks = np.zeros((n, dmax), bool)
         domains = np.zeros((n,), np.int32)
-        for i, (st, (p, b, c, bp, bc)) in enumerate(zip(chs, hosts)):
-            t, (d, m) = p.shape[0], bp.shape
+        for i, (st, (p, b, c, *_)) in enumerate(zip(chs, hosts)):
+            t = p.shape[0]
             params[i, :t] = p
             brokers[i, :t] = b
             counts[i, :t] = c
-            by_param[i, :d, :m] = bp
-            by_count[i, :d] = bc
-            up_masks[i, :d] = st.user_params.refcount > 0
+            up_masks[i, :st.spec.param_domain] = st.user_params.refcount > 0
             domains[i] = st.spec.param_domain
         targets = plans.TargetArrays(
             jnp.asarray(params), jnp.asarray(brokers), jnp.asarray(counts),
             jnp.asarray(by_param), jnp.asarray(by_count))
-        val = (targets, jnp.asarray(up_masks), jnp.asarray(domains))
-        self._stacked_cache[aggregated] = (key, val)
-        return val
+        return _GroupCache(names, aggregated, [st.epoch for st in chs],
+                           tmax, dmax, mmax, cap, targets,
+                           jnp.asarray(up_masks), jnp.asarray(domains),
+                           jnp.asarray(sids))
+
+    def _group_patches(self, cache: _GroupCache, chs: List[ChannelState]):
+        """Per-channel (slots, params) patch sets covering every epoch since
+        the cache's snapshot, or None if any channel must rebuild (delta gap
+        or padded capacity exceeded)."""
+        out = []
+        for st, cached_e in zip(chs, cache.epochs):
+            if st.epoch == cached_e:
+                out.append(None)
+                continue
+            if st.epoch - cached_e > len(st.delta_log):
+                return None          # gap certain: don't materialize it
+            need = set(range(cached_e + 1, st.epoch + 1))
+            slots, params_t = set(), set()
+            for e, d in st.delta_log:
+                if e in need:
+                    need.discard(e)
+                    slots |= d.slots
+                    params_t |= d.params
+            agg = st.aggregator
+            if need or agg.num_slots > cache.tmax or agg.cap != cache.cap:
+                return None
+            if any(len(agg.param_slots(p)) > cache.mmax for p in params_t):
+                return None
+            out.append((slots, params_t))
+        return out
+
+    def _apply_group_patches(self, cache: _GroupCache,
+                             chs: List[ChannelState], patches) -> None:
+        """One jitted scatter per changed channel: touched slot rows and
+        touched by-param rows are re-read from the aggregator (current
+        content) and written in place. Patch batches are padded to
+        power-of-two buckets with out-of-bounds indices (dropped by the
+        scatter), so a steady churn rate replays one cached trace."""
+        fn = self._group_patch_fn()
+        t = cache.targets
+        arrays = (t.params, t.brokers, t.counts, t.by_param,
+                  t.by_param_count, cache.up_masks, cache.sids)
+        for ci, (st, patch) in enumerate(zip(chs, patches)):
+            if patch is None:
+                continue
+            slots, params_t = patch
+            # generous bucket floors: small tick-to-tick delta-size jitter
+            # stays inside one bucket (one cached trace), scatter cost of
+            # the padding is trivial
+            kb = _pow2_bucket(len(slots), 7)
+            mb = _pow2_bucket(len(params_t), 5)
+            sl = np.sort(np.fromiter(slots, np.int64, len(slots)))
+            sl_idx = np.full((kb,), cache.tmax, np.int32)   # OOB pad: dropped
+            sl_p = np.zeros((kb,), np.int32)
+            sl_b = np.zeros((kb,), np.int32)
+            sl_c = np.zeros((kb,), np.int32)
+            sl_s = np.full((kb, cache.cap), -1, np.int32)
+            sl_idx[:len(sl)] = sl
+            (sl_p[:len(sl)], sl_b[:len(sl)], sl_c[:len(sl)],
+             sl_s[:len(sl)]) = st.aggregator.slot_rows(sl)
+            p_idx = np.full((mb,), cache.dmax, np.int32)
+            p_rows = np.full((mb, cache.mmax), -1, np.int32)
+            p_cnt = np.zeros((mb,), np.int32)
+            p_mask = np.zeros((mb,), bool)
+            for j, p in enumerate(sorted(params_t)):
+                row = st.aggregator.param_slots(p)
+                p_idx[j] = p
+                p_rows[j, :len(row)] = row
+                p_cnt[j] = len(row)
+                p_mask[j] = st.user_params.refcount[p] > 0
+            arrays = fn(arrays, jnp.asarray(ci, jnp.int32), sl_idx, sl_p,
+                        sl_b, sl_c, sl_s, p_idx, p_rows, p_cnt, p_mask)
+            self.maintenance.patches += 1
+        cache.targets = plans.TargetArrays(*arrays[:5])
+        cache.up_masks = arrays[5]
+        cache.sids = arrays[6]
+        cache.epochs = [st.epoch for st in chs]
+
+    def _group_patch_fn(self) -> Callable:
+        if self._patch_groups_jit is None:
+            maint = self.maintenance
+
+            def patch(arrays, ci, sl_idx, sl_p, sl_b, sl_c, sl_s,
+                      p_idx, p_rows, p_cnt, p_mask):
+                maint.traces += 1
+                params, brokers, counts, by_param, by_count, up, sids = arrays
+                return (params.at[ci, sl_idx].set(sl_p, mode="drop"),
+                        brokers.at[ci, sl_idx].set(sl_b, mode="drop"),
+                        counts.at[ci, sl_idx].set(sl_c, mode="drop"),
+                        by_param.at[ci, p_idx].set(p_rows, mode="drop"),
+                        by_count.at[ci, p_idx].set(p_cnt, mode="drop"),
+                        up.at[ci, p_idx].set(p_mask, mode="drop"),
+                        sids.at[ci, sl_idx].set(sl_s, mode="drop"))
+
+            self._patch_groups_jit = jax.jit(patch)
+        return self._patch_groups_jit
+
+    # -- stacked spatial user sets (per-channel cohorts) -----------------
 
     def _stacked_spatial_inputs(self, chs: List[ChannelState]):
-        """Stacked per-channel user sets for the fused spatial join.
+        c = self._spatial_state(chs)
+        return c.locs, c.brokers
 
-        The user count is shape-bucketed (power of two) so the fused trace
-        survives user-set growth; padded users sit at the far sentinel and can
-        never fall inside any radius. There is one global UserLocations
-        dataset today, so every channel row carries the same users — the
-        stacked layout keeps the plan ready for per-channel user cohorts.
-        Cached until ``set_user_locations`` (version bump) or channel
-        create/drop (cache clear)."""
+    def _stacked_spatial_sids(self, chs: List[ChannelState]) -> jnp.ndarray:
+        """Delivery sID tables for the spatial group: the legacy 0-width
+        identity fanout while every channel serves all users (targets ARE
+        end-user ids); with cohorts, a (C, ub, 1) slot->uid table so
+        delivered sIDs are GLOBAL user ids, not cohort slots."""
+        c = self._spatial_state(chs)
+        if c.identity:
+            return jnp.zeros((len(chs), 0), jnp.int32)
+        return c.uids[:, :, None]
+
+    def _spatial_state(self, chs: List[ChannelState]) -> _SpatialCache:
+        """Stacked per-channel user sets, maintained by the same epoch/delta
+        protocol as the group caches: cohort churn patches slot rows in
+        place; a global ``set_user_locations`` (user-version bump), cohort
+        creation, capacity overflow, or a delta gap rebuilds."""
+        names = tuple(st.spec.name for st in chs)
+        cohorted = tuple(st.cohort is not None for st in chs)
+        epochs = [st.user_epoch for st in chs]
+        cache = self._stacked_cache.get("spatial")
+        if cache is not None and cache.names == names \
+                and cache.user_version == self._user_version \
+                and cache.cohorted == cohorted:
+            if cache.epochs == epochs:
+                return cache
+            if self.incremental:
+                patches = self._spatial_patches(cache, chs)
+                if patches is not None:
+                    self._apply_spatial_patches(cache, chs, patches)
+                    return cache
+        cache = self._build_spatial_state(chs)
+        self._stacked_cache["spatial"] = cache
+        return cache
+
+    def _cohort_rows(self, st: ChannelState, slots=None):
+        """Host (locs, brokers, uids) rows for a cohort channel's slots —
+        holes (and uids past the current user table) sit at the far sentinel
+        / -1 so they can never match or fan out."""
         from repro.kernels.spatial_match.ops import FAR
-        key = (tuple(st.spec.name for st in chs), self._user_version)
-        hit = self._stacked_cache.get("spatial")
-        if hit is not None and hit[0] == key:
-            return hit[1]
+        uids = st.cohort.slot_uids()
+        if slots is not None:
+            uids = uids[slots]
+        nu = self.user_locations.shape[0]
+        ok = (uids >= 0) & (uids < nu)
+        safe = np.where(ok, uids, 0)
+        locs = np.where(ok[:, None], np.asarray(self.user_locations)[safe],
+                        -FAR).astype(np.float32)
+        brokers = np.where(ok, np.asarray(self.user_brokers)[safe],
+                           0).astype(np.int32)
+        return locs, brokers, np.where(ok, uids, -1).astype(np.int32)
+
+    def _build_spatial_state(self, chs: List[ChannelState]) -> _SpatialCache:
+        from repro.kernels.spatial_match.ops import FAR
+        self.maintenance.rebuilds += 1
         u = self.user_locations.shape[0]
-        ub = _pow2_bucket(u, 3)
+        rows = [u if st.cohort is None else max(st.cohort.num_slots, 1)
+                for st in chs]
+        ub = _pow2_bucket(max(rows), 3)
         n = len(chs)
         locs = np.full((n, ub, 2), -FAR, np.float32)
         brokers = np.zeros((n, ub), np.int32)
-        locs[:, :u] = np.asarray(self.user_locations)[None]
-        brokers[:, :u] = np.asarray(self.user_brokers)[None]
-        val = (jnp.asarray(locs), jnp.asarray(brokers))
-        self._stacked_cache["spatial"] = (key, val)
-        return val
-
-    def _stacked_sids(self, chs: List[ChannelState],
-                      aggregated: bool) -> jnp.ndarray:
-        """Stacked device group-sID tables (C, Tmax, cap) for fused delivery,
-        -1 padded, shape-bucketed alongside ``_stacked_inputs`` and cached by
-        the same channel-version key."""
-        key = tuple((st.spec.name, st.version) for st in chs)
-        hit = self._stacked_cache.get(("sids", aggregated))
-        if hit is not None and hit[0] == key:
-            return hit[1]
-        hosts = []
-        for st in chs:
-            if aggregated:
-                groups = st._groups or st.aggregator.build()
-                st._groups = groups
-                hosts.append(np.asarray(groups.group_sids, np.int32))
+        uids = np.full((n, ub), -1, np.int32)
+        for i, st in enumerate(chs):
+            if st.cohort is None:
+                locs[i, :u] = np.asarray(self.user_locations)
+                brokers[i, :u] = np.asarray(self.user_brokers)
+                uids[i, :u] = np.arange(u, dtype=np.int32)
             else:
-                hosts.append(np.asarray(self._flat_table(st).sids,
-                                        np.int32)[:, None])
-        n = len(chs)
-        tmax = _pow2_bucket(max(h.shape[0] for h in hosts), 3)
-        cap = max(h.shape[1] for h in hosts)
-        sids = np.full((n, tmax, cap), -1, np.int32)
-        for i, h in enumerate(hosts):
-            sids[i, :h.shape[0], :h.shape[1]] = h
-        val = jnp.asarray(sids)
-        self._stacked_cache[("sids", aggregated)] = (key, val)
-        return val
+                k = st.cohort.num_slots
+                if k:
+                    locs[i, :k], brokers[i, :k], uids[i, :k] = \
+                        self._cohort_rows(st)
+        return _SpatialCache(
+            tuple(st.spec.name for st in chs), self._user_version,
+            tuple(st.cohort is not None for st in chs),
+            [st.user_epoch for st in chs], ub,
+            jnp.asarray(locs), jnp.asarray(brokers), jnp.asarray(uids))
+
+    def _spatial_patches(self, cache: _SpatialCache, chs: List[ChannelState]):
+        out = []
+        for st, cached_e in zip(chs, cache.epochs):
+            if st.user_epoch == cached_e:
+                out.append(None)
+                continue
+            if st.user_epoch - cached_e > len(st.user_delta_log):
+                return None          # gap certain: don't materialize it
+            need = set(range(cached_e + 1, st.user_epoch + 1))
+            slots = set()
+            for e, touched in st.user_delta_log:
+                if e in need:
+                    need.discard(e)
+                    slots |= touched
+            if need or st.cohort is None \
+                    or st.cohort.num_slots > cache.ub:
+                return None
+            out.append(slots)
+        return out
+
+    def _apply_spatial_patches(self, cache: _SpatialCache,
+                               chs: List[ChannelState], patches) -> None:
+        fn = self._spatial_patch_fn()
+        arrays = (cache.locs, cache.brokers, cache.uids)
+        for ci, (st, slots) in enumerate(zip(chs, patches)):
+            if slots is None:
+                continue
+            kb = _pow2_bucket(len(slots), 7)
+            idx = np.full((kb,), cache.ub, np.int32)        # OOB pad: dropped
+            sl = np.asarray(sorted(slots), np.int32)
+            idx[:len(sl)] = sl
+            l_rows = np.zeros((kb, 2), np.float32)
+            b_rows = np.zeros((kb,), np.int32)
+            u_rows = np.full((kb,), -1, np.int32)
+            l, b, uu = self._cohort_rows(st, sl)
+            l_rows[:len(sl)] = l
+            b_rows[:len(sl)] = b
+            u_rows[:len(sl)] = uu
+            arrays = fn(arrays, jnp.asarray(ci, jnp.int32), idx,
+                        l_rows, b_rows, u_rows)
+            self.maintenance.patches += 1
+        cache.locs, cache.brokers, cache.uids = arrays
+        cache.epochs = [st.user_epoch for st in chs]
+
+    def _spatial_patch_fn(self) -> Callable:
+        if self._patch_spatial_jit is None:
+            maint = self.maintenance
+
+            def patch(arrays, ci, idx, l_rows, b_rows, u_rows):
+                maint.traces += 1
+                locs, brokers, uids = arrays
+                return (locs.at[ci, idx].set(l_rows, mode="drop"),
+                        brokers.at[ci, idx].set(b_rows, mode="drop"),
+                        uids.at[ci, idx].set(u_rows, mode="drop"))
+
+            self._patch_spatial_jit = jax.jit(patch)
+        return self._patch_spatial_jit
 
     def _exec_all_fn(self, param_chs: List[ChannelState],
                      spatial_chs: List[ChannelState],
@@ -811,8 +1337,10 @@ class BADEngine:
 
         pw, mp = self.deliver_payload_words, self.max_deliver_pairs
         mn, sc = self.max_notify, self.max_spill
+        maint = self.maintenance
 
         def run(ds, index_state, p_in, s_in):
+            maint.traces += 1          # trace-time side effect: counts traces
             res_p = res_s = del_p = del_s = None
             if p_static is not None:
                 cand = discover(ds, index_state, p_static,
@@ -907,7 +1435,7 @@ class BADEngine:
                 last_size=jnp.asarray(
                     [st.last_exec_size for st in spatial_chs], jnp.int32))
             if deliver:
-                s_in["sids"] = jnp.zeros((len(spatial_chs), 0), jnp.int32)
+                s_in["sids"] = self._stacked_spatial_sids(spatial_chs)
         args = (self.dataset, self.index_state, p_in, s_in)
         if timed:  # warm the trace so wall time measures execution
             jax.block_until_ready(fn(*args))
@@ -929,12 +1457,20 @@ class BADEngine:
         # way: the fused call already packed/fanned out every channel, so the
         # host only pushes spills and reads (C,)-shaped counters.
         share = wall / len(ordered)
-        for chs, res, dlv in ((param_chs, res_p, del_p),
-                              (spatial_chs, res_s, del_s)):
+        # The fused aggregated targets of an incremental engine are SLOT
+        # indices (free slots padded), not build()'s compacted rows — tag
+        # their spills with the "slot" layout so a drain re-packs against
+        # the matching table. Flat / non-incremental / spatial spills keep
+        # the per-channel path's layouts.
+        p_layout = "slot" if (self.incremental and flags.aggregation) \
+            else flags.aggregation
+        for chs, res, dlv, layout in (
+                (param_chs, res_p, del_p, p_layout),
+                (spatial_chs, res_s, del_s, flags.aggregation)):
             if not chs:
                 continue
             host = jax.tree.map(np.asarray, res)
-            stats = (self._spill_and_stats(chs, flags.aggregation, dlv)
+            stats = (self._spill_and_stats(chs, layout, dlv)
                      if deliver else {})
             for i, st in enumerate(chs):
                 reports[st.spec.name] = ExecutionReport(
@@ -998,7 +1534,7 @@ class BADEngine:
                     rep.notify if prev.notify is None else prev.notify)
 
         drained_pairs = set()
-        for name, aggregated in self.spill.pair_keys():
+        for name, layout in self.spill.pair_keys():
             if name in drained_pairs:
                 # one pair lane per channel per round: a channel spilled
                 # under BOTH layouts re-packs against different tables with
@@ -1007,9 +1543,9 @@ class BADEngine:
                 continue
             drained_pairs.add(name)
             st = self.channels.get(name)
-            version = st.version if st is not None else None
+            version = st.epoch if st is not None else None
             rows, tgts, stale = self.spill.pop_pairs(
-                name, aggregated, self.max_deliver_pairs, version)
+                name, layout, self.max_deliver_pairs, version)
             dropped = stale
             payload = None
             delivered = respilled = 0
@@ -1018,9 +1554,14 @@ class BADEngine:
             elif len(rows):
                 res = self._synthetic_result(rows, tgts)
                 if st.spec.join == "spatial":
-                    sids = jnp.zeros((0,), dtype=jnp.int32)
+                    tbl = self._spatial_sids_table(st)
+                    sids = jnp.zeros((0,), dtype=jnp.int32) \
+                        if tbl is None else tbl
+                elif layout == "slot":
+                    # fused incremental-aggregated spills target SLOT rows
+                    sids = jnp.asarray(st.aggregator.slot_arrays()[3])
                 else:
-                    sids = self.group_sids_array(name, aggregated)
+                    sids = self.group_sids_array(name, layout)
                 buf, dlv, _ = pack_payloads(res, sids,
                                             self.deliver_payload_words,
                                             self.max_deliver_pairs)
@@ -1028,8 +1569,8 @@ class BADEngine:
                 payload = np.asarray(buf)
                 if delivered < len(rows):   # exact in-order prefix delivered
                     self.spill._push_front_pairs(
-                        name, aggregated, rows[delivered:], tgts[delivered:],
-                        st.version)
+                        name, layout, rows[delivered:], tgts[delivered:],
+                        st.epoch)
                     respilled = len(rows) - delivered
             if delivered or dropped or respilled:
                 merge(name, DrainReport(

@@ -15,7 +15,7 @@ size ~ frame size), ``lane_align`` applies the TPU rounding.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -85,29 +85,213 @@ class SubscriptionGroups:
         return int(self.group_counts.sum())
 
 
-class Aggregator:
-    """Incremental Algorithm 1: place each arriving subscription in an open
-    group with matching (params, broker), else open a new group."""
+@dataclasses.dataclass
+class GroupDelta:
+    """Control-plane churn since the last ``take_delta()``.
 
-    def __init__(self, cap: int):
+    ``slots`` are group SLOT indices (stable row ids in the aggregator's
+    slot space) whose content changed — opened, mutated, or freed; ``params``
+    are the parameter values whose live-slot membership changed. Consumers
+    re-read the aggregator's CURRENT content for every touched slot/param,
+    so consecutive deltas compose by set union (``merge``)."""
+
+    slots: Set[int] = dataclasses.field(default_factory=set)
+    params: Set[int] = dataclasses.field(default_factory=set)
+
+    def merge(self, other: "GroupDelta") -> None:
+        self.slots |= other.slots
+        self.params |= other.params
+
+    @property
+    def empty(self) -> bool:
+        return not self.slots and not self.params
+
+
+class Aggregator:
+    """Incremental Algorithm 1 over a STABLE-SLOT group table.
+
+    Each group occupies a slot row of a dense (slots, cap) member matrix —
+    the same layout the device caches hold — so batch mutations are
+    vectorized numpy over the touched rows, never per-subscription Python.
+    Freed slots (all members removed, or merged away by compaction) go on a
+    free list and are reused by later opens, so long-lived churn never leaks
+    slot rows into ``build()`` capacity. Every mutation is O(Δ·cap): O(1)
+    sid->slot routing per sID, one row rewrite per touched group. Touched
+    slots/params accumulate into a ``GroupDelta`` (consumed via
+    ``take_delta``) so derived state — device group arrays, join maps — can
+    be patched in place instead of rebuilt.
+
+    ``compact_slack``: after removals, a key whose live groups exceed the
+    minimal ``ceil(members / cap)`` by at least this many is re-chopped in
+    slot order and the surplus slots freed (Algorithm-1 output is preserved
+    up to group-boundary choices; the paper fixes group *capacity*, not
+    boundary placement)."""
+
+    def __init__(self, cap: int, compact_slack: int = 2):
         if cap < 1:
             raise ValueError("group capacity must be >= 1")
         self.cap = cap
-        # (param, broker) -> list of group indices. Group members are python
-        # lists when touched incrementally, numpy arrays after a bulk load
-        # (_mutable_members converts on demand) — bulk never pays a
-        # per-subscription list conversion.
+        self.compact_slack = max(1, compact_slack)
+        # (param, broker) -> list of LIVE slot indices (fill-scan order)
         self._by_key: Dict[Tuple[int, int], List[int]] = {}
-        self._params: List[int] = []
-        self._brokers: List[int] = []
-        self._members: List = []
+        # (param, broker) -> live member count: O(1) compaction triggering
+        self._key_subs: Dict[Tuple[int, int], int] = {}
+        # param -> set of LIVE slot indices across brokers (join-map rows)
+        self._by_param: Dict[int, Set[int]] = {}
+        self._n = 0                       # slot table height (live + free)
+        self._params = np.full((8,), -1, np.int32)     # per slot; -1 free
+        self._brokers = np.full((8,), -1, np.int32)
+        self._counts = np.zeros((8,), np.int32)
+        self._msids = np.full((8, cap), -1, np.int32)  # -1-padded prefixes
+        self._free: List[int] = []
+        # live sID -> slot, as a dense -1-filled array (sIDs are small dense
+        # ints): O(1) vectorized routing for whole batches. Grows with the
+        # highest sID ever issued (4 bytes per sID) — the O(Δ) removal path
+        # trades that bounded memory for zero per-sID Python
+        self._sid_map = np.full((1024,), -1, np.int32)
+        self._n_subs = 0
         self._next_sid = 0
+        self._delta = GroupDelta()
 
-    def _mutable_members(self, gi: int) -> List[int]:
-        m = self._members[gi]
-        if isinstance(m, np.ndarray):
-            m = self._members[gi] = m.tolist()
-        return m
+    # -- slot bookkeeping ------------------------------------------------
+
+    @property
+    def num_slots(self) -> int:
+        """Slot-table height (live + free) — the capacity derived arrays
+        must be padded to."""
+        return self._n
+
+    @property
+    def num_live_groups(self) -> int:
+        return self._n - len(self._free)
+
+    @property
+    def num_subscriptions(self) -> int:
+        return self._n_subs
+
+    def slot_rows(self, slots) -> Tuple[np.ndarray, np.ndarray,
+                                        np.ndarray, np.ndarray]:
+        """(params, brokers, counts, sids) rows for the given slots — one
+        vectorized gather (free slots read zero-count, all -1 members);
+        the delta-patch fill path."""
+        sl = np.asarray(slots, dtype=np.int64)
+        c = self._counts[sl]
+        live = c > 0
+        return (np.where(live, self._params[sl], 0).astype(np.int32),
+                np.where(live, self._brokers[sl], 0).astype(np.int32),
+                c.copy(), self._msids[sl].copy())
+
+    def slot_row(self, gi: int) -> Tuple[int, int, int, np.ndarray]:
+        """Current (param, broker, count, padded member sIDs) of one slot;
+        free slots read as (0, 0, 0, all -1)."""
+        p, b, c, s = self.slot_rows([gi])
+        return int(p[0]), int(b[0]), int(c[0]), s[0]
+
+    def slot_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+        """The whole slot table as dense arrays (params, brokers, counts,
+        sids) — free slots zero-count. Row index == slot index, so deltas
+        patch rows of exactly these arrays."""
+        return self.slot_rows(np.arange(self._n, dtype=np.int64))
+
+    def slot_members(self, gi: int) -> np.ndarray:
+        return self._msids[gi, :self._counts[gi]].copy()
+
+    def param_slots(self, param: int) -> np.ndarray:
+        """Live slots holding groups for ``param`` (any broker), ascending —
+        the delta-maintained equivalent of a ``param_to_targets`` row."""
+        s = self._by_param.get(int(param), ())
+        return np.sort(np.fromiter(s, np.int64, len(s)))
+
+    def param_items(self):
+        """(param, ascending live slots) for every param holding live
+        groups — the public view of the per-param join-map rows."""
+        for p in self._by_param:
+            yield p, self.param_slots(p)
+
+    def max_param_fanout(self) -> int:
+        """Largest live-slot count any single param value maps to."""
+        return max((len(s) for s in self._by_param.values()), default=1)
+
+    def live_sids(self) -> np.ndarray:
+        """Every live member sID (group-major order) — vectorized."""
+        m = self._msids[:self._n]
+        return m[m >= 0]
+
+    def sid_slots(self, sids: np.ndarray) -> np.ndarray:
+        """Slot of each sID (-1 for unknown/removed) — one gather."""
+        sids = np.asarray(sids, dtype=np.int64).ravel()
+        ok = (sids >= 0) & (sids < self._sid_map.shape[0])
+        return np.where(ok, self._sid_map[np.where(ok, sids, 0)], -1)
+
+    def _ensure_sid_map(self, max_sid: int) -> None:
+        if max_sid >= self._sid_map.shape[0]:
+            grow = max(self._sid_map.shape[0] * 2, max_sid + 1)
+            new = np.full((grow,), -1, np.int32)
+            new[:self._sid_map.shape[0]] = self._sid_map
+            self._sid_map = new
+
+    def take_delta(self) -> GroupDelta:
+        """Pop the accumulated churn record (and reset it)."""
+        d = self._delta
+        self._delta = GroupDelta()
+        return d
+
+    def _touch(self, gi: int, param: int) -> None:
+        self._delta.slots.add(gi)
+        self._delta.params.add(int(param))
+
+    def _new_slot(self) -> int:
+        if self._free:
+            return self._free.pop()
+        if self._n == self._params.shape[0]:
+            grow = max(8, self._params.shape[0])
+            self._params = np.concatenate(
+                [self._params, np.full((grow,), -1, np.int32)])
+            self._brokers = np.concatenate(
+                [self._brokers, np.full((grow,), -1, np.int32)])
+            self._counts = np.concatenate(
+                [self._counts, np.zeros((grow,), np.int32)])
+            self._msids = np.concatenate(
+                [self._msids, np.full((grow, self.cap), -1, np.int32)])
+        gi = self._n
+        self._n += 1
+        return gi
+
+    def _alloc_slot(self, param: int, broker: int,
+                    members: np.ndarray) -> int:
+        gi = self._new_slot()
+        self._params[gi] = param
+        self._brokers[gi] = broker
+        self._msids[gi] = -1
+        self._msids[gi, :len(members)] = members
+        self._counts[gi] = len(members)
+        self._by_key.setdefault((param, broker), []).append(gi)
+        self._by_param.setdefault(param, set()).add(gi)
+        self._touch(gi, param)
+        return gi
+
+    def _release_slot(self, gi: int, unregister_key: bool = True) -> None:
+        param, broker = int(self._params[gi]), int(self._brokers[gi])
+        if unregister_key:
+            lst = self._by_key.get((param, broker))
+            if lst is not None:
+                lst.remove(gi)
+                if not lst:
+                    del self._by_key[(param, broker)]
+        ps = self._by_param.get(param)
+        if ps is not None:
+            ps.discard(gi)
+            if not ps:
+                del self._by_param[param]
+        self._params[gi] = -1
+        self._brokers[gi] = -1
+        self._counts[gi] = 0
+        self._msids[gi] = -1
+        self._free.append(gi)
+        self._touch(gi, param)
+
+    # -- mutations -------------------------------------------------------
 
     def add_subscription(self, param: int, broker: int,
                          sid: Optional[int] = None) -> int:
@@ -115,34 +299,249 @@ class Aggregator:
         if sid is None:
             sid = self._next_sid
         self._next_sid = max(self._next_sid, sid + 1)
-        key = (int(param), int(broker))
+        param, broker = int(param), int(broker)
+        key = (param, broker)
+        self._ensure_sid_map(sid)
+        self._key_subs[key] = self._key_subs.get(key, 0) + 1
         for gi in self._by_key.get(key, ()):           # AddToExistingGroup
-            if len(self._members[gi]) < self.cap:
-                self._mutable_members(gi).append(sid)
+            c = int(self._counts[gi])
+            if c < self.cap:
+                self._msids[gi, c] = sid
+                self._counts[gi] = c + 1
+                self._sid_map[sid] = gi
+                self._n_subs += 1
+                self._touch(gi, param)
                 return sid
-        gi = len(self._params)                          # open a new group
-        self._params.append(int(param))
-        self._brokers.append(int(broker))
-        self._members.append([sid])
-        self._by_key.setdefault(key, []).append(gi)
+        gi = self._alloc_slot(param, broker,            # open a new group
+                              np.asarray([sid], np.int32))
+        self._sid_map[sid] = gi
+        self._n_subs += 1
         return sid
+
+    def _place_key(self, param: int, broker: int, sids: np.ndarray) -> None:
+        """Place one key's new members: top up the key's non-full groups in
+        fill order, then chop the remainder into fresh cap-sized groups —
+        Algorithm-1 semantics, numpy work per touched GROUP only."""
+        pos, n = 0, len(sids)
+        self._n_subs += n
+        key = (param, broker)
+        self._key_subs[key] = self._key_subs.get(key, 0) + n
+        lst = self._by_key.get(key)
+        if lst:
+            # ONE vectorized fill across every open group of the key:
+            # scattered removals leave scattered slack, and walking those
+            # groups one by one in Python was the bulk-add hot spot
+            arr = np.asarray(lst, dtype=np.int64)
+            open_slots = arr[self._counts[arr] < self.cap]
+            if open_slots.size:
+                cnts = self._counts[open_slots].astype(np.int64)
+                rooms = self.cap - cnts
+                cum = np.cumsum(rooms)
+                take = int(min(n, cum[-1]))
+                if take:
+                    j = np.arange(take, dtype=np.int64)
+                    g = np.searchsorted(cum, j, side="right")
+                    col = cnts[g] + j - (cum[g] - rooms[g])
+                    rows = open_slots[g]
+                    self._msids[rows, col] = sids[:take]
+                    filled = np.bincount(g, minlength=open_slots.size)
+                    touched = open_slots[filled > 0]
+                    self._counts[touched] += filled[filled > 0].astype(
+                        np.int32)
+                    self._sid_map[sids[:take]] = rows.astype(np.int32)
+                    self._delta.slots.update(touched.tolist())
+                    self._delta.params.add(int(param))
+                    pos = take
+        while pos < n:
+            chunk = sids[pos:pos + self.cap]
+            gi = self._alloc_slot(param, broker, chunk)
+            self._sid_map[chunk] = gi
+            pos += len(chunk)
 
     def add_bulk(self, params: np.ndarray, brokers: np.ndarray,
                  sids: Optional[np.ndarray] = None) -> np.ndarray:
-        """Vectorized bulk load: Algorithm-1 semantics without per-subscription
-        Python calls.
+        """Incremental bulk load: O(Δ log Δ) sort of the batch, then per
+        TOUCHED (param, broker) key only — existing untouched groups are
+        never revisited (the pre-churn-engine path re-aggregated old + new
+        members from scratch, O(S) per batch). Per-key output is Algorithm-1
+        equivalent: non-full groups top up first, the remainder chops into
+        minimal cap-sized groups. Returns the sIDs assigned to the batch."""
+        params = np.asarray(params, dtype=np.int32).ravel()
+        brokers = np.asarray(brokers, dtype=np.int32).ravel()
+        if params.shape != brokers.shape:
+            raise ValueError("params and brokers must have the same length")
+        n = params.shape[0]
+        if sids is None:
+            sids = self._next_sid + np.arange(n, dtype=np.int32)
+        else:
+            sids = np.asarray(sids, dtype=np.int32).ravel()
+            if sids.shape[0] != n:   # before _next_sid moves: fail unmutated
+                raise ValueError("sids must have the same length as params")
+        if n == 0:
+            return sids
+        self._next_sid = max(self._next_sid, int(sids.max()) + 1)
+        self._ensure_sid_map(int(sids.max()))
+        if self._n == 0:
+            # from-empty fast path: the pure vectorized sort+chop (initial
+            # bulk loads are the control plane's cold-start hot path and
+            # produce the identical partition)
+            self._adopt(aggregate(SubscriptionTable(sids, params, brokers),
+                                  self.cap))
+            return sids
+        key = _sort_key(params, brokers)
+        order = np.argsort(key, kind="stable")
+        k = key[order]
+        new_run = np.empty(n, dtype=bool)
+        new_run[0] = True
+        new_run[1:] = k[1:] != k[:-1]
+        starts = np.flatnonzero(new_run)
+        ends = np.append(starts[1:], n)
+        for s, e in zip(starts.tolist(), ends.tolist()):
+            run = order[s:e]
+            self._place_key(int(params[run[0]]), int(brokers[run[0]]),
+                            sids[run])
+        return sids
 
-        Existing members and the new batch are re-aggregated together through
-        ``aggregate`` (sort + chop), touching Python only per *group*. Per
-        (param, broker) key this yields the minimal ``ceil(n_key / cap)``
-        groups — identical to replaying Algorithm 1 from scratch. When
-        removals have left a key's groups fragmented, the rebuild *compacts*
-        them (fewer groups than continuing the incremental state), so group
-        indices/membership are not stable across a bulk load; subscriber
-        notification semantics are unchanged and the engine invalidates every
-        group-derived cache on any subscription change. Returns the sIDs
-        assigned to the new batch.
-        """
+    def _adopt(self, g: SubscriptionGroups) -> None:
+        """Replace the whole slot table with freshly aggregated groups
+        (vectorized registration of every index); delta-touches every slot."""
+        self._n = g.num_groups
+        self._params = g.group_params.copy()
+        self._brokers = g.group_brokers.copy()
+        self._counts = g.group_counts.copy()
+        self._msids = g.group_sids.copy()
+        self._free = []
+        self._by_key = {}
+        self._by_param = {}
+        self._key_subs = {}
+        for gi, (key, c) in enumerate(zip(zip(self._params.tolist(),
+                                              self._brokers.tolist()),
+                                          self._counts.tolist())):
+            self._by_key.setdefault(key, []).append(gi)
+            self._by_param.setdefault(key[0], set()).add(gi)
+            self._key_subs[key] = self._key_subs.get(key, 0) + int(c)
+        members = self._msids[self._msids >= 0]
+        self._ensure_sid_map(int(members.max()) if members.size else 0)
+        self._sid_map[members] = np.repeat(
+            np.arange(self._n, dtype=np.int32), self._counts)
+        self._n_subs = int(self._counts.sum())
+        self._delta.slots.update(range(self._n))
+        self._delta.params.update(np.unique(g.group_params).tolist())
+
+    def remove_subscription(self, param: int, broker: int, sid: int) -> bool:
+        gi = int(self.sid_slots([sid])[0])
+        if gi < 0 or self._params[gi] != int(param) \
+                or self._brokers[gi] != int(broker):
+            return False
+        self._sid_map[sid] = -1
+        self._n_subs -= 1
+        key = (int(param), int(broker))
+        self._key_subs[key] -= 1
+        c = int(self._counts[gi])
+        row = self._msids[gi]
+        pos = int(np.flatnonzero(row[:c] == sid)[0])
+        row[pos:c - 1] = row[pos + 1:c]       # keep the -1-padded prefix
+        row[c - 1] = -1
+        self._counts[gi] = c - 1
+        if c == 1:
+            self._release_slot(gi)
+        else:
+            self._touch(gi, int(param))
+        self._maybe_compact((int(param), int(broker)))
+        return True
+
+    def remove_bulk(self, sids: np.ndarray) -> np.ndarray:
+        """Remove a batch of subscriptions by sID — O(Δ·cap) total: O(1)
+        sid->slot routing per sID, then ONE vectorized rewrite of the
+        touched slot rows. Unknown/already-removed sIDs are ignored.
+        Returns the param value of every subscription actually removed (for
+        refcount upkeep); freed groups release their slots and fragmented
+        keys compact past ``compact_slack``."""
+        sids_arr = np.asarray(sids, dtype=np.int32).ravel()
+        if sids_arr.size == 0:
+            return np.zeros((0,), np.int32)
+        slots = self.sid_slots(sids_arr)
+        found = slots >= 0
+        if not found.any():
+            return np.zeros((0,), np.int32)
+        rm_sids = sids_arr[found]
+        self._sid_map[rm_sids] = -1          # idempotent for batch dupes
+        uniq = np.unique(slots[found])
+        # one batched row rewrite: mark removed members, stable-compact the
+        # survivors to the row front (prefix-sum destinations, no per-row
+        # sort), re-pad the tail with -1
+        sub = self._msids[uniq]                         # (k, cap)
+        hit = np.isin(sub, rm_sids)                     # sids are unique
+        keep = ~hit & (sub >= 0)
+        dest = np.cumsum(keep, axis=1, dtype=np.int64) - 1
+        out = np.full_like(sub, -1)
+        rows = np.broadcast_to(
+            np.arange(uniq.size, dtype=np.int64)[:, None], sub.shape)
+        out[rows[keep], dest[keep]] = sub[keep]
+        n_rm = hit.sum(axis=1).astype(np.int32)
+        new_c = self._counts[uniq] - n_rm
+        self._msids[uniq] = out
+        self._counts[uniq] = new_c
+        u_params = self._params[uniq]
+        u_brokers = self._brokers[uniq]
+        removed = np.repeat(u_params, n_rm).astype(np.int32)
+        self._n_subs -= int(n_rm.sum())
+        self._delta.slots.update(uniq.tolist())
+        self._delta.params.update(u_params.tolist())
+        # per-key removal totals, vectorized to the ~#keys scale
+        kk = (u_params.astype(np.int64) << 32) | (
+            u_brokers.astype(np.int64) & 0xFFFFFFFF)
+        uk, inv = np.unique(kk, return_inverse=True)
+        per_key = np.bincount(inv, weights=n_rm).astype(np.int64)
+        touched_keys = []
+        for key_pk, k in zip(uk.tolist(), per_key.tolist()):
+            b = key_pk & 0xFFFFFFFF
+            key = (key_pk >> 32, b - (1 << 32) if b >= 1 << 31 else b)
+            touched_keys.append(key)
+            self._key_subs[key] -= int(k)
+        for gi in uniq[new_c == 0].tolist():
+            self._release_slot(gi)
+        for key in touched_keys:
+            self._maybe_compact(key)
+        return removed
+
+    def _maybe_compact(self, key: Tuple[int, int]) -> None:
+        """Re-chop one fragmented key in slot order: keep the first
+        ``ceil(members / cap)`` slots, free the rest. Triggered only when the
+        key carries >= ``compact_slack`` surplus groups, so steady churn is
+        not forever re-shuffling group boundaries."""
+        slots = self._by_key.get(key)
+        if not slots or len(slots) <= 1:
+            return
+        total = self._key_subs.get(key, 0)
+        minimal = -(-total // self.cap)
+        if len(slots) - minimal < self.compact_slack:
+            return               # O(1) in the common no-compaction case
+        param = key[0]
+        sl = np.asarray(sorted(slots), dtype=np.int64)
+        rows = self._msids[sl]
+        members = rows[rows >= 0]            # slot order, then member order
+        keep, drop = sl[:minimal], sl[minimal:]
+        mat = np.full((minimal, self.cap), -1, np.int32)
+        idx = np.arange(total, dtype=np.int64)
+        mat[idx // self.cap, idx % self.cap] = members
+        self._msids[keep] = mat
+        counts = np.diff(np.append(np.arange(0, total, self.cap), total))
+        self._counts[keep] = counts.astype(np.int32)
+        self._by_key[key] = keep.tolist()
+        self._sid_map[members] = np.repeat(keep, counts).astype(np.int32)
+        self._delta.slots.update(keep.tolist())
+        self._delta.params.add(int(param))
+        for gi in drop.tolist():
+            self._release_slot(gi, unregister_key=False)
+
+    def rebuild_bulk(self, params: np.ndarray, brokers: np.ndarray,
+                     sids: Optional[np.ndarray] = None) -> np.ndarray:
+        """The PRE-churn-engine bulk load, kept as the rebuild baseline the
+        churn suite measures against: old + new members re-aggregated from
+        scratch through ``aggregate`` — O(S) per batch, group identity not
+        preserved. Leaves no usable delta (callers must treat every derived
+        cache as invalid)."""
         params = np.asarray(params, dtype=np.int32).ravel()
         brokers = np.asarray(brokers, dtype=np.int32).ravel()
         if params.shape != brokers.shape:
@@ -162,45 +561,21 @@ class Aggregator:
             np.concatenate([old.sids, sids]),
             np.concatenate([old.params, params]),
             np.concatenate([old.brokers, brokers]))
-        g = aggregate(table, self.cap)
-        counts = g.group_counts
-        self._params = g.group_params.tolist()
-        self._brokers = g.group_brokers.tolist()
-        self._members = [g.group_sids[i, :counts[i]]
-                         for i in range(g.num_groups)]
-        self._by_key = {}
-        for gi, key in enumerate(zip(self._params, self._brokers)):
-            self._by_key.setdefault(key, []).append(gi)
+        self._adopt(aggregate(table, self.cap))
+        self._delta = GroupDelta()   # unusable: everything moved
         return sids
 
-    def remove_subscription(self, param: int, broker: int, sid: int) -> bool:
-        key = (int(param), int(broker))
-        for gi in self._by_key.get(key, ()):
-            m = self._members[gi]
-            # probe without degrading array-backed groups to lists; convert
-            # only the one group actually being mutated
-            found = bool((m == sid).any()) if isinstance(m, np.ndarray) \
-                else sid in m
-            if found:
-                self._mutable_members(gi).remove(sid)
-                return True
-        return False
+    # -- export ----------------------------------------------------------
 
     def build(self) -> SubscriptionGroups:
-        live = [i for i, m in enumerate(self._members) if len(m)]
-        g = len(live)
-        group_params = np.zeros((g,), dtype=np.int32)
-        group_brokers = np.zeros((g,), dtype=np.int32)
-        group_sids = np.full((g, self.cap), -1, dtype=np.int32)
-        group_counts = np.zeros((g,), dtype=np.int32)
-        for out, gi in enumerate(live):
-            m = self._members[gi]
-            group_params[out] = self._params[gi]
-            group_brokers[out] = self._brokers[gi]
-            group_sids[out, : len(m)] = m
-            group_counts[out] = len(m)
-        return SubscriptionGroups(group_params, group_brokers, group_sids,
-                                  group_counts, self.cap)
+        """Dense live-group arrays, compacted in slot order (free slots are
+        skipped, so the k-th built row is the k-th live slot)."""
+        live = np.flatnonzero(self._counts[:self._n] > 0)
+        return SubscriptionGroups(
+            self._params[live].astype(np.int32),
+            self._brokers[live].astype(np.int32),
+            self._msids[live].copy(),
+            self._counts[live].copy(), self.cap)
 
 
 def _sort_key(params: np.ndarray, brokers: np.ndarray) -> np.ndarray:

@@ -1,0 +1,663 @@
+"""Incremental churn engine: delta-maintained state ≡ from-scratch rebuild.
+
+Covers the epoch/delta protocol end to end: aggregator slot maintenance
+(incremental add/remove/compaction vs fresh aggregation), engine-level
+removal with UserParameters refcounts, seeded-fuzz interleavings of
+add/remove/drop_channel/re-create asserting ``execute_all(deliver=True)``
+on the delta-maintained engine matches a from-scratch engine at every
+checkpoint, spill-drain staleness across epoch bumps, spatial-cohort
+parity, capacity-exceeded fallback, and zero-retrace steady state.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import subscriptions as subs
+from repro.core.channel import (ChannelSpec, most_threatening_tweets,
+                                tweets_about_crime, tweets_about_drugs)
+from repro.core.churn import ChurnWorkload, run_ticks
+from repro.core.engine import BADEngine
+from repro.core.plans import ExecutionFlags
+from repro.core import records as R
+from repro.core.predicates import Predicate
+
+from conftest import make_tweets
+
+
+# ---------------------------------------------------------------------------
+# aggregator: incremental slot maintenance vs fresh aggregation
+# ---------------------------------------------------------------------------
+
+
+def _group_sig(g: subs.SubscriptionGroups):
+    return sorted((int(g.group_params[i]), int(g.group_brokers[i]),
+                   tuple(sorted(g.group_sids[i][:g.group_counts[i]].tolist())))
+                  for i in range(g.num_groups))
+
+
+def test_aggregator_interleaved_ops_match_fresh_aggregate(rng):
+    """Random interleavings of add_bulk/remove_bulk/add/remove keep the live
+    partition exactly equal to the live subscription set, with every group
+    within cap and key-consistent."""
+    for trial in range(20):
+        r = np.random.default_rng(trial)
+        cap = int(r.integers(1, 9))
+        agg = subs.Aggregator(cap=cap)
+        live = {}
+        for step in range(10):
+            op = int(r.integers(0, 3))
+            if op == 0 or not live:
+                n = int(r.integers(1, 50))
+                p = r.integers(0, 6, n).astype(np.int32)
+                b = r.integers(0, 3, n).astype(np.int32)
+                s = agg.add_bulk(p, b)
+                live.update({int(x): (int(pp), int(bb))
+                             for x, pp, bb in zip(s, p, b)})
+            elif op == 1:
+                pick = r.choice(list(live.keys()),
+                                int(r.integers(1, len(live) + 1)),
+                                replace=False)
+                removed = agg.remove_bulk(pick.astype(np.int32))
+                want = collections.Counter(
+                    live[int(x)][0] for x in pick)
+                assert collections.Counter(removed.tolist()) == want
+                for x in pick:
+                    live.pop(int(x))
+            else:
+                x = int(r.choice(list(live.keys())))
+                pp, bb = live.pop(x)
+                assert agg.remove_subscription(pp, bb, x)
+            flat = subs.flatten_groups(agg.build())
+            assert sorted(flat.sids.tolist()) == sorted(live.keys())
+            assert agg.num_subscriptions == len(live)
+            for sid, pp, bb in zip(flat.sids.tolist(), flat.params.tolist(),
+                                   flat.brokers.tolist()):
+                assert live[sid] == (pp, bb)
+            g = agg.build()
+            assert (g.group_counts >= 1).all()
+            assert (g.group_counts <= cap).all()
+
+
+def test_add_bulk_from_empty_matches_aggregate(rng):
+    params = rng.integers(0, 5, 400).astype(np.int32)
+    brokers = rng.integers(0, 2, 400).astype(np.int32)
+    agg = subs.Aggregator(cap=7)
+    agg.add_bulk(params, brokers)
+    ref = subs.aggregate(subs.SubscriptionTable.build(params, brokers), 7)
+    # identical groups INCLUDING membership (not just the count multiset):
+    # from empty, the incremental chop equals the vectorized sort+chop
+    assert _group_sig(agg.build()) == _group_sig(ref)
+
+
+def test_compaction_bounds_slots_and_fixes_fragmentation(rng):
+    """Long add/remove cycling neither leaks slot rows (free-list reuse) nor
+    accumulates fragmented groups past the compaction slack."""
+    agg = subs.Aggregator(cap=8, compact_slack=2)
+    sids = agg.add_bulk(rng.integers(0, 4, 400), np.zeros(400, np.int32))
+    peak = agg.num_slots
+    live = set(sids.tolist())
+    for cycle in range(30):
+        pick = rng.choice(np.asarray(sorted(live), np.int32), 120,
+                          replace=False)
+        agg.remove_bulk(pick)
+        live -= set(int(x) for x in pick)
+        new = agg.add_bulk(rng.integers(0, 4, 120), np.zeros(120, np.int32))
+        live |= set(new.tolist())
+    # capacity stays bounded near the peak: dead slots were reused
+    assert agg.num_slots <= peak + 8
+    # every key is within compact_slack of its minimal group count
+    for (p, b), lst in agg._by_key.items():
+        total = agg._key_subs[(p, b)]
+        minimal = -(-total // agg.cap)
+        assert len(lst) - minimal < agg.compact_slack
+    assert agg.build().num_subscriptions == len(live)
+
+
+def test_delta_slots_cover_all_mutations(rng):
+    """Every mutated/opened/freed slot appears in the taken delta; patching
+    ONLY those slots reproduces the full slot table."""
+    agg = subs.Aggregator(cap=4)
+    sids = agg.add_bulk(rng.integers(0, 5, 100), rng.integers(0, 2, 100))
+    agg.take_delta()
+    shadow = agg.slot_arrays()
+    # interleave: removals + adds
+    agg.remove_bulk(sids[10:60])
+    agg.add_bulk(rng.integers(0, 5, 30), rng.integers(0, 2, 30))
+    d = agg.take_delta()
+    sl = sorted(d.slots)
+    p, b, c, s = agg.slot_rows(sl)
+    sp, sb, sc, ss = shadow
+    grow = agg.num_slots - sp.shape[0]
+    if grow > 0:
+        sp = np.concatenate([sp, np.zeros(grow, np.int32)])
+        sb = np.concatenate([sb, np.zeros(grow, np.int32)])
+        sc = np.concatenate([sc, np.zeros(grow, np.int32)])
+        ss = np.concatenate([ss, np.full((grow, agg.cap), -1, np.int32)])
+    sp[sl], sb[sl], sc[sl], ss[sl] = p, b, c, s
+    np.testing.assert_array_equal(sp, agg.slot_arrays()[0])
+    np.testing.assert_array_equal(sb, agg.slot_arrays()[1])
+    np.testing.assert_array_equal(sc, agg.slot_arrays()[2])
+    np.testing.assert_array_equal(ss, agg.slot_arrays()[3])
+
+
+# ---------------------------------------------------------------------------
+# engine: removal API + refcounts
+# ---------------------------------------------------------------------------
+
+
+def test_remove_subscriptions_decrements_refcounts(rng):
+    eng = BADEngine(brokers=("B1", "B2"), group_cap=8)
+    eng.create_channel(tweets_about_drugs())
+    params = rng.integers(0, 50, 300).astype(np.int32)
+    sids = eng.subscribe_bulk("TweetsAboutDrugs", params,
+                              rng.integers(0, 2, 300))
+    st = eng.channels["TweetsAboutDrugs"]
+    assert int(st.user_params.refcount.sum()) == 300
+    e0 = st.epoch
+    n = eng.remove_subscriptions("TweetsAboutDrugs", sids[:200])
+    assert n == 200
+    assert st.epoch == e0 + 1
+    np.testing.assert_array_equal(
+        st.user_params.refcount,
+        np.bincount(params[200:].astype(np.int64), minlength=50))
+    # the early semi-join mask SHRINKS when a param's last subscriber leaves
+    gone = set(params[:200].tolist()) - set(params[200:].tolist())
+    if gone:
+        mask = np.asarray(st.user_params.mask())
+        assert not mask[sorted(gone)].any()
+    # unknown sIDs are ignored, nothing double-decremented
+    assert eng.remove_subscriptions("TweetsAboutDrugs", sids[:200]) == 0
+    assert int(st.user_params.refcount.sum()) == 100
+
+
+# ---------------------------------------------------------------------------
+# fuzz: delta-maintained execute_all ≡ from-scratch engine
+# ---------------------------------------------------------------------------
+
+
+FUZZ_FLAGS = [
+    ExecutionFlags(scan_mode="window", aggregation=True, param_pushdown=True),
+    ExecutionFlags(scan_mode="window"),
+    ExecutionFlags(scan_mode="bad_index", aggregation=True,
+                   param_pushdown=True),
+]
+
+
+def _fresh_replay(live, timeline, users=None, user_brokers=None,
+                  cohorts=None):
+    """A from-scratch engine: replays the create/drop/ingest TIMELINE (a
+    channel's record visibility starts at its creation — window start and
+    BAD-index rows alike), then loads exactly the live subscription set
+    with the ORIGINAL sIDs so delivered-sID multisets are comparable.
+    Subscription load order does not affect candidate sets."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1", "B2"), group_cap=8)
+    for kind, payload in timeline:
+        if kind == "create":
+            eng.create_channel(payload)
+        elif kind == "drop":
+            eng.drop_channel(payload)
+        else:
+            eng.ingest(payload)
+    if users is not None:
+        eng.set_user_locations(users, user_brokers)
+    for name, subs_live in live.items():
+        if subs_live:
+            arr = sorted(subs_live.items())
+            sids = np.asarray([s for s, _ in arr], np.int32)
+            packed = np.asarray([v for _, v in arr], np.int64)
+            st = eng.channels[name]
+            st.aggregator.add_bulk(packed & 0xFFFF, packed >> 16, sids=sids)
+            st.user_params.add_bulk(packed & 0xFFFF)
+            st.note_change()
+    for name, uids in (cohorts or {}).items():
+        eng.subscribe_users(name, np.asarray(sorted(uids), np.int32))
+    return eng
+
+
+def _delivered_sets(eng, flags):
+    """Semantic outcome of one tick: per channel (num_results, num_notified,
+    broker_bytes, broker_results, delivered sid multiset, delivered (row,
+    member-count) multiset) with caps large enough that nothing overflows."""
+    from repro.core.broker import fanout_sids, pack_payloads
+    import jax.numpy as jnp
+    out = {}
+    reps = eng.execute_all(flags, advance=False, timed=False, deliver=True)
+    for name, rep in reps.items():
+        st = eng.channels[name]
+        if st.spec.join == "spatial":
+            tbl = eng._spatial_sids_table(st)
+            sids_tbl = jnp.zeros((0,), jnp.int32) if tbl is None else tbl
+        else:
+            sids_tbl = eng.group_sids_array(name, flags.aggregation)
+        buf, dlv, ov = pack_payloads(rep.result, sids_tbl, 2, 1 << 14)
+        assert int(ov) == 0
+        rows = np.asarray(buf)[:int(dlv)]
+        nbuf, ndlv, nov = fanout_sids(rep.result, sids_tbl, 1 << 15)
+        assert int(nov) == 0
+        out[name] = (
+            rep.num_results, rep.num_notified,
+            tuple(np.asarray(rep.result.broker_bytes).tolist()),
+            tuple(np.asarray(rep.result.broker_results).tolist()),
+            sorted(np.asarray(nbuf)[:int(ndlv)].tolist()),
+            sorted(map(tuple, rows[:, [0, 2]].tolist())),
+        )
+    eng.spill.clear()
+    return out
+
+
+@pytest.mark.parametrize("flags", FUZZ_FLAGS,
+                         ids=lambda f: f"{f.scan_mode}"
+                         f"{'+agg' if f.aggregation else ''}")
+def test_fuzz_delta_engine_equals_fresh_engine(rng, flags):
+    """Seeded interleavings of subscribe_bulk / subscribe /
+    remove_subscriptions / unsubscribe / drop_channel+re-create / ingest:
+    at every checkpoint the delta-maintained engine's
+    ``execute_all(deliver=True)`` outcome (counts, per-broker accounting,
+    delivered sID multiset, delivered row/member lines) equals a
+    from-scratch engine built from the live set."""
+    specs = [tweets_about_drugs(), most_threatening_tweets()]
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1", "B2"), group_cap=8)
+    timeline = []
+    for s in specs:
+        eng.create_channel(s)
+        timeline.append(("create", s))
+    live = {s.name: {} for s in specs}   # sid -> param | (broker << 16)
+
+    def add_bulk(name, n):
+        params = rng.integers(0, 50, n).astype(np.int32)
+        brokers = rng.integers(0, 2, n).astype(np.int32)
+        sids = eng.subscribe_bulk(name, params, brokers)
+        live[name].update({int(s): int(p) | (int(b) << 16)
+                           for s, p, b in zip(sids, params, brokers)})
+
+    add_bulk("TweetsAboutDrugs", 150)
+    add_bulk("MostThreateningTweets", 100)
+    for step in range(12):
+        op = int(rng.integers(0, 6))
+        name = ("TweetsAboutDrugs", "MostThreateningTweets")[
+            int(rng.integers(0, 2))]
+        if op == 0:
+            add_bulk(name, int(rng.integers(1, 60)))
+        elif op == 1 and live[name]:
+            p = int(rng.integers(0, 50))
+            bi = int(rng.integers(2))
+            sid = eng.subscribe(name, p, ("B1", "B2")[bi])
+            live[name][sid] = p | (bi << 16)
+        elif op == 2 and live[name]:
+            pick = rng.choice(list(live[name].keys()),
+                              min(len(live[name]),
+                                  int(rng.integers(1, 80))), replace=False)
+            n = eng.remove_subscriptions(name, pick.astype(np.int32))
+            assert n == len(set(pick.tolist()))
+            for x in pick:
+                live[name].pop(int(x))
+        elif op == 3 and live[name]:
+            sid = int(rng.choice(list(live[name].keys())))
+            v = live[name].pop(sid)
+            assert eng.unsubscribe(name, v & 0xFFFF,
+                                   ("B1", "B2")[v >> 16], sid)
+        elif op == 4 and name == "MostThreateningTweets":
+            # drop + re-create: epoch state restarts, caches must not
+            # serve the dead channel's arrays; record visibility restarts
+            # at re-creation (the timeline replay mirrors that)
+            eng.drop_channel(name)
+            spec2 = most_threatening_tweets()
+            eng.create_channel(spec2)
+            timeline.append(("drop", name))
+            timeline.append(("create", spec2))
+            live[name] = {}
+            add_bulk(name, int(rng.integers(1, 50)))
+        else:
+            b = make_tweets(rng, int(rng.integers(20, 80)),
+                            t0=1000 + 100 * step, match_drugs=0.3)
+            eng.ingest(b)
+            timeline.append(("ingest", b))
+        if step % 3 == 2:    # checkpoint
+            fresh = _fresh_replay(live, timeline)
+            got = _delivered_sets(eng, flags)
+            want = _delivered_sets(fresh, flags)
+            assert got == want, f"step {step}"
+    fresh = _fresh_replay(live, timeline)
+    assert _delivered_sets(eng, flags) == _delivered_sets(fresh, flags)
+
+
+# ---------------------------------------------------------------------------
+# spill staleness across epochs
+# ---------------------------------------------------------------------------
+
+
+def test_spill_drain_staleness_across_epoch_bumps(rng):
+    """Pair spills recorded at epoch e are unroutable after ANY further
+    epoch bump — including one produced by the new bulk-removal API — and
+    drain as counted drops; sid spills survive (raw ids never go stale)."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1", "B2"), group_cap=8,
+                    max_deliver_pairs=16, max_notify=32)
+    eng.create_channel(tweets_about_drugs())
+    sids = eng.subscribe_bulk("TweetsAboutDrugs",
+                              rng.integers(0, 50, 200),
+                              rng.integers(0, 2, 200))
+    eng.ingest(make_tweets(rng, 500, match_drugs=0.3))
+    flags = ExecutionFlags(scan_mode="window")
+    rep = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                              timed=False, deliver=True)
+    assert rep.overflow.spilled_pairs > 0
+    eng.remove_subscriptions("TweetsAboutDrugs", sids[:5])   # epoch bump
+    dropped = delivered_sids = 0
+    while eng.spill.pending_pairs("TweetsAboutDrugs") \
+            + eng.spill.pending_sids("TweetsAboutDrugs") > 0:
+        dr = eng.drain_spilled().get("TweetsAboutDrugs")
+        if dr is None:
+            break
+        assert dr.stats.delivered_pairs == 0
+        dropped += dr.stats.dropped_pairs
+        delivered_sids += dr.stats.delivered_sids
+    assert dropped == rep.overflow.spilled_pairs
+    assert delivered_sids == rep.overflow.spilled_sids
+
+
+# ---------------------------------------------------------------------------
+# steady state: zero retraces, capacity fallback
+# ---------------------------------------------------------------------------
+
+
+def test_steady_churn_zero_retraces_and_correct(rng):
+    """After warmup, steady balanced churn patches in place: no retraces,
+    no rebuilds — and the delta-maintained engine still matches a fresh
+    engine at the end."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1", "B2"), group_cap=8)
+    spec = tweets_about_drugs()
+    eng.create_channel(spec)
+    sids = eng.subscribe_bulk("TweetsAboutDrugs",
+                              rng.integers(0, 50, 600),
+                              rng.integers(0, 2, 600))
+    wl = [ChurnWorkload("TweetsAboutDrugs", adds_per_tick=64,
+                        removes_per_tick=64, num_brokers=2)]
+    flags = ExecutionFlags.fully_optimized()
+    kw = dict(flags=flags, deliver=True, ingest_per_tick=64,
+              make_batch=lambda r, n, t0: make_tweets(r, n, t0=t0,
+                                                      match_drugs=0.2),
+              live_sids={"TweetsAboutDrugs": sids})
+    run_ticks(eng, wl, 4, rng, warmup=4, **kw)          # warm (untimed)
+    rep = run_ticks(eng, wl, 5, rng, warmup=0, **kw)
+    assert rep.maintenance.traces == 0, rep.maintenance
+    assert rep.maintenance.rebuilds == 0, rep.maintenance
+    assert rep.maintenance.patches >= 5
+    # end-state equivalence vs a fresh engine over one more tick
+    st = eng.channels["TweetsAboutDrugs"]
+    flat = eng._flat_table(st)
+    fresh = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                      max_window=1024, max_candidates=256,
+                      brokers=("B1", "B2"), group_cap=8)
+    fresh.create_channel(spec)
+    fresh.subscribe_bulk("TweetsAboutDrugs", flat.params, flat.brokers)
+    b = make_tweets(rng, 200, t0=10 ** 6, match_drugs=0.3)
+    eng.ingest(b)
+    fresh.ingest(b)
+    # flat layout: one target per subscription -> EXACT equality (counts
+    # and bytes); aggregated layout: the churned group partition may differ
+    # from fresh aggregation within compact_slack, but the subscriber-level
+    # outcome (num_notified) must match
+    f_flat = ExecutionFlags(scan_mode="window")
+    g = eng.execute_all(f_flat, advance=False, timed=False)["TweetsAboutDrugs"]
+    w = fresh.execute_all(f_flat, advance=False,
+                          timed=False)["TweetsAboutDrugs"]
+    assert (g.num_results, g.num_notified) == (w.num_results, w.num_notified)
+    np.testing.assert_allclose(g.broker_bytes, w.broker_bytes)
+    f_agg = ExecutionFlags(scan_mode="window", aggregation=True,
+                           param_pushdown=True)
+    g = eng.execute_all(f_agg, advance=False, timed=False)["TweetsAboutDrugs"]
+    w = fresh.execute_all(f_agg, advance=False,
+                          timed=False)["TweetsAboutDrugs"]
+    assert g.num_notified == w.num_notified
+
+
+def test_capacity_exceeded_falls_back_to_rebuild(rng):
+    """Growing past the padded slot capacity triggers a (counted) full
+    rebuild with a bigger bucket — results stay correct throughout."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1",), group_cap=4)
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, 40),
+                       np.zeros(40, np.int32))
+    flags = ExecutionFlags(scan_mode="window", aggregation=True,
+                           param_pushdown=True)
+    eng.ingest(make_tweets(rng, 300, match_drugs=0.3))
+    eng.execute_all(flags, advance=False, timed=False)    # warm cache
+    m0 = eng.maintenance.snapshot()
+    # quadruple the subscription set: slots blow past the padded bucket
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, 400),
+                       np.zeros(400, np.int32))
+    got = eng.execute_all(flags, advance=False, timed=False)
+    d = eng.maintenance.since(m0)
+    assert d.rebuilds >= 1
+    seq = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                              timed=False)
+    assert got["TweetsAboutDrugs"].num_results == seq.num_results
+    assert got["TweetsAboutDrugs"].num_notified == seq.num_notified
+
+
+def test_out_of_band_mutation_forces_rebuild(rng):
+    """Mutating the aggregator directly + invalidate_targets (the legacy
+    hatch, used by the replay benchmark) leaves no delta — the cache must
+    detect the gap and rebuild, not serve stale arrays."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1",), group_cap=8)
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, 100),
+                       np.zeros(100, np.int32))
+    flags = ExecutionFlags(scan_mode="window", aggregation=True,
+                           param_pushdown=True)
+    eng.ingest(make_tweets(rng, 200, match_drugs=0.3))
+    eng.execute_all(flags, advance=False, timed=False)
+    st = eng.channels["TweetsAboutDrugs"]
+    st.aggregator.add_subscription(7, 0)     # out-of-band
+    st.user_params.add(7)
+    st.invalidate_targets()
+    got = eng.execute_all(flags, advance=False, timed=False)
+    seq = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                              timed=False)
+    assert got["TweetsAboutDrugs"].num_results == seq.num_results
+    assert got["TweetsAboutDrugs"].num_notified == seq.num_notified
+
+
+# ---------------------------------------------------------------------------
+# spatial cohorts
+# ---------------------------------------------------------------------------
+
+
+def _cohort_engine(rng, n_users=40):
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1", "B2"), group_cap=8)
+    eng.create_channel(tweets_about_crime(1))
+    eng.set_user_locations(
+        (rng.normal(size=(n_users, 2)) * 30).astype(np.float32),
+        rng.integers(0, 2, n_users))
+    eng.ingest(make_tweets(rng, 400))
+    return eng
+
+
+def test_cohort_restricts_spatial_matches(rng):
+    """An explicit cohort serves ONLY its members; delivered sIDs are global
+    user ids; fused and per-channel paths agree."""
+    eng = _cohort_engine(rng)
+    flags = ExecutionFlags(scan_mode="window")
+    all_users = eng.execute_all(flags, advance=False,
+                                timed=False)["TweetsAboutCrime1"]
+    cohort = np.arange(0, 40, 2)
+    eng.subscribe_users("TweetsAboutCrime1", cohort)
+    got = eng.execute_all(flags, advance=False, timed=False,
+                          deliver=True)["TweetsAboutCrime1"]
+    seq = eng.execute_channel("TweetsAboutCrime1", flags, advance=False,
+                              timed=False, deliver=True)
+    assert got.num_results == seq.num_results
+    assert got.overflow == seq.overflow
+    assert got.num_results < all_users.num_results
+    # delivered sids are GLOBAL uids drawn from the cohort
+    from repro.core.broker import fanout_sids
+    tbl = eng._spatial_sids_table(eng.channels["TweetsAboutCrime1"])
+    buf, dlv, ov = fanout_sids(seq.result, tbl, 1 << 14)
+    assert int(ov) == 0
+    delivered = set(np.asarray(buf)[:int(dlv)].tolist())
+    assert delivered and delivered <= set(cohort.tolist())
+    eng.spill.clear()
+
+
+def test_cohort_churn_patches_match_rebuild(rng):
+    """Cohort add/remove maintained by deltas == a fresh engine given the
+    final cohort, with zero rebuilds across steady cohort churn."""
+    eng = _cohort_engine(rng)
+    eng.subscribe_users("TweetsAboutCrime1", np.arange(20))
+    flags = ExecutionFlags(scan_mode="window")
+    eng.execute_all(flags, advance=False, timed=False)      # warm
+    m0 = eng.maintenance.snapshot()
+    cohort = set(range(20))
+    for step in range(6):
+        out = rng.choice(sorted(cohort), 3, replace=False)
+        eng.unsubscribe_users("TweetsAboutCrime1", out)
+        cohort -= set(int(x) for x in out)
+        inn = rng.integers(0, 40, 3)
+        eng.subscribe_users("TweetsAboutCrime1", inn)
+        cohort |= set(int(x) for x in inn)
+        got = eng.execute_all(flags, advance=False, timed=False)
+        seq = eng.execute_channel("TweetsAboutCrime1", flags, advance=False,
+                                  timed=False)
+        assert got["TweetsAboutCrime1"].num_results == seq.num_results
+    assert eng.maintenance.since(m0).rebuilds == 0
+    # equivalence vs fresh engine holding the final cohort
+    fresh = _cohort_engine(np.random.default_rng(0))
+    # rebuild identical world: same users/records as eng
+    fresh.set_user_locations(np.asarray(eng.user_locations),
+                             np.asarray(eng.user_brokers))
+    fresh.subscribe_users("TweetsAboutCrime1",
+                          np.asarray(sorted(cohort), np.int32))
+    got = eng.execute_all(flags, advance=False, timed=False)
+    want = fresh.execute_all(flags, advance=False, timed=False)
+    assert got["TweetsAboutCrime1"].num_results == \
+        want["TweetsAboutCrime1"].num_results
+
+
+def test_remove_bulk_ignores_wild_sids(rng):
+    """Unknown sIDs — including negative and past-the-map values — are
+    ignored per contract, never an IndexError."""
+    agg = subs.Aggregator(cap=4)
+    sids = agg.add_bulk(np.zeros(6, np.int32), np.zeros(6, np.int32))
+    out = agg.remove_bulk(np.asarray([-5000, -1, 10 ** 7, int(sids[0])],
+                                     np.int64))
+    assert out.tolist() == [0]
+    assert agg.num_subscriptions == 5
+
+
+def test_slot_space_spills_drain_against_slot_table(rng):
+    """Fused aggregated spills on an incremental engine carry SLOT-space
+    targets; with free slots in the table (a group emptied by removals) the
+    drain must re-pack against the slot table — the compacted build() table
+    would notify the wrong subscribers."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1",), group_cap=4,
+                    max_deliver_pairs=4, max_notify=1 << 12)
+    eng.create_channel(tweets_about_drugs())
+    # params 0..9, one group each (plus param 3 twice to survive removal)
+    params = np.asarray(list(range(10)) * 4, np.int32)
+    sids = eng.subscribe_bulk("TweetsAboutDrugs", params,
+                              np.zeros(len(params), np.int32))
+    # empty param 2's group entirely -> its slot goes on the free list,
+    # shifting build()'s compacted rows relative to slot indices
+    agg = eng.channels["TweetsAboutDrugs"].aggregator
+    gone = sids[params == 2]
+    assert eng.remove_subscriptions("TweetsAboutDrugs", gone) == len(gone)
+    assert agg.num_live_groups < agg.num_slots   # a hole exists
+    fields = np.zeros((30, 10), dtype=np.int32)
+    fields[:, R.STATE] = np.arange(30) % 10
+    fields[:, R.THREATENING_RATE] = 10
+    fields[:, R.DRUG_ACTIVITY] = 3
+    fields[:, R.TIMESTAMP] = 50
+    eng.ingest(R.RecordBatch.from_numpy(fields))
+    flags = ExecutionFlags(scan_mode="window", aggregation=True,
+                           param_pushdown=True)
+    rep = eng.execute_all(flags, advance=False, timed=False,
+                          deliver=True)["TweetsAboutDrugs"]
+    assert rep.overflow.spilled_pairs > 0
+    # oracle: every drained payload line's sID list must hold sIDs whose
+    # live param equals the record's STATE field
+    sid_param = {int(s): int(p) for s, p in zip(sids, params)
+                 if int(s) not in set(gone.tolist())}
+    checked = 0
+    while eng.spill.pending_pairs() > 0:
+        for dr in eng.drain_spilled().values():
+            if dr.payload is None:
+                continue
+            for line in dr.payload[:dr.stats.delivered_pairs]:
+                row, members = int(line[0]), int(line[2])
+                assert members > 0
+                got = [int(x) for x in line[4:4 + members]]
+                want_param = int(fields[row, R.STATE])
+                for s in got:
+                    assert sid_param[s] == want_param, (row, got)
+                checked += 1
+    assert checked > 0
+    eng.spill.clear()
+
+
+def test_empty_cohort_creation_bumps_epoch(rng):
+    """subscribe_users([]) flips a channel from all-users to an EMPTY
+    cohort: pending spatial spills must go stale (target space remapped)
+    and execution must now serve nobody."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1",), group_cap=8,
+                    max_deliver_pairs=4, max_notify=8)
+    eng.create_channel(tweets_about_crime(1))
+    eng.set_user_locations(np.zeros((8, 2), np.float32))
+    fields = np.zeros((20, 10), dtype=np.int32)
+    fields[:, R.ABOUT_COUNTRY] = 0
+    fields[:, R.TIMESTAMP] = 5
+    eng.ingest(R.RecordBatch.from_numpy(fields,
+                                        np.zeros((20, 2), np.float32)))
+    flags = ExecutionFlags(scan_mode="window")
+    rep = eng.execute_channel("TweetsAboutCrime1", flags, advance=False,
+                              timed=False, deliver=True)
+    assert rep.overflow.spilled_pairs > 0
+    e0 = eng.channels["TweetsAboutCrime1"].epoch
+    eng.subscribe_users("TweetsAboutCrime1", np.zeros((0,), np.int32))
+    assert eng.channels["TweetsAboutCrime1"].epoch == e0 + 1
+    dropped = 0
+    while eng.spill.pending_pairs("TweetsAboutCrime1") > 0:
+        dr = eng.drain_spilled().get("TweetsAboutCrime1")
+        if dr is None:
+            break
+        assert dr.stats.delivered_pairs == 0   # stale, not misrouted
+        dropped += dr.stats.dropped_pairs
+    assert dropped == rep.overflow.spilled_pairs
+    got = eng.execute_all(flags, advance=False, timed=False)
+    assert got["TweetsAboutCrime1"].num_results == 0
+    eng.spill.clear()
+
+
+def test_cohort_validation_and_empty(rng):
+    eng = _cohort_engine(rng)
+    with pytest.raises(ValueError, match="not a spatial"):
+        eng2 = BADEngine()
+        eng2.create_channel(tweets_about_drugs())
+        eng2.subscribe_users("TweetsAboutDrugs", [0])
+    with pytest.raises(ValueError, match="out of"):
+        eng.subscribe_users("TweetsAboutCrime1", [99])
+    assert eng.unsubscribe_users("TweetsAboutCrime1", [3]) == 0  # no cohort
+    eng.subscribe_users("TweetsAboutCrime1", [1, 2, 3])
+    assert eng.unsubscribe_users("TweetsAboutCrime1", [1, 2, 3]) == 3
+    flags = ExecutionFlags(scan_mode="window")
+    # empty cohort: nobody is served
+    got = eng.execute_all(flags, advance=False, timed=False)
+    assert got["TweetsAboutCrime1"].num_results == 0
