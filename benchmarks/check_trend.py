@@ -37,16 +37,33 @@ def parse_ratio(derived: str):
 def check(results, thresholds, tolerance: float):
     by_name = {}
     for row in results:
+        if "name" not in row:
+            continue                     # malformed emit row: not trackable
         r = parse_ratio(str(row.get("derived", "")))
         if r is not None:
             by_name[row["name"]] = r
     failures, report = [], []
-    for entry in thresholds:
-        name, baseline = entry["name"], float(entry["baseline"])
+    for i, entry in enumerate(thresholds):
+        name, baseline = entry.get("name"), entry.get("baseline")
+        if name is None or baseline is None:
+            failures.append(
+                f"MALFORMED  thresholds entry #{i} needs 'name' and "
+                f"'baseline': {json.dumps(entry)}")
+            continue
+        baseline = float(baseline)
         floor = baseline * (1.0 - tolerance)
         got = by_name.get(name)
         if got is None:
-            failures.append(f"MISSING  {name} (baseline x{baseline:g})")
+            # a deleted/renamed suite must update thresholds.json
+            # consciously — say what the dump DID contain so the rename is
+            # obvious from the CI log alone
+            have = sorted(by_name)
+            near = [n for n in have if n.split("/")[0] == name.split("/")[0]]
+            failures.append(
+                f"MISSING  {name} (baseline x{baseline:g}) — not among the "
+                f"{len(have)} ratio rows the bench dump contained; "
+                + (f"rows under '{name.split('/')[0]}/': {near}" if near
+                   else f"ratio rows present: {have}"))
             continue
         status = "ok" if got >= floor else "REGRESSED"
         report.append(f"{status:>9}  {name}: x{got:g} "

@@ -22,7 +22,10 @@ Two delivery paths share the same single-channel kernels:
                  source pair in per-channel prefix sums), so the work is
                  proportional to the delivery capacity + total overflow, not
                  to the C x max-pending x member-cap padded grid. Overflowed
-                 pairs/sIDs land in compacted flat channel-major spill
+                 pairs/sIDs land in the device-resident ``RetryRing`` (when
+                 the caller passes one — re-packed and re-delivered ahead of
+                 the fresh result on the NEXT call, epoch-masked staleness)
+                 and past its window in compacted flat channel-major spill
                  streams for the engine's host-side SpillQueue.
 """
 from __future__ import annotations
@@ -73,6 +76,12 @@ class DeliveryStats:
     # convert-stage delivered pairs per broker (one-hot accounting); () when
     # the caller supplied no broker table
     delivered_pairs_broker: Tuple[int, ...] = ()
+    # retry-ring entries RE-presented this call (they were counted as
+    # spilled by an earlier call): produced == fresh + retried, so
+    # delivered + spilled + dropped == produced still holds per call and
+    # telescopes across ticks (ring-resident entries count as spilled)
+    retried_pairs: int = 0
+    retried_sids: int = 0
 
     @property
     def overflow_pairs(self) -> int:
@@ -102,7 +111,9 @@ class DeliveryStats:
             self.delivered_sids + other.delivered_sids,
             self.spilled_sids + other.spilled_sids,
             self.dropped_sids + other.dropped_sids,
-            self.delivered_pairs_broker or other.delivered_pairs_broker)
+            self.delivered_pairs_broker or other.delivered_pairs_broker,
+            self.retried_pairs + other.retried_pairs,
+            self.retried_sids + other.retried_sids)
 
 
 # ---------------------------------------------------------------------------
@@ -229,14 +240,58 @@ class FanoutDelivery(NamedTuple):
     produced: jnp.ndarray     # (C,) int32 member sIDs (pre-cap)
 
 
+class RetryRing(NamedTuple):
+    """Device-resident retry state for fused delivery: per-channel windows
+    (C, W) of overflowed pairs — with the subscription EPOCH each indexes,
+    for staleness masking — and overflowed sIDs (never stale). Entries are
+    stored as compacted prefixes (``*_count`` gives each channel's live
+    prefix). The ring is an INPUT and an OUTPUT of ``deliver_all``: resident
+    entries are re-packed and re-delivered ahead of the fresh result inside
+    the next call, so sustained overflow never round-trips through the
+    host."""
+
+    pair_rows: jnp.ndarray      # (C, W) int32
+    pair_targets: jnp.ndarray   # (C, W) int32
+    pair_epochs: jnp.ndarray    # (C, W) int32
+    pair_count: jnp.ndarray     # (C,) int32
+    sid_values: jnp.ndarray     # (C, W) int32
+    sid_count: jnp.ndarray      # (C,) int32
+
+    @property
+    def window(self) -> int:
+        return self.pair_rows.shape[1]
+
+
+def empty_ring(num_channels: int, window: int) -> RetryRing:
+    neg = jnp.full((num_channels, window), -1, jnp.int32)
+    z1 = jnp.zeros((num_channels,), jnp.int32)
+    return RetryRing(neg, neg, jnp.zeros((num_channels, window), jnp.int32),
+                     z1, neg, z1)
+
+
+class RingCounters(NamedTuple):
+    """Per-channel (C,) ring accounting of one ring-aware delivery call."""
+
+    retried_pairs: jnp.ndarray   # ring pair entries re-presented (incl stale)
+    stale_pairs: jnp.ndarray     # of those, dropped for an epoch mismatch
+    ring_pairs: jnp.ndarray      # pairs resident in the OUTPUT ring
+    retried_sids: jnp.ndarray    # ring sid entries re-presented
+    ring_sids: jnp.ndarray       # sids resident in the OUTPUT ring
+
+
 class FusedDelivery(NamedTuple):
     """Both stages plus the compacted flat spill streams (channel identity
-    preserved) for the engine's SpillQueue."""
+    preserved) for the engine's SpillQueue. Ring-aware calls additionally
+    carry the successor ``ring`` and its ``counters``; the spill streams
+    then hold only what overflowed PAST the ring (the host queue as the
+    ring's bounded last resort)."""
 
     pack: PackedDelivery
     fan: FanoutDelivery
     pair_spill: plans.PairStream   # overflowed (row, channel, target) pairs
     sid_spill: plans.ValueStream   # overflowed (sid, channel) end subscribers
+    ring: Optional[RetryRing] = None
+    counters: Optional[RingCounters] = None
 
 
 def _pair_layout(result: ChannelResult, caps, cap_limit: int):
@@ -258,16 +313,54 @@ def _pair_layout(result: ChannelResult, caps, cap_limit: int):
 
 
 def _member_counts(group_sids: jnp.ndarray, valid2: jnp.ndarray,
-                   tgt2: jnp.ndarray) -> jnp.ndarray:
-    """(C, P) member count per pair via the per-target table — O(C*T*cap) on
-    the TABLE plus an O(C*P) gather, never O(C*P*cap) per-pair reductions.
-    Requires group rows to pack members as a -1-padded PREFIX (the layout
-    every table builder in subscriptions.py produces)."""
+                   tgt2: jnp.ndarray,
+                   counts: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(C, P) member count per pair. With ``counts`` (C, T) — the
+    ``TargetArrays.counts`` the engine already maintains — the pass is ONE
+    O(C*P) gather, fully capacity-proportional. Without it the table is
+    re-derived by an O(C*T*cap) reduction over ``group_sids`` (the
+    standalone-kernel fallback); either way never O(C*P*cap) per-pair
+    reductions. Requires group rows to pack members as a -1-padded PREFIX
+    (the layout every table builder in subscriptions.py produces, and what
+    the maintained counts equal by construction)."""
     if group_sids.shape[-1] == 0:       # identity fanout: 1 member per pair
         return jnp.where(valid2 & (tgt2 >= 0), 1, 0).astype(jnp.int32)
-    m_table = jnp.sum((group_sids >= 0).astype(jnp.int32), axis=-1)  # (C, T)
+    if counts is None:
+        counts = jnp.sum((group_sids >= 0).astype(jnp.int32), axis=-1)
     ch = jnp.arange(valid2.shape[0], dtype=jnp.int32)[:, None]
-    return jnp.where(valid2, m_table[ch, jnp.maximum(tgt2, 0)], 0)
+    return jnp.where(valid2, counts[ch, jnp.maximum(tgt2, 0)], 0)
+
+
+def _pack_lines(rows: jnp.ndarray, tgts: jnp.ndarray, ok: jnp.ndarray,
+                ch: jnp.ndarray, group_sids: jnp.ndarray, counts,
+                payload_words: int, target_brokers,
+                num_brokers: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Assemble the convert-stage wire lines + one-hot per-broker accounting
+    for already-resolved (C, Q) output slots (``rows``/``tgts`` masked to 0
+    where not ``ok``) — the single definition of the wire format, shared by
+    the plain and ring-aware fused convert stages."""
+    tgt_safe = jnp.where(ok, jnp.maximum(tgts, 0), 0)
+    if group_sids.shape[-1] == 0:       # identity fanout
+        members = jnp.where(ok, 1, 0)
+        sids = tgt_safe[..., None]
+    else:
+        m_table = (counts if counts is not None else
+                   jnp.sum((group_sids >= 0).astype(jnp.int32), axis=-1))
+        members = jnp.where(ok, m_table[ch, tgt_safe], 0)
+        sids = group_sids[ch, tgt_safe]
+    header = jnp.stack([rows, tgts, members,
+                        jnp.where(ok, payload_words, 0)], axis=-1)
+    payload = jnp.broadcast_to(rows[..., None],
+                               rows.shape + (payload_words,))
+    line = jnp.concatenate([header, jnp.where(ok[..., None], sids, 0),
+                            payload], axis=-1)
+    if target_brokers is None or num_brokers == 0:
+        per_broker = jnp.zeros((rows.shape[0], 0), dtype=jnp.int32)
+    else:
+        bids = jnp.where(ok, target_brokers[ch, tgt_safe], num_brokers)
+        one_hot = bids[..., None] == jnp.arange(num_brokers, dtype=jnp.int32)
+        per_broker = jnp.sum(one_hot.astype(jnp.int32), axis=1)
+    return jnp.where(ok[..., None], line, 0), per_broker
 
 
 def _source_pair(cum: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
@@ -284,7 +377,9 @@ def pack_payloads_all(result: ChannelResult, group_sids: jnp.ndarray,
                       payload_words: int, max_pairs: int,
                       caps: Optional[jnp.ndarray] = None,
                       target_brokers: Optional[jnp.ndarray] = None,
-                      num_brokers: int = 0) -> PackedDelivery:
+                      num_brokers: int = 0,
+                      counts: Optional[jnp.ndarray] = None
+                      ) -> PackedDelivery:
     """Convert stage for EVERY channel at once. ``result`` leaves carry a
     leading C axis (the fused join output); ``group_sids`` is (C, T, cap) for
     group/flat tables or (C, 0) to select the identity fanout (spatial
@@ -295,12 +390,13 @@ def pack_payloads_all(result: ChannelResult, group_sids: jnp.ndarray,
     size). ``target_brokers`` (C, T) — broker id by target index — enables
     one-hot per-broker accounting of *delivered* pairs, returned as
     (C, num_brokers); the masked reductions run over the (C, max_pairs)
-    output slots, not the pending grid.
+    output slots, not the pending grid. ``counts`` (C, T) supplies the
+    engine-maintained member counts so the pass never re-derives them from
+    the sID table (see ``_member_counts``).
     """
     C = result.pair_valid.shape[0]
     valid2, rows2, tgt2, cumv, produced, cap_p = _pair_layout(
         result, caps, max_pairs)
-    identity = group_sids.shape[-1] == 0
     P = valid2.shape[1]
     ch = jnp.arange(C, dtype=jnp.int32)[:, None]
     delivered = jnp.minimum(produced, cap_p)
@@ -309,23 +405,8 @@ def pack_payloads_all(result: ChannelResult, group_sids: jnp.ndarray,
     ok = q < delivered[:, None]
     rows = jnp.where(ok, _gather(rows2, p), 0)
     tgts = jnp.where(ok, _gather(tgt2, p), 0)
-    members = jnp.where(ok, _gather(_member_counts(group_sids, valid2, tgt2),
-                                    p), 0)
-    tgt_safe = jnp.maximum(tgts, 0)
-    sids = tgt_safe[..., None] if identity else group_sids[ch, tgt_safe]
-    header = jnp.stack([rows, tgts, members,
-                        jnp.where(ok, payload_words, 0)], axis=-1)
-    payload = jnp.broadcast_to(rows[..., None],
-                               rows.shape + (payload_words,))
-    line = jnp.concatenate([header, jnp.where(ok[..., None], sids, 0),
-                            payload], axis=-1)
-    out = jnp.where(ok[..., None], line, 0)
-    if target_brokers is None or num_brokers == 0:
-        per_broker = jnp.zeros((C, 0), dtype=jnp.int32)
-    else:
-        bids = jnp.where(ok, target_brokers[ch, tgt_safe], num_brokers)
-        one_hot = bids[..., None] == jnp.arange(num_brokers, dtype=jnp.int32)
-        per_broker = jnp.sum(one_hot.astype(jnp.int32), axis=1)
+    out, per_broker = _pack_lines(rows, tgts, ok, ch, group_sids, counts,
+                                  payload_words, target_brokers, num_brokers)
     spill_mask = valid2 & (cumv - 1 >= cap_p[:, None])
     return PackedDelivery(out, delivered, produced, spill_mask, per_broker)
 
@@ -340,24 +421,27 @@ def _member_value(group_sids: jnp.ndarray, ch, tgt_safe: jnp.ndarray,
 
 def fanout_sids_all(result: ChannelResult, group_sids: jnp.ndarray,
                     max_notify: int,
-                    caps: Optional[jnp.ndarray] = None) -> FanoutDelivery:
+                    caps: Optional[jnp.ndarray] = None,
+                    counts: Optional[jnp.ndarray] = None) -> FanoutDelivery:
     """Send stage for EVERY channel at once, with per-channel caps. Each
     notify slot binary-searches its source pair in the per-channel member
     prefix sums and gathers the sID directly — O(max_notify log P) per
     channel, no member grid. Delivered prefixes are bit-identical to
     ``fanout_sids`` per channel (tables pack members as a -1-padded prefix).
-    """
-    return _fanout_parts(result, group_sids, max_notify, caps)[0]
+    ``counts`` (C, T): engine-maintained member counts (see
+    ``_member_counts``)."""
+    return _fanout_parts(result, group_sids, max_notify, caps, counts)[0]
 
 
 def _fanout_parts(result: ChannelResult, group_sids: jnp.ndarray,
-                  max_notify: int, caps):
+                  max_notify: int, caps,
+                  counts: Optional[jnp.ndarray] = None):
     """The send stage plus its internal member bookkeeping, so ``deliver_all``
     can resolve spill slots against the same prefix sums without
     re-deriving them."""
     C = result.pair_valid.shape[0]
     valid2, _, tgt2, _, _, cap_n = _pair_layout(result, caps, max_notify)
-    members = _member_counts(group_sids, valid2, tgt2)         # (C, P)
+    members = _member_counts(group_sids, valid2, tgt2, counts)  # (C, P)
     cumm = jnp.cumsum(members, axis=1)
     produced = cumm[:, -1]
     delivered = jnp.minimum(produced, cap_n)
@@ -386,7 +470,10 @@ def deliver_all(result: ChannelResult, group_sids: jnp.ndarray,
                 caps_pairs: Optional[jnp.ndarray] = None,
                 caps_notify: Optional[jnp.ndarray] = None,
                 target_brokers: Optional[jnp.ndarray] = None,
-                num_brokers: int = 0) -> FusedDelivery:
+                num_brokers: int = 0,
+                counts: Optional[jnp.ndarray] = None,
+                ring: Optional[RetryRing] = None,
+                epochs: Optional[jnp.ndarray] = None) -> FusedDelivery:
     """The whole fused convert+send, plus spill capture: everything that
     missed a delivery buffer lands — with its channel identity — in a flat
     channel-major spill stream holding up to ``spill_cap`` entries PER
@@ -398,9 +485,22 @@ def deliver_all(result: ChannelResult, group_sids: jnp.ndarray,
     per-channel overflow windows — spill work is O(C * spill_cap),
     independent of the pending grid. Pure and jit-compatible — the engine
     runs it inside the same jitted call as candidate discovery and the
-    joins."""
+    joins.
+
+    With ``ring`` (+ ``epochs``, the (C,) current subscription epoch per
+    channel) the call is RING-AWARE: resident ring entries whose epoch still
+    matches are delivered FIRST (stale ones are dropped and counted), fresh
+    result pairs follow, and the live overflow tail re-enters the output
+    ring up to its window — only what overflows PAST the ring reaches the
+    spill streams (the host queue as bounded last resort). ``counts``
+    threads the engine-maintained member counts through both stages."""
+    if ring is not None:
+        return _deliver_with_ring(result, group_sids, payload_words,
+                                  max_pairs, max_notify, spill_cap, ring,
+                                  epochs, caps_pairs, caps_notify,
+                                  target_brokers, num_brokers, counts)
     pack = pack_payloads_all(result, group_sids, payload_words, max_pairs,
-                             caps_pairs, target_brokers, num_brokers)
+                             caps_pairs, target_brokers, num_brokers, counts)
     valid2, rows2, tgt2, cumv, produced, cap_p = _pair_layout(
         result, caps_pairs, max_pairs)
     P = valid2.shape[1]
@@ -416,7 +516,7 @@ def deliver_all(result: ChannelResult, group_sids: jnp.ndarray,
 
     # sids lane: same scheme over the send stage's member prefix sums
     fan, (tgt2, members, cumm, cap_n) = _fanout_parts(
-        result, group_sids, max_notify, caps_notify)
+        result, group_sids, max_notify, caps_notify, counts)
     ov_s = fan.produced - fan.delivered
     ch_s, k_s, valid_s, total_s = _spill_slots(ov_s, cap_n, spill_cap)
     sid_cap = 1 if group_sids.shape[-1] == 0 else group_sids.shape[-1]
@@ -428,6 +528,130 @@ def deliver_all(result: ChannelResult, group_sids: jnp.ndarray,
     sid_spill = plans.ValueStream(vals, jnp.where(valid_s, ch_s, -1),
                                   valid_s, total_s)
     return FusedDelivery(pack, fan, pair_spill, sid_spill)
+
+
+def _deliver_with_ring(result: ChannelResult, group_sids: jnp.ndarray,
+                       payload_words: int, max_pairs: int, max_notify: int,
+                       spill_cap: int, ring: RetryRing, epochs: jnp.ndarray,
+                       caps_pairs, caps_notify, target_brokers,
+                       num_brokers: int, counts) -> FusedDelivery:
+    """Ring-aware fused delivery. Per channel, the delivery order is: live
+    (epoch-matching) ring entries in residence order, then the fresh valid
+    pairs in ravel order. The live overflow tail — ranks past the cap —
+    re-enters the output ring (first W entries), then the spill stream
+    (next spill_cap), then truncates to counted drops. Everything is
+    gather-formulated against the ring's live prefix sums and the fresh
+    prefix sums, so the added work is O(C * (W + max_pairs + spill_cap))."""
+    C = result.pair_valid.shape[0]
+    W = ring.window
+    epochs = jnp.asarray(epochs, jnp.int32)
+    valid2, rows2, tgt2, cumv, nfresh, cap_p = _pair_layout(
+        result, caps_pairs, max_pairs)
+    P = valid2.shape[1]
+    ch = jnp.arange(C, dtype=jnp.int32)[:, None]
+    identity = group_sids.shape[-1] == 0
+
+    # ---- pairs lane -----------------------------------------------------
+    iw = jnp.arange(W, dtype=jnp.int32)[None, :]
+    in_ring = iw < ring.pair_count[:, None]
+    live_r = in_ring & (ring.pair_epochs == epochs[:, None])
+    cumr = jnp.cumsum(live_r.astype(jnp.int32), axis=1)        # (C, W)
+    nring = cumr[:, -1]
+    stale = ring.pair_count - nring
+    produced = ring.pair_count + nfresh
+    delivered = jnp.minimum(nring + nfresh, cap_p)
+
+    def comb_pairs(q, ok):
+        """(rows, tgts) for combined-order ranks ``q`` (C, Q): ring entries
+        first, fresh pairs after."""
+        from_ring = q < nring[:, None]
+        pr = jnp.minimum(_source_pair(cumr, q), W - 1)
+        r_rows = _gather(ring.pair_rows, pr)
+        r_tgts = _gather(ring.pair_targets, pr)
+        qf = jnp.maximum(q - nring[:, None], 0)
+        pf = jnp.minimum(_source_pair(cumv, qf), P - 1)
+        rows = jnp.where(from_ring, r_rows, _gather(rows2, pf))
+        tgts = jnp.where(from_ring, r_tgts, _gather(tgt2, pf))
+        return jnp.where(ok, rows, -1), jnp.where(ok, tgts, -1)
+
+    q = jnp.broadcast_to(jnp.arange(max_pairs, dtype=jnp.int32),
+                         (C, max_pairs))
+    ok = q < delivered[:, None]
+    rows_q, tgts_q = comb_pairs(q, ok)
+    out, per_broker = _pack_lines(
+        jnp.where(ok, rows_q, 0), jnp.where(ok, tgts_q, 0), ok, ch,
+        group_sids, counts, payload_words, target_brokers, num_brokers)
+    pack = PackedDelivery(out, delivered, produced, jnp.zeros_like(valid2),
+                          per_broker)
+
+    # live overflow tail -> output ring window, then spill stream
+    ov_live = nring + nfresh - delivered                       # (C,)
+    i_new = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32), (C, W))
+    ok_new = i_new < jnp.minimum(ov_live, W)[:, None]
+    nrows, ntgts = comb_pairs(delivered[:, None] + i_new, ok_new)
+    ring_p_count = jnp.minimum(ov_live, W)
+    r = jnp.arange(C * spill_cap, dtype=jnp.int32)
+    ch_r, i_r = r // spill_cap, r % spill_cap
+    valid_r = (W + i_r) < ov_live[ch_r]
+    # spill ranks start at delivered + W >= W >= nring, so spill slots are
+    # always FRESH-sourced: ring entries either deliver or re-enter the
+    # ring; they never demote to the host queue
+    k_r = delivered[ch_r] + W + i_r                 # combined-order rank
+    pf_r = _row_search(cumv, P + 1, ch_r, k_r - nring[ch_r])
+    sp_rows = rows2[ch_r, pf_r]
+    sp_tgts = tgt2[ch_r, pf_r]
+    total_p = jnp.sum(jnp.maximum(ov_live - W, 0))
+    pair_spill = plans.PairStream(
+        jnp.where(valid_r, sp_rows, -1), jnp.where(valid_r, ch_r, -1),
+        jnp.where(valid_r, sp_tgts, -1), valid_r, total_p)
+
+    # ---- sids lane ------------------------------------------------------
+    fan0, (tgt2, members, cumm, cap_n) = _fanout_parts(
+        result, group_sids, max_notify, caps_notify, counts)
+    rsc = ring.sid_count
+    produced_s = rsc + fan0.produced
+    delivered_s = jnp.minimum(produced_s, cap_n)
+
+    def comb_sids(k, ok):
+        """sIDs for combined-order ranks ``k`` (C, Q): resident ring sids
+        (a compacted prefix: direct index) first, fresh members after."""
+        from_ring = k < rsc[:, None]
+        r_val = _gather(ring.sid_values, jnp.minimum(k, W - 1))
+        kf = jnp.maximum(k - rsc[:, None], 0)
+        f_val = _member_lookup(group_sids, tgt2, members, cumm, kf, ok)
+        return jnp.where(ok, jnp.where(from_ring, r_val, f_val), -1)
+
+    k = jnp.broadcast_to(jnp.arange(max_notify, dtype=jnp.int32),
+                         (C, max_notify))
+    notify = comb_sids(k, k < delivered_s[:, None])
+    fan = FanoutDelivery(notify, delivered_s, produced_s)
+    ov_s = produced_s - delivered_s
+    ok_snew = i_new < jnp.minimum(ov_s, W)[:, None]
+    nsids = comb_sids(delivered_s[:, None] + i_new, ok_snew)
+    ring_s_count = jnp.minimum(ov_s, W)
+    valid_s = (W + i_r) < ov_s[ch_r]
+    # same invariant as the pairs lane: rsc <= W, so spill slots are always
+    # fresh member lookups
+    k_s = delivered_s[ch_r] + W + i_r
+    sid_cap = 1 if identity else group_sids.shape[-1]
+    kf_s = k_s - rsc[ch_r]
+    p_s = _row_search(cumm, P * sid_cap + 1, ch_r, kf_s)
+    j_s = kf_s - (cumm[ch_r, p_s] - members[ch_r, p_s])
+    tgt_s = jnp.maximum(tgt2[ch_r, p_s], 0)
+    vals = jnp.where(valid_s,
+                     _member_value(group_sids, ch_r, tgt_s, j_s), -1)
+    total_s = jnp.sum(jnp.maximum(ov_s - W, 0))
+    sid_spill = plans.ValueStream(vals, jnp.where(valid_s, ch_r, -1),
+                                  valid_s, total_s)
+
+    new_ring = RetryRing(
+        nrows, ntgts,
+        jnp.broadcast_to(epochs[:, None], (C, W)).astype(jnp.int32),
+        ring_p_count, nsids, ring_s_count)
+    counters = RingCounters(ring.pair_count, stale, ring_p_count,
+                            rsc, ring_s_count)
+    return FusedDelivery(pack, fan, pair_spill, sid_spill, new_ring,
+                         counters)
 
 
 def _row_search(cum2: jnp.ndarray, offset: int, ch: jnp.ndarray,

@@ -9,7 +9,7 @@ UserLocations dataset (TweetsAboutCrime); (iv) a period.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List
 
 from repro.core import records as R
 from repro.core.predicates import Predicate

@@ -46,6 +46,12 @@ class ChurnReport:
     delivered_sids: int
     spilled: int
     dropped: int
+    # host round-trips: ``drain_spilled()`` invocations over the timed
+    # ticks — zero when the device retry ring absorbs sustained overflow —
+    # and what is still ring-resident / host-queued when the run ends
+    drain_calls: int = 0
+    ring_pending: int = 0
+    queue_pending: int = 0
 
     @property
     def subs_per_s(self) -> float:
@@ -147,7 +153,7 @@ def run_ticks(engine: BADEngine,
         live.update({k: _LivePool(np.asarray(v, np.int32))
                      for k, v in live_sids.items()})
     adds = removes = user_adds = user_removes = 0
-    results = dp = ds = sp = dr = 0
+    results = dp = ds = sp = dr = drains = 0
     t0_clock = 0.0
     snap = engine.maintenance.snapshot()
     now = engine.now
@@ -196,6 +202,8 @@ def run_ticks(engine: BADEngine,
                     sp += rep.overflow.spilled_pairs + rep.overflow.spilled_sids
                     dr += rep.overflow.dropped_pairs + rep.overflow.dropped_sids
         while engine.spill.pending_pairs() + engine.spill.pending_sids() > 0:
+            if timed:
+                drains += 1
             for drr in engine.drain_spilled().values():
                 if timed:
                     dp += drr.stats.delivered_pairs
@@ -211,4 +219,8 @@ def run_ticks(engine: BADEngine,
         maintenance=engine.maintenance.since(snap),
         live_subs=sum(pool.n for pool in live.values()),
         results=results, delivered_pairs=dp, delivered_sids=ds,
-        spilled=sp, dropped=dr)
+        spilled=sp, dropped=dr, drain_calls=drains,
+        ring_pending=(engine.ring_pending_pairs()
+                      + engine.ring_pending_sids()),
+        queue_pending=(engine.spill.pending_pairs()
+                       + engine.spill.pending_sids()))

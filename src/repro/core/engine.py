@@ -20,11 +20,17 @@ runs the broker's convert+send stages and surfaces per-stage accounting in
 delivery is FUSED: ``broker.deliver_all`` runs inside the same jitted call as
 candidate discovery and the joins, so a multi-channel tick never leaves the
 device between discovery and subscriber fanout. No notification is silently
-lost: pairs/sIDs that miss a delivery buffer are captured — with their
-channel identity — into the bounded host-side ``SpillQueue`` and re-delivered
-exactly once by ``drain_spilled()`` on subsequent ticks; only spill-buffer
+lost: pairs/sIDs that miss a delivery buffer land first in the
+device-resident ``RetryRing`` (per join group) and are re-packed and
+re-delivered *inside the next fused call* — sustained overflow never
+round-trips through the host; only overflow past the ring window cascades —
+with its channel identity — into the bounded host-side ``SpillQueue`` (the
+ring's last resort) and is re-delivered exactly once by ``drain_spilled()``
+on subsequent ticks. Ring pairs whose channel churned go epoch-stale and
+drop (counted) instead of indexing a moved table; only window/queue
 exhaustion drops, and drops are counted
-(delivered + spilled + dropped == produced, per stage).
+(delivered + spilled + dropped == produced == fresh + retried, per stage —
+an identity that telescopes across ticks).
 """
 from __future__ import annotations
 
@@ -42,7 +48,8 @@ from repro.core import plans
 from repro.core import records as R
 from repro.core import subscriptions as subs
 from repro.core.broker import (BrokerRegistry, DeliveryStats, FusedDelivery,
-                               deliver_all, fanout_sids, pack_payloads)
+                               RetryRing, deliver_all, empty_ring,
+                               fanout_sids, pack_payloads)
 from repro.core.channel import ChannelSpec
 from repro.core.predicates import (CompiledConditions, compile_conditions,
                                    evaluate_conditions)
@@ -386,6 +393,12 @@ class ExecutionReport:
     broker_bytes: np.ndarray
     # broker overflow accounting; None unless executed with ``deliver=True``
     overflow: Optional[DeliveryStats] = None
+    # delivered wire buffers (delivered prefix meaningful); only populated
+    # by ``execute_all(deliver=True)`` on an engine with
+    # ``debug_delivery_buffers`` — the conservation fuzz reads delivered
+    # CONTENT, production ticks skip the device->host transfer
+    payload: Optional[np.ndarray] = None
+    notify: Optional[np.ndarray] = None
 
 
 class BADEngine:
@@ -404,7 +417,8 @@ class BADEngine:
                  deliver_payload_words: int = 8,
                  max_spill: int = 1 << 13,
                  spill_capacity: int = 1 << 16,
-                 incremental: bool = True):
+                 incremental: bool = True,
+                 ring_capacity: int = 1 << 12):
         self.schema = schema
         self.dataset = R.ActiveDataset.create(dataset_capacity, schema)
         self.index_capacity = index_capacity
@@ -422,7 +436,17 @@ class BADEngine:
         # call's channels) and the host-side bounded retry queue
         self.max_spill = max_spill
         self.spill = SpillQueue(spill_capacity)
+        # device-resident retry rings (per fused join group): overflow of a
+        # fused delivery re-enters the NEXT execute_all call on device;
+        # only overflow past the ring window cascades to the host SpillQueue.
+        # 0 disables the ring (every overflow goes straight to the queue —
+        # the pre-ring behavior, kept as the host-drain baseline)
+        self.ring_capacity = ring_capacity
+        self._rings: Dict = {}
+        self.ring_flush_drops = 0
         self._deliver_jit: Optional[Callable] = None
+        # surface delivered wire buffers on ExecutionReport (testing aid)
+        self.debug_delivery_buffers = False
         self.user_locations = jnp.zeros((1, 2), dtype=jnp.float32)
         self.user_brokers = jnp.zeros((1,), dtype=jnp.int32)
         # keys the stacked-user-set cache; bumped by set_user_locations
@@ -444,6 +468,7 @@ class BADEngine:
         self.incremental = incremental
         self.maintenance = MaintenanceStats()
         self._patch_groups_jit: Optional[Callable] = None
+        self._patch_flat_jit: Optional[Callable] = None
         self._patch_spatial_jit: Optional[Callable] = None
 
     # ------------------------------------------------------------------
@@ -616,6 +641,10 @@ class BADEngine:
         # stacked caches track per-channel epochs; a same-named channel
         # re-created at epoch 0 would collide, so drop them here too
         self._stacked_cache.clear()
+        # retry rings are shaped/positioned by the channel set: hand their
+        # resident entries to the host queue (dropped channels drop at
+        # drain time, counted) rather than silently losing them
+        self.flush_rings()
 
     def _build_ingest(self):
         conds = self._conds
@@ -804,10 +833,11 @@ class BADEngine:
             nb = self.brokers.num_brokers
             maint = self.maintenance
 
-            def deliver(res, sids, tb):
+            def deliver(res, sids, tb, counts):
                 maint.traces += 1
                 return deliver_all(res, sids, pw, mp, mn, sc,
-                                   target_brokers=tb, num_brokers=nb)
+                                   target_brokers=tb, num_brokers=nb,
+                                   counts=counts)
 
             self._deliver_jit = jax.jit(deliver)
         return self._deliver_jit
@@ -818,6 +848,7 @@ class BADEngine:
         capture overflow into the spill queue, and account every pair/sID
         (delivered + spilled + dropped == produced, per stage)."""
         res1 = jax.tree.map(lambda a: a[None], result)
+        counts = None
         if st.spec.join == "spatial":
             tbl = self._spatial_sids_table(st)
             if tbl is None:
@@ -834,8 +865,12 @@ class BADEngine:
                 tb = self._channel_users(st)[1][None]
         else:
             sids = self.group_sids_array(st.spec.name, aggregated)[None]
-            tb = self._targets(st, aggregated).brokers[None]
-        d = self._delivery_fn()(res1, sids, tb)
+            targets = self._targets(st, aggregated)
+            tb = targets.brokers[None]
+            # the member-count pass reads the counts the engine maintains
+            # instead of re-deriving them from the sID table
+            counts = targets.counts[None]
+        d = self._delivery_fn()(res1, sids, tb, counts)
         return self._spill_and_stats([st], aggregated, d)[st.spec.name]
 
     def _spill_and_stats(self, chs: List[ChannelState], layout,
@@ -859,6 +894,10 @@ class BADEngine:
         svalid = np.asarray(d.sid_spill.valid)
         svals = np.asarray(d.sid_spill.values)[svalid]
         schan = np.asarray(d.sid_spill.channels)[svalid]
+        cnt = d.counters
+        if cnt is not None:
+            retried_p, stale_p, ring_p, retried_s, ring_s = (
+                np.asarray(x) for x in cnt)
         out: Dict[str, DeliveryStats] = {}
         for i, st in enumerate(chs):
             name = st.spec.name
@@ -869,12 +908,32 @@ class BADEngine:
             spilled_s = self.spill.push_sids(name, svals[sel])
             ov_p = int(pack_p[i] - pack_d[i])
             ov_s = int(fan_p[i] - fan_d[i])
-            out[name] = DeliveryStats(
-                delivered_pairs=int(pack_d[i]), spilled_pairs=spilled_p,
-                dropped_pairs=ov_p - spilled_p,
-                delivered_sids=int(fan_d[i]), spilled_sids=spilled_s,
-                dropped_sids=ov_s - spilled_s,
-                delivered_pairs_broker=tuple(int(x) for x in per_broker[i]))
+            if cnt is None:
+                out[name] = DeliveryStats(
+                    delivered_pairs=int(pack_d[i]), spilled_pairs=spilled_p,
+                    dropped_pairs=ov_p - spilled_p,
+                    delivered_sids=int(fan_d[i]), spilled_sids=spilled_s,
+                    dropped_sids=ov_s - spilled_s,
+                    delivered_pairs_broker=tuple(int(x)
+                                                 for x in per_broker[i]))
+            else:
+                # ring-resident entries count as spilled; overflow past the
+                # ring that also missed the queue (or went epoch-stale in
+                # the ring) counts as dropped — conservation per stage:
+                # delivered + spilled + dropped == produced (fresh + retried)
+                host_want_p = ov_p - int(stale_p[i]) - int(ring_p[i])
+                host_want_s = ov_s - int(ring_s[i])
+                out[name] = DeliveryStats(
+                    delivered_pairs=int(pack_d[i]),
+                    spilled_pairs=int(ring_p[i]) + spilled_p,
+                    dropped_pairs=int(stale_p[i]) + host_want_p - spilled_p,
+                    delivered_sids=int(fan_d[i]),
+                    spilled_sids=int(ring_s[i]) + spilled_s,
+                    dropped_sids=host_want_s - spilled_s,
+                    delivered_pairs_broker=tuple(int(x)
+                                                 for x in per_broker[i]),
+                    retried_pairs=int(retried_p[i]),
+                    retried_sids=int(retried_s[i]))
         return out
 
     def execute_channel(self, channel: str,
@@ -959,11 +1018,17 @@ class BADEngine:
         if cache is not None and cache.names == names:
             if cache.epochs == epochs:
                 return cache
-            if self.incremental and aggregated:
-                patches = self._group_patches(cache, chs)
-                if patches is not None:
-                    self._apply_group_patches(cache, chs, patches)
-                    return cache
+            if self.incremental:
+                if aggregated:
+                    patches = self._group_patches(cache, chs)
+                    if patches is not None:
+                        self._apply_group_patches(cache, chs, patches)
+                        return cache
+                else:
+                    patches = self._flat_patches(cache, chs)
+                    if patches is not None:
+                        self._apply_flat_patches(cache, chs, patches)
+                        return cache
         cache = self._build_group_state(chs, aggregated)
         self._stacked_cache[("groups", aggregated)] = cache
         return cache
@@ -990,6 +1055,25 @@ class BADEngine:
                     by_param[i, p, :len(row)] = row
                     by_count[i, p] = len(row)
                 sids[i, :h[3].shape[0], :h[3].shape[1]] = h[3]
+        elif self.incremental:
+            # FLAT stable slots: row == per-subscription flat slot, free
+            # slots zero-count; join-map rows are positional ((param, pos)
+            # cells stable under churn, -1 holes masked by the join) so the
+            # churn engine patches this cache cell-wise instead of
+            # rebuilding it per epoch
+            hosts = [st.aggregator.flat_slot_arrays() for st in chs]
+            tmax = _pow2_bucket(max(h[0].shape[0] for h in hosts), 3)
+            mmax = _pow2_bucket(
+                max(st.aggregator.max_flat_extent() for st in chs), 3)
+            cap = 1
+            by_param = np.full((n, dmax, mmax), -1, np.int32)
+            by_count = np.zeros((n, dmax), np.int32)
+            sids = np.full((n, tmax, cap), -1, np.int32)
+            for i, (st, h) in enumerate(zip(chs, hosts)):
+                for p, row in st.aggregator.flat_param_rows():
+                    by_param[i, p, :len(row)] = row
+                    by_count[i, p] = len(row)       # extent, holes masked
+                sids[i, :h[3].shape[0], 0] = h[3]
         else:
             # compacted build() rows (the pre-churn-engine layout); the flat
             # table IS this with one row per subscription
@@ -1051,6 +1135,8 @@ class BADEngine:
             for e, d in st.delta_log:
                 if e in need:
                     need.discard(e)
+                    if d.full:
+                        return None      # whole-table adopt: rebuild
                     slots |= d.slots
                     params_t |= d.params
             agg = st.aggregator
@@ -1126,6 +1212,110 @@ class BADEngine:
 
             self._patch_groups_jit = jax.jit(patch)
         return self._patch_groups_jit
+
+    # -- flat-layout stable slots (per-subscription rows) ----------------
+
+    def _flat_patches(self, cache: _GroupCache, chs: List[ChannelState]):
+        """Per-channel (flat slots, join-map cells, params) patch sets
+        covering every epoch since the cache's snapshot, or None if any
+        channel must rebuild (delta gap, whole-table adopt, or padded
+        capacity exceeded)."""
+        out = []
+        for st, cached_e in zip(chs, cache.epochs):
+            if st.epoch == cached_e:
+                out.append(None)
+                continue
+            if st.epoch - cached_e > len(st.delta_log):
+                return None          # gap certain: don't materialize it
+            need = set(range(cached_e + 1, st.epoch + 1))
+            slots, cells, params_t = set(), set(), set()
+            for e, d in st.delta_log:
+                if e in need:
+                    need.discard(e)
+                    if d.full:
+                        return None  # whole-table adopt: rebuild
+                    slots |= d.flat_slots
+                    cells |= d.flat_cells
+                    params_t |= d.params
+            agg = st.aggregator
+            if need or agg.num_flat_slots > cache.tmax:
+                return None
+            if any(agg.flat_row_extent(p) > cache.mmax for p in params_t):
+                return None
+            out.append((slots, cells, params_t))
+        return out
+
+    def _apply_flat_patches(self, cache: _GroupCache,
+                            chs: List[ChannelState], patches) -> None:
+        """One jitted scatter per changed channel: touched flat-slot rows
+        are re-read from the aggregator's flat table and touched join-map
+        CELLS ((param, position) — stable under churn) are written in
+        place, so the patch cost is O(Δ) cells, never O(subs-per-param) row
+        rewrites. Batches are padded to power-of-two buckets with
+        out-of-bounds indices (dropped by the scatter)."""
+        fn = self._flat_patch_fn()
+        t = cache.targets
+        arrays = (t.params, t.brokers, t.counts, t.by_param,
+                  t.by_param_count, cache.up_masks, cache.sids)
+        for ci, (st, patch) in enumerate(zip(chs, patches)):
+            if patch is None:
+                continue
+            slots, cells, params_t = patch
+            # generous bucket floors (cells run ~2x the slot count: every
+            # add/remove touches one slot AND one join-map cell): small
+            # tick-to-tick delta-size jitter stays inside one bucket
+            kb = _pow2_bucket(len(slots), 7)
+            cb = _pow2_bucket(len(cells), 8)
+            mb = _pow2_bucket(len(params_t), 5)
+            sl = np.sort(np.fromiter(slots, np.int64, len(slots)))
+            sl_idx = np.full((kb,), cache.tmax, np.int32)   # OOB pad: dropped
+            sl_p = np.zeros((kb,), np.int32)
+            sl_b = np.zeros((kb,), np.int32)
+            sl_c = np.zeros((kb,), np.int32)
+            sl_s = np.full((kb, 1), -1, np.int32)
+            sl_idx[:len(sl)] = sl
+            p_, b_, c_, s_ = st.aggregator.flat_slot_rows(sl)
+            sl_p[:len(sl)], sl_b[:len(sl)], sl_c[:len(sl)] = p_, b_, c_
+            sl_s[:len(sl), 0] = s_
+            c_p = np.full((cb,), cache.dmax, np.int32)      # OOB pad: dropped
+            c_pos = np.zeros((cb,), np.int32)
+            c_val = np.full((cb,), -1, np.int32)
+            cp, cpos, cval = st.aggregator.flat_cell_rows(sorted(cells))
+            c_p[:len(cp)], c_pos[:len(cp)], c_val[:len(cp)] = cp, cpos, cval
+            e_idx = np.full((mb,), cache.dmax, np.int32)
+            e_cnt = np.zeros((mb,), np.int32)
+            e_mask = np.zeros((mb,), bool)
+            for j, p in enumerate(sorted(params_t)):
+                e_idx[j] = p
+                e_cnt[j] = st.aggregator.flat_row_extent(p)
+                e_mask[j] = st.user_params.refcount[p] > 0
+            arrays = fn(arrays, jnp.asarray(ci, jnp.int32), sl_idx, sl_p,
+                        sl_b, sl_c, sl_s, c_p, c_pos, c_val, e_idx, e_cnt,
+                        e_mask)
+            self.maintenance.patches += 1
+        cache.targets = plans.TargetArrays(*arrays[:5])
+        cache.up_masks = arrays[5]
+        cache.sids = arrays[6]
+        cache.epochs = [st.epoch for st in chs]
+
+    def _flat_patch_fn(self) -> Callable:
+        if self._patch_flat_jit is None:
+            maint = self.maintenance
+
+            def patch(arrays, ci, sl_idx, sl_p, sl_b, sl_c, sl_s,
+                      c_p, c_pos, c_val, e_idx, e_cnt, e_mask):
+                maint.traces += 1
+                params, brokers, counts, by_param, by_count, up, sids = arrays
+                return (params.at[ci, sl_idx].set(sl_p, mode="drop"),
+                        brokers.at[ci, sl_idx].set(sl_b, mode="drop"),
+                        counts.at[ci, sl_idx].set(sl_c, mode="drop"),
+                        by_param.at[ci, c_p, c_pos].set(c_val, mode="drop"),
+                        by_count.at[ci, e_idx].set(e_cnt, mode="drop"),
+                        up.at[ci, e_idx].set(e_mask, mode="drop"),
+                        sids.at[ci, sl_idx].set(sl_s, mode="drop"))
+
+            self._patch_flat_jit = jax.jit(patch)
+        return self._patch_flat_jit
 
     # -- stacked spatial user sets (per-channel cohorts) -----------------
 
@@ -1354,7 +1544,9 @@ class BADEngine:
                     del_p = deliver_all(
                         res_p, p_in["sids"], pw, mp, mn, sc,
                         target_brokers=p_in["targets"].brokers,
-                        num_brokers=num_brokers)
+                        num_brokers=num_brokers,
+                        counts=p_in["targets"].counts,
+                        ring=p_in.get("ring"), epochs=p_in.get("epochs"))
             if s_static is not None:
                 cand = discover(ds, index_state, s_static,
                                 s_in["last_ts"], s_in["last_size"])
@@ -1365,7 +1557,8 @@ class BADEngine:
                     del_s = deliver_all(
                         res_s, s_in["sids"], pw, mp, mn, sc,
                         target_brokers=s_in["brokers"],
-                        num_brokers=num_brokers)
+                        num_brokers=num_brokers,
+                        ring=s_in.get("ring"), epochs=s_in.get("epochs"))
             return res_p, res_s, del_p, del_s
 
         fn = jax.jit(run)
@@ -1408,6 +1601,16 @@ class BADEngine:
             max_cand = min(bucket, self.max_candidates)
         fn = self._exec_all_fn(param_chs, spatial_chs, flags, max_cand,
                                deliver)
+        # The fused aggregated targets of an incremental engine are SLOT
+        # indices (free slots padded) and its flat targets are FLAT-slot
+        # indices — not build()'s compacted rows — tag their spills with the
+        # matching layout so a drain re-packs against the right table.
+        # Non-incremental / spatial spills keep the per-channel layouts.
+        if self.incremental:
+            p_layout = "slot" if flags.aggregation else "flat_slot"
+        else:
+            p_layout = flags.aggregation
+        use_ring = deliver and self.ring_capacity > 0
         p_in = s_in = None
         if param_chs:
             targets, up_masks, domains = self._stacked_inputs(
@@ -1424,6 +1627,13 @@ class BADEngine:
                     [st.last_exec_size for st in param_chs], jnp.int32))
             if deliver:
                 p_in["sids"] = self._stacked_sids(param_chs, flags.aggregation)
+                if use_ring:
+                    p_in["ring"] = self._ring_in(
+                        ("param", p_layout),
+                        tuple(st.spec.name for st in param_chs),
+                        len(param_chs))
+                    p_in["epochs"] = jnp.asarray(
+                        [st.epoch for st in param_chs], jnp.int32)
         if spatial_chs:
             locs, ubrokers = self._stacked_spatial_inputs(spatial_chs)
             s_in = dict(
@@ -1436,6 +1646,13 @@ class BADEngine:
                     [st.last_exec_size for st in spatial_chs], jnp.int32))
             if deliver:
                 s_in["sids"] = self._stacked_spatial_sids(spatial_chs)
+                if use_ring:
+                    s_in["ring"] = self._ring_in(
+                        ("spatial",),
+                        tuple(st.spec.name for st in spatial_chs),
+                        len(spatial_chs))
+                    s_in["epochs"] = jnp.asarray(
+                        [st.epoch for st in spatial_chs], jnp.int32)
         args = (self.dataset, self.index_state, p_in, s_in)
         if timed:  # warm the trace so wall time measures execution
             jax.block_until_ready(fn(*args))
@@ -1457,13 +1674,17 @@ class BADEngine:
         # way: the fused call already packed/fanned out every channel, so the
         # host only pushes spills and reads (C,)-shaped counters.
         share = wall / len(ordered)
-        # The fused aggregated targets of an incremental engine are SLOT
-        # indices (free slots padded), not build()'s compacted rows — tag
-        # their spills with the "slot" layout so a drain re-packs against
-        # the matching table. Flat / non-incremental / spatial spills keep
-        # the per-channel path's layouts.
-        p_layout = "slot" if (self.incremental and flags.aggregation) \
-            else flags.aggregation
+        if use_ring:
+            # persist the successor rings (device-resident: no host
+            # round-trip) so the next fused call re-delivers their content
+            if param_chs:
+                self._rings[("param", p_layout)] = (
+                    tuple(st.spec.name for st in param_chs), p_layout,
+                    del_p.ring)
+            if spatial_chs:
+                self._rings[("spatial",)] = (
+                    tuple(st.spec.name for st in spatial_chs),
+                    flags.aggregation, del_s.ring)
         for chs, res, dlv, layout in (
                 (param_chs, res_p, del_p, p_layout),
                 (spatial_chs, res_s, del_s, flags.aggregation)):
@@ -1472,6 +1693,10 @@ class BADEngine:
             host = jax.tree.map(np.asarray, res)
             stats = (self._spill_and_stats(chs, layout, dlv)
                      if deliver else {})
+            pay = noti = None
+            if deliver and self.debug_delivery_buffers:
+                pay = np.asarray(dlv.pack.payload)
+                noti = np.asarray(dlv.fan.notify)
             for i, st in enumerate(chs):
                 reports[st.spec.name] = ExecutionReport(
                     channel=st.spec.name, flags=flags,
@@ -1481,8 +1706,91 @@ class BADEngine:
                     num_notified=int(host.num_notified[i]),
                     scanned=int(host.scanned[i]),
                     broker_bytes=host.broker_bytes[i],
-                    overflow=stats.get(st.spec.name))
+                    overflow=stats.get(st.spec.name),
+                    payload=None if pay is None else pay[i],
+                    notify=None if noti is None else noti[i])
         return reports
+
+    # ------------------------------------------------------------------
+    # device-resident retry rings
+    # ------------------------------------------------------------------
+
+    def _ring_in(self, key, names: Tuple[str, ...],
+                 num_channels: int) -> RetryRing:
+        """The resident ring for one fused join group, or a fresh empty one
+        when the group's channel set changed (the old ring's entries are
+        handed to the host queue — dropped channels drop at drain time,
+        counted — never silently lost). Rings of the SAME kind under a
+        different target layout are flushed too: a caller that switches
+        layouts must find the inactive ring's entries in the host queue
+        (drainable), not stranded on device."""
+        for other_key in [k for k in self._rings if k[0] == key[0]
+                          and k != key]:
+            self._flush_ring(*self._rings.pop(other_key))
+        cur = self._rings.get(key)
+        if cur is not None:
+            if cur[0] == names:
+                return cur[2]
+            del self._rings[key]
+            self._flush_ring(*cur)
+        return empty_ring(num_channels, self.ring_capacity)
+
+    def _flush_ring(self, names: Tuple[str, ...], layout,
+                    ring: RetryRing) -> None:
+        """Push a ring's resident entries into the host SpillQueue (pairs
+        keep their recorded epoch as the staleness version). Entries past
+        the queue's capacity are lost — counted in ``ring_flush_drops``."""
+        pc = np.asarray(ring.pair_count)
+        sc = np.asarray(ring.sid_count)
+        rows = np.asarray(ring.pair_rows)
+        tgts = np.asarray(ring.pair_targets)
+        eps = np.asarray(ring.pair_epochs)
+        vals = np.asarray(ring.sid_values)
+        for i, name in enumerate(names):
+            n = int(pc[i])
+            if n:
+                for e in np.unique(eps[i, :n]).tolist():
+                    sel = eps[i, :n] == e
+                    acc = self.spill.push_pairs(name, layout,
+                                                rows[i, :n][sel],
+                                                tgts[i, :n][sel], int(e))
+                    self.ring_flush_drops += int(sel.sum()) - acc
+            m = int(sc[i])
+            if m:
+                acc = self.spill.push_sids(name, vals[i, :m])
+                self.ring_flush_drops += m - acc
+
+    def flush_rings(self) -> None:
+        """Hand every ring's resident entries to the host SpillQueue (for
+        drain via ``drain_spilled``) and drop the rings — used on channel-set
+        changes and by callers that want a host-visible queue state."""
+        rings, self._rings = self._rings, {}
+        for names, layout, ring in rings.values():
+            self._flush_ring(names, layout, ring)
+
+    def ring_pending_pairs(self) -> int:
+        return sum(int(np.asarray(r.pair_count).sum())
+                   for _, _, r in self._rings.values())
+
+    def ring_pending_sids(self) -> int:
+        return sum(int(np.asarray(r.sid_count).sum())
+                   for _, _, r in self._rings.values())
+
+    def fused_sids_table(self, name: str, aggregated: bool) -> jnp.ndarray:
+        """The sID table matching the FUSED path's pair-target space for one
+        channel: slot tables on an incremental engine (group slots when
+        aggregated, flat per-subscription slots otherwise), the compacted
+        build tables on a rebuild engine, and the cohort slot->uid table (or
+        the 0-width identity fanout) for spatial channels."""
+        st = self.channels[name]
+        if st.spec.join == "spatial":
+            tbl = self._spatial_sids_table(st)
+            return jnp.zeros((0,), jnp.int32) if tbl is None else tbl
+        if self.incremental and aggregated:
+            return jnp.asarray(st.aggregator.slot_arrays()[3])
+        if self.incremental:
+            return jnp.asarray(st.aggregator.flat_slot_arrays()[3])[:, None]
+        return self.group_sids_array(name, aggregated)
 
     # ------------------------------------------------------------------
     # spill retry
@@ -1560,6 +1868,10 @@ class BADEngine:
                 elif layout == "slot":
                     # fused incremental-aggregated spills target SLOT rows
                     sids = jnp.asarray(st.aggregator.slot_arrays()[3])
+                elif layout == "flat_slot":
+                    # fused incremental-flat spills target FLAT slot rows
+                    sids = jnp.asarray(
+                        st.aggregator.flat_slot_arrays()[3])[:, None]
                 else:
                     sids = self.group_sids_array(name, layout)
                 buf, dlv, _ = pack_payloads(res, sids,

@@ -11,7 +11,7 @@ Padding uses an always-true predicate (op=GE, value=INT32_MIN on field 0).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -91,20 +91,33 @@ class GroupDelta:
 
     ``slots`` are group SLOT indices (stable row ids in the aggregator's
     slot space) whose content changed — opened, mutated, or freed; ``params``
-    are the parameter values whose live-slot membership changed. Consumers
-    re-read the aggregator's CURRENT content for every touched slot/param,
-    so consecutive deltas compose by set union (``merge``)."""
+    are the parameter values whose live-slot membership changed. The FLAT
+    layout has its own slot space (one stable row per subscription):
+    ``flat_slots`` are its touched rows and ``flat_cells`` the touched
+    (param, position) cells of its per-param join-map rows. Consumers
+    re-read the aggregator's CURRENT content for every touched
+    slot/param/cell, so consecutive deltas compose by set union
+    (``merge``)."""
 
     slots: Set[int] = dataclasses.field(default_factory=set)
     params: Set[int] = dataclasses.field(default_factory=set)
+    flat_slots: Set[int] = dataclasses.field(default_factory=set)
+    flat_cells: Set[Tuple[int, int]] = dataclasses.field(default_factory=set)
+    # "everything moved" (a whole-table adopt): consumers must rebuild —
+    # recorded as a flag instead of enumerating O(S) slots/cells
+    full: bool = False
 
     def merge(self, other: "GroupDelta") -> None:
         self.slots |= other.slots
         self.params |= other.params
+        self.flat_slots |= other.flat_slots
+        self.flat_cells |= other.flat_cells
+        self.full = self.full or other.full
 
     @property
     def empty(self) -> bool:
-        return not self.slots and not self.params
+        return not (self.slots or self.params or self.flat_slots
+                    or self.flat_cells or self.full)
 
 
 class Aggregator:
@@ -152,6 +165,20 @@ class Aggregator:
         self._n_subs = 0
         self._next_sid = 0
         self._delta = GroupDelta()
+        # FLAT layout: one stable slot per SUBSCRIPTION (the original
+        # non-aggregated device rows), with its own free list, and per-param
+        # positional join rows (stable (param, position) cells, -1 holes) so
+        # flat device caches are patched cell-wise instead of rebuilt
+        self._flat_params = np.zeros((8,), np.int32)
+        self._flat_brokers = np.zeros((8,), np.int32)
+        self._flat_sids = np.full((8,), -1, np.int32)   # -1 == free slot
+        self._fpos = np.full((8,), -1, np.int32)        # slot -> row position
+        self._flat_n = 0
+        self._flat_free: List[int] = []
+        self._sid_flat = np.full((1024,), -1, np.int32)  # sid -> flat slot
+        self._frow: Dict[int, np.ndarray] = {}   # param -> flat slots, -1 holes
+        self._frow_len: Dict[int, int] = {}      # param -> extent (high-water)
+        self._frow_free: Dict[int, List[int]] = {}
 
     # -- slot bookkeeping ------------------------------------------------
 
@@ -225,11 +252,147 @@ class Aggregator:
         return np.where(ok, self._sid_map[np.where(ok, sids, 0)], -1)
 
     def _ensure_sid_map(self, max_sid: int) -> None:
-        if max_sid >= self._sid_map.shape[0]:
-            grow = max(self._sid_map.shape[0] * 2, max_sid + 1)
-            new = np.full((grow,), -1, np.int32)
-            new[:self._sid_map.shape[0]] = self._sid_map
-            self._sid_map = new
+        # _grow_to doubles (at least) and no-ops when already large enough
+        self._sid_map = self._grow_to(self._sid_map, max_sid + 1, -1)
+        self._sid_flat = self._grow_to(self._sid_flat, max_sid + 1, -1)
+
+    # -- flat stable slots ------------------------------------------------
+
+    @property
+    def num_flat_slots(self) -> int:
+        """Flat slot-table height (live + free) — the capacity flat device
+        caches must be padded to."""
+        return self._flat_n
+
+    def flat_slot_rows(self, slots) -> Tuple[np.ndarray, np.ndarray,
+                                             np.ndarray, np.ndarray]:
+        """(params, brokers, live-counts, sids) rows for the given FLAT
+        slots — free slots read zero-count / -1 sid; the flat delta-patch
+        fill path."""
+        sl = np.asarray(slots, dtype=np.int64)
+        sids = self._flat_sids[sl]
+        live = sids >= 0
+        return (np.where(live, self._flat_params[sl], 0).astype(np.int32),
+                np.where(live, self._flat_brokers[sl], 0).astype(np.int32),
+                live.astype(np.int32), sids.copy())
+
+    def flat_slot_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                        np.ndarray]:
+        """The whole flat slot table as dense arrays — row index == flat
+        slot, free slots zero-count. The flat analogue of
+        ``slot_arrays``."""
+        return self.flat_slot_rows(np.arange(self._flat_n, dtype=np.int64))
+
+    def flat_param_rows(self):
+        """(param, positional row of flat slots up to its extent) for every
+        param that ever held flat positions — -1 holes stay in place so
+        (param, position) cells are stable under churn."""
+        for p, row in self._frow.items():
+            yield p, row[:self._frow_len[p]]
+
+    def flat_row_extent(self, param: int) -> int:
+        return self._frow_len.get(int(param), 0)
+
+    def max_flat_extent(self) -> int:
+        """Largest positional-row extent any param ever reached."""
+        return max(self._frow_len.values(), default=1)
+
+    def flat_cell_rows(self, cells) -> Tuple[np.ndarray, np.ndarray,
+                                             np.ndarray]:
+        """(params, positions, current flat-slot values) for the given
+        (param, position) cells — the cell-wise flat join-map patch read
+        (-1 where the cell is a hole)."""
+        n = len(cells)
+        ps = np.empty((n,), np.int32)
+        pos = np.empty((n,), np.int32)
+        vals = np.full((n,), -1, np.int32)
+        for i, (p, j) in enumerate(cells):
+            ps[i], pos[i] = p, j
+            row = self._frow.get(p)
+            if row is not None and j < self._frow_len.get(p, 0):
+                vals[i] = row[j]
+        return ps, pos, vals
+
+    @staticmethod
+    def _grow_to(arr: np.ndarray, need: int, fill) -> np.ndarray:
+        if need <= arr.shape[0]:
+            return arr
+        new = np.full((max(need, 2 * arr.shape[0]),) + arr.shape[1:], fill,
+                      arr.dtype)
+        new[:arr.shape[0]] = arr
+        return new
+
+    def _flat_add_key(self, param: int, broker: int,
+                      sids: np.ndarray) -> None:
+        """Assign stable flat slots + positional cells to one key's new
+        members — free-list reuse first, then append; O(Δ) numpy."""
+        k = len(sids)
+        free = self._flat_free
+        r = min(k, len(free))
+        slots = np.empty((k,), np.int64)
+        if r:
+            slots[:r] = free[len(free) - r:]
+            del free[len(free) - r:]
+        if k > r:
+            slots[r:] = np.arange(self._flat_n, self._flat_n + k - r)
+            self._flat_n += k - r
+            self._flat_params = self._grow_to(self._flat_params,
+                                              self._flat_n, 0)
+            self._flat_brokers = self._grow_to(self._flat_brokers,
+                                               self._flat_n, 0)
+            self._flat_sids = self._grow_to(self._flat_sids, self._flat_n, -1)
+            self._fpos = self._grow_to(self._fpos, self._flat_n, -1)
+        self._flat_params[slots] = param
+        self._flat_brokers[slots] = broker
+        self._flat_sids[slots] = sids
+        self._sid_flat[sids] = slots
+        row = self._frow.get(param)
+        if row is None:
+            row = np.full((8,), -1, np.int32)
+            self._frow[param] = row
+            self._frow_len[param] = 0
+            self._frow_free[param] = []
+        pf = self._frow_free[param]
+        r2 = min(k, len(pf))
+        pos = np.empty((k,), np.int64)
+        if r2:
+            pos[:r2] = pf[len(pf) - r2:]
+            del pf[len(pf) - r2:]
+        if k > r2:
+            ln = self._frow_len[param]
+            pos[r2:] = np.arange(ln, ln + k - r2)
+            self._frow_len[param] = ln + k - r2
+            if self._frow_len[param] > row.shape[0]:
+                self._frow[param] = row = self._grow_to(
+                    row, self._frow_len[param], -1)
+        row[pos] = slots
+        self._fpos[slots] = pos
+        self._delta.flat_slots.update(slots.tolist())
+        self._delta.flat_cells.update(
+            (param, int(j)) for j in pos.tolist())
+
+    def _flat_remove_sids(self, sids: np.ndarray) -> None:
+        """Free the flat slots + positional cells of removed sIDs (callers
+        pass unique, known-live sIDs)."""
+        slots = self._sid_flat[np.asarray(sids, np.int64)].astype(np.int64)
+        params = self._flat_params[slots]
+        pos = self._fpos[slots]
+        self._sid_flat[sids] = -1
+        self._flat_sids[slots] = -1
+        self._fpos[slots] = -1
+        self._flat_free.extend(slots.tolist())
+        self._delta.flat_slots.update(slots.tolist())
+        order = np.argsort(params, kind="stable")
+        ps, po = params[order], pos[order]
+        starts = np.flatnonzero(np.r_[True, ps[1:] != ps[:-1]])
+        for s, e in zip(starts.tolist(),
+                        np.append(starts[1:], len(ps)).tolist()):
+            p = int(ps[s])
+            prun = po[s:e]
+            self._frow[p][prun] = -1
+            self._frow_free[p].extend(prun.tolist())
+            self._delta.flat_cells.update(
+                (p, int(j)) for j in prun.tolist())
 
     def take_delta(self) -> GroupDelta:
         """Pop the accumulated churn record (and reset it)."""
@@ -311,11 +474,13 @@ class Aggregator:
                 self._sid_map[sid] = gi
                 self._n_subs += 1
                 self._touch(gi, param)
+                self._flat_add_key(param, broker, np.asarray([sid], np.int32))
                 return sid
         gi = self._alloc_slot(param, broker,            # open a new group
                               np.asarray([sid], np.int32))
         self._sid_map[sid] = gi
         self._n_subs += 1
+        self._flat_add_key(param, broker, np.asarray([sid], np.int32))
         return sid
 
     def _place_key(self, param: int, broker: int, sids: np.ndarray) -> None:
@@ -326,6 +491,7 @@ class Aggregator:
         self._n_subs += n
         key = (param, broker)
         self._key_subs[key] = self._key_subs.get(key, 0) + n
+        self._flat_add_key(param, broker, sids)
         lst = self._by_key.get(key)
         if lst:
             # ONE vectorized fill across every open group of the key:
@@ -425,14 +591,47 @@ class Aggregator:
         self._sid_map[members] = np.repeat(
             np.arange(self._n, dtype=np.int32), self._counts)
         self._n_subs = int(self._counts.sum())
-        self._delta.slots.update(range(self._n))
-        self._delta.params.update(np.unique(g.group_params).tolist())
+        # flat slot table: slot i == i-th member in group-major order;
+        # positional rows assigned per param in slot order — all vectorized
+        n = self._n_subs
+        self._flat_n = n
+        size = max(8, n)
+        self._flat_params = np.zeros((size,), np.int32)
+        self._flat_brokers = np.zeros((size,), np.int32)
+        self._flat_sids = np.full((size,), -1, np.int32)
+        self._fpos = np.full((size,), -1, np.int32)
+        self._flat_free = []
+        self._sid_flat.fill(-1)
+        self._frow, self._frow_len, self._frow_free = {}, {}, {}
+        if n:
+            self._flat_params[:n] = np.repeat(g.group_params, g.group_counts)
+            self._flat_brokers[:n] = np.repeat(g.group_brokers,
+                                               g.group_counts)
+            self._flat_sids[:n] = members
+            self._sid_flat[members] = np.arange(n, dtype=np.int32)
+            order = np.argsort(self._flat_params[:n],
+                               kind="stable").astype(np.int64)
+            sp = self._flat_params[order]
+            starts = np.flatnonzero(np.r_[True, sp[1:] != sp[:-1]])
+            ends = np.append(starts[1:], n)
+            run_id = np.cumsum(np.r_[True, sp[1:] != sp[:-1]]) - 1
+            self._fpos[order] = (np.arange(n, dtype=np.int64)
+                                 - starts[run_id]).astype(np.int32)
+            for s, e in zip(starts.tolist(), ends.tolist()):
+                p = int(sp[s])
+                self._frow[p] = order[s:e].astype(np.int32)
+                self._frow_len[p] = e - s
+                self._frow_free[p] = []
+        # everything moved: record a FULL delta instead of enumerating O(S)
+        # touched slots/cells — consumers rebuild
+        self._delta = GroupDelta(full=True)
 
     def remove_subscription(self, param: int, broker: int, sid: int) -> bool:
         gi = int(self.sid_slots([sid])[0])
         if gi < 0 or self._params[gi] != int(param) \
                 or self._brokers[gi] != int(broker):
             return False
+        self._flat_remove_sids(np.asarray([sid], np.int64))
         self._sid_map[sid] = -1
         self._n_subs -= 1
         key = (int(param), int(broker))
@@ -465,6 +664,7 @@ class Aggregator:
         if not found.any():
             return np.zeros((0,), np.int32)
         rm_sids = sids_arr[found]
+        self._flat_remove_sids(np.unique(rm_sids))
         self._sid_map[rm_sids] = -1          # idempotent for batch dupes
         uniq = np.unique(slots[found])
         # one batched row rewrite: mark removed members, stable-compact the

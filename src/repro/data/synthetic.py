@@ -8,7 +8,7 @@ the real-world stream (§5.7) is language-skewed (en > pt > rest).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

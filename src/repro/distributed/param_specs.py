@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Any, Dict
 
 import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig

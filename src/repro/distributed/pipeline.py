@@ -12,8 +12,7 @@ loss pipeline whose backward is derived by jax.grad through the ppermute
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

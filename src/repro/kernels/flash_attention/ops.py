@@ -1,7 +1,6 @@
 """Jit'd public wrapper for flash_attention: padding, scale, dispatch."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

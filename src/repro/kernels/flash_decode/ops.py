@@ -1,7 +1,6 @@
 """Jit'd public wrappers for flash_decode: padding, normalization, dispatch."""
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

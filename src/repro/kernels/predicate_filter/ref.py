@@ -9,7 +9,6 @@ field selection becomes a dense (C, F) broadcast instead of an index gather.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np

@@ -21,7 +21,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -33,7 +32,6 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (build_decode_step, build_prefill_step,
                                 build_train_step, default_optimizer)
 from repro.models.model import SHAPES, ModelApi
-from repro.optim import make_optimizer
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,

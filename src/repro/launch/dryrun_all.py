@@ -9,7 +9,6 @@ JSON results are skipped unless --force.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import subprocess
 import sys

@@ -11,7 +11,6 @@ the variant next to its baseline.
 import argparse
 import json
 
-import jax.numpy as jnp
 
 from repro.launch.dryrun import run_cell
 

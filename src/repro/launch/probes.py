@@ -8,15 +8,13 @@ with identical shardings; per-step totals are  full + (repeats-1) x probe
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import blocks, encdec, lm
-from repro.models.config import ModelConfig
-from repro.models.model import ModelApi, SHAPES
+from repro.models import blocks, encdec
+from repro.models.model import ModelApi
 
 
 def _first_layer(tree):

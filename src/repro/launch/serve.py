@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.launch.steps import build_decode_step, build_prefill_step
+from repro.launch.steps import build_decode_step
 from repro.models.model import ModelApi
 
 

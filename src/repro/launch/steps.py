@@ -1,8 +1,7 @@
 """Step builders: train (with gradient-accumulation scan), prefill, decode."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

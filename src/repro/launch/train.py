@@ -10,19 +10,14 @@ enabled via the latency-hiding scheduler flags below when devices > 1.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.ckpt.manager import CheckpointManager
 from repro.data.synthetic import TokenStream
-from repro.distributed.partition import make_rules, use_rules
-from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import build_train_step, default_optimizer
 from repro.models.model import ModelApi
 from repro.runtime.failure import FailureInjector, StepTimer

@@ -8,8 +8,7 @@ caches, as in the paper.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,7 @@ import jax.numpy as jnp
 from repro.distributed.partition import shard
 from repro.models import attention, moe, ssm
 from repro.models.config import ModelConfig
-from repro.models.kvcache import create_kv_cache, kv_cache_shapes
+from repro.models.kvcache import kv_cache_shapes
 from repro.models.layers import mlp_apply, mlp_init, rms_norm
 
 

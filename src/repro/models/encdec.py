@@ -7,7 +7,7 @@ per-layer cross K/V for serving.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,6 @@ from repro.models import attention
 from repro.models.config import ModelConfig
 from repro.models.kvcache import kv_cache_shapes
 from repro.models.layers import init_dense, mlp_apply, mlp_init, rms_norm, rope_frequencies
-from repro.models.lm import AUX_WEIGHT
 
 
 def _enc_layer_init(key, cfg: ModelConfig):

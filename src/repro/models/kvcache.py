@@ -1,7 +1,7 @@
 """KV cache + recurrent-state containers for serving."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ production-mesh dry-run.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

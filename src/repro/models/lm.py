@@ -1,7 +1,6 @@
 """Decoder-only causal LM over scanned superlayers: train / prefill / decode."""
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -9,8 +9,7 @@ plus abstract parameter/cache trees and their PartitionSpecs.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

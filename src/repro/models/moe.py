@@ -13,7 +13,6 @@ convention).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Tuple
 
 import jax

@@ -10,8 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Tuple
 
 
 @dataclasses.dataclass

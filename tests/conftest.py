@@ -138,13 +138,17 @@ def check_deliver_all_invariants(stacked, group_sids, exp_rows, exp_tgts,
 
 
 def check_delivery_conservation(stats, num_results, num_notified):
-    """delivered + spilled + dropped == produced, per stage."""
+    """delivered + spilled + dropped == produced, per stage. Ring-aware
+    deliveries additionally count re-presented ring entries (``retried_*``)
+    in produced: fresh == produced - retried."""
     assert (stats.delivered_pairs + stats.spilled_pairs + stats.dropped_pairs
-            == num_results)
+            == num_results + stats.retried_pairs)
     assert (stats.delivered_sids + stats.spilled_sids + stats.dropped_sids
-            == num_notified)
-    assert stats.delivered_pairs + stats.overflow_pairs == num_results
-    assert stats.delivered_sids + stats.overflow_sids == num_notified
+            == num_notified + stats.retried_sids)
+    assert stats.delivered_pairs + stats.overflow_pairs \
+        == num_results + stats.retried_pairs
+    assert stats.delivered_sids + stats.overflow_sids \
+        == num_notified + stats.retried_sids
 
 
 def check_fanout_invariants(res, group_sids, exp_tgts, max_notify):

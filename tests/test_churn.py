@@ -222,16 +222,13 @@ def _delivered_sets(eng, flags):
     broker_bytes, broker_results, delivered sid multiset, delivered (row,
     member-count) multiset) with caps large enough that nothing overflows."""
     from repro.core.broker import fanout_sids, pack_payloads
-    import jax.numpy as jnp
     out = {}
     reps = eng.execute_all(flags, advance=False, timed=False, deliver=True)
     for name, rep in reps.items():
-        st = eng.channels[name]
-        if st.spec.join == "spatial":
-            tbl = eng._spatial_sids_table(st)
-            sids_tbl = jnp.zeros((0,), jnp.int32) if tbl is None else tbl
-        else:
-            sids_tbl = eng.group_sids_array(name, flags.aggregation)
+        # the table matching the fused path's target space (slot tables on
+        # an incremental engine — compacted build rows would misroute when
+        # the slot table has holes)
+        sids_tbl = eng.fused_sids_table(name, flags.aggregation)
         buf, dlv, ov = pack_payloads(rep.result, sids_tbl, 2, 1 << 14)
         assert int(ov) == 0
         rows = np.asarray(buf)[:int(dlv)]
@@ -244,6 +241,7 @@ def _delivered_sets(eng, flags):
             sorted(np.asarray(nbuf)[:int(ndlv)].tolist()),
             sorted(map(tuple, rows[:, [0, 2]].tolist())),
         )
+    eng.flush_rings()
     eng.spill.clear()
     return out
 
@@ -420,6 +418,88 @@ def test_steady_churn_zero_retraces_and_correct(rng):
     assert g.num_notified == w.num_notified
 
 
+def test_flat_steady_churn_zero_rebuilds_and_retraces(rng):
+    """FLAT layout (per-subscription rows): steady balanced churn patches
+    the stacked cache in place — zero rebuilds, zero retraces after warmup —
+    and the delta-maintained flat state still matches the per-channel
+    from-scratch reference."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1", "B2"), group_cap=8)
+    eng.create_channel(tweets_about_drugs())
+    sids = eng.subscribe_bulk("TweetsAboutDrugs",
+                              rng.integers(0, 50, 600),
+                              rng.integers(0, 2, 600))
+    wl = [ChurnWorkload("TweetsAboutDrugs", adds_per_tick=64,
+                        removes_per_tick=64, num_brokers=2)]
+    flags = ExecutionFlags(scan_mode="window")     # flat, no aggregation
+    kw = dict(flags=flags, deliver=True, ingest_per_tick=64,
+              make_batch=lambda r, n, t0: make_tweets(r, n, t0=t0,
+                                                      match_drugs=0.2),
+              live_sids={"TweetsAboutDrugs": sids})
+    run_ticks(eng, wl, 4, rng, warmup=4, **kw)          # warm (untimed)
+    rep = run_ticks(eng, wl, 5, rng, warmup=0, **kw)
+    assert rep.maintenance.traces == 0, rep.maintenance
+    assert rep.maintenance.rebuilds == 0, rep.maintenance
+    assert rep.maintenance.patches >= 5
+    # end-state parity vs the per-channel from-scratch path
+    b = make_tweets(rng, 200, t0=10 ** 7, match_drugs=0.3)
+    eng.ingest(b)
+    got = eng.execute_all(flags, advance=False, timed=False)["TweetsAboutDrugs"]
+    seq = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                              timed=False)
+    assert (got.num_results, got.num_notified) == (seq.num_results,
+                                                   seq.num_notified)
+    np.testing.assert_allclose(got.broker_bytes, seq.broker_bytes)
+
+
+def test_flat_slot_spills_drain_against_flat_table(rng):
+    """Fused FLAT spills on an incremental engine carry FLAT-slot targets;
+    with holes in the flat slot table (removals) the drain must re-pack
+    against the flat slot table — the compacted flatten_groups table would
+    notify the wrong subscribers."""
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=1024, max_candidates=256,
+                    brokers=("B1",), group_cap=4,
+                    max_deliver_pairs=4, max_notify=1 << 12,
+                    ring_capacity=0)   # force overflow through the host queue
+    eng.create_channel(tweets_about_drugs())
+    params = np.asarray(list(range(10)) * 4, np.int32)
+    sids = eng.subscribe_bulk("TweetsAboutDrugs", params,
+                              np.zeros(len(params), np.int32))
+    # free a scattered set of flat slots -> holes below live slots
+    gone = sids[params == 2]
+    assert eng.remove_subscriptions("TweetsAboutDrugs", gone) == len(gone)
+    agg = eng.channels["TweetsAboutDrugs"].aggregator
+    assert agg.num_flat_slots > agg.num_subscriptions   # holes exist
+    fields = np.zeros((30, 10), dtype=np.int32)
+    fields[:, R.STATE] = np.arange(30) % 10
+    fields[:, R.THREATENING_RATE] = 10
+    fields[:, R.DRUG_ACTIVITY] = 3
+    fields[:, R.TIMESTAMP] = 50
+    eng.ingest(R.RecordBatch.from_numpy(fields))
+    flags = ExecutionFlags(scan_mode="window")          # flat layout
+    rep = eng.execute_all(flags, advance=False, timed=False,
+                          deliver=True)["TweetsAboutDrugs"]
+    assert rep.overflow.spilled_pairs > 0
+    sid_param = {int(s): int(p) for s, p in zip(sids, params)
+                 if int(s) not in set(gone.tolist())}
+    checked = 0
+    while eng.spill.pending_pairs() > 0:
+        for dr in eng.drain_spilled().values():
+            if dr.payload is None:
+                continue
+            for line in dr.payload[:dr.stats.delivered_pairs]:
+                row, members = int(line[0]), int(line[2])
+                assert members == 1                     # flat: one sub/row
+                got = int(line[4])
+                want_param = int(fields[row, R.STATE])
+                assert sid_param[got] == want_param, (row, got)
+                checked += 1
+    assert checked > 0
+    eng.spill.clear()
+
+
 def test_capacity_exceeded_falls_back_to_rebuild(rng):
     """Growing past the padded slot capacity triggers a (counted) full
     rebuild with a bigger bucket — results stay correct throughout."""
@@ -567,7 +647,8 @@ def test_slot_space_spills_drain_against_slot_table(rng):
     eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
                     max_window=1024, max_candidates=256,
                     brokers=("B1",), group_cap=4,
-                    max_deliver_pairs=4, max_notify=1 << 12)
+                    max_deliver_pairs=4, max_notify=1 << 12,
+                    ring_capacity=0)   # force overflow through the host queue
     eng.create_channel(tweets_about_drugs())
     # params 0..9, one group each (plus param 3 twice to survive removal)
     params = np.asarray(list(range(10)) * 4, np.int32)

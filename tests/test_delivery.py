@@ -169,8 +169,9 @@ def test_forced_overflow_conservation_and_parity(rng, flags):
 def test_drain_redelivers_exactly_once(rng):
     """Every spilled pair/sID is re-delivered exactly once, in spill order:
     the concatenation of drain rounds equals the expected overflow tail of
-    the original delivery — no duplicates, no loss — and the queue empties."""
-    eng = _overflow_engine(rng)
+    the original delivery — no duplicates, no loss — and the queue empties.
+    (ring disabled: this exercises the host SpillQueue drain path.)"""
+    eng = _overflow_engine(rng, ring_capacity=0)
     flags = ExecutionFlags(scan_mode="window", aggregation=True,
                            param_pushdown=True)
     reps = eng.execute_all(flags, advance=False, timed=False, deliver=True)
@@ -216,7 +217,7 @@ def test_drain_redelivers_exactly_once(rng):
 def test_spill_queue_capacity_drops_are_counted(rng):
     """A full spill queue degrades to counted drops — conservation still
     holds and only what was actually captured is ever re-delivered."""
-    eng = _overflow_engine(rng, spill_capacity=10)
+    eng = _overflow_engine(rng, spill_capacity=10, ring_capacity=0)
     flags = ExecutionFlags(scan_mode="window")
     reps = eng.execute_all(flags, advance=False, timed=False, deliver=True)
     total_spilled_p = total_spilled_s = 0
@@ -242,7 +243,7 @@ def test_device_spill_buffer_truncation_counted(rng):
     windows are per channel, fused capture equals the per-channel path even
     when every channel overflows past the window (no cross-channel
     crowd-out)."""
-    eng = _overflow_engine(rng, max_spill=8)
+    eng = _overflow_engine(rng, max_spill=8, ring_capacity=0)
     # a second param channel in the same fused join group: under a shared
     # spill budget its overflow would be crowded out by TweetsAboutDrugs'
     eng.create_channel(most_threatening_tweets())

@@ -290,7 +290,12 @@ def test_execution_report_surfaces_overflow(rng):
     eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
                     max_window=1024, max_candidates=256,
                     brokers=("B1", "B2"), group_cap=8,
-                    max_deliver_pairs=16, max_notify=32)
+                    max_deliver_pairs=16, max_notify=32,
+                    # retry ring off: repeated fused calls would otherwise
+                    # re-present (and re-count) the prior call's overflow,
+                    # which is exactly what this per-call parity test is NOT
+                    # about (tests/test_retry_ring.py covers the ring)
+                    ring_capacity=0)
     eng.create_channel(tweets_about_drugs())
     eng.create_channel(tweets_about_crime(1))
     eng.set_user_locations((rng.normal(size=(30, 2)) * 30).astype(np.float32))
