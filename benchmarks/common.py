@@ -31,6 +31,21 @@ SMOKE = False
 # every emit() lands here: [{"name", "us_per_call", "derived"}, ...]
 RESULTS: List[Dict[str, object]] = []
 
+# THE benchmark seed: every suite-local generator derives from this one
+# value through ``fresh_rng(tag)``, so planner-vs-static (and any other
+# A/B) comparisons see bit-identical data run to run AND engine to engine
+SEED = 4242
+
+
+def fresh_rng(tag: object = "") -> np.random.Generator:
+    """A deterministic generator for one named stream. Same (SEED, tag) ->
+    same stream, across processes (crc32, not the salted builtin ``hash``):
+    engines built repeatedly inside a sweep — or once per candidate config —
+    must see IDENTICAL subscriptions and tweets or the comparison measures
+    data, not plans."""
+    import zlib
+    return np.random.default_rng((SEED, zlib.crc32(str(tag).encode())))
+
 
 def set_smoke() -> None:
     """Shrink the shared workload constants for CI smoke runs. Suites route
@@ -63,8 +78,9 @@ def build_drug_engine(rng, n_subs: int = None, n_new: int = None,
     n_subs = N_SUBS if n_subs is None else n_subs
     n_new = N_TWEETS_PERIOD if n_new is None else n_new
     preload = PRELOAD if preload is None else preload
-    # engines built repeatedly inside a sweep must see IDENTICAL data
-    rng = np.random.default_rng(4242)
+    # ignore the caller's generator state on purpose: engines built
+    # repeatedly inside a sweep must see IDENTICAL data (see fresh_rng)
+    rng = fresh_rng("drug_engine")
     eng = BADEngine(dataset_capacity=DATASET_CAP, index_capacity=1 << 15,
                     max_window=1 << 15, max_candidates=1 << 12,
                     brokers=("Broker1", "Broker2", "Broker3", "Broker4"),

@@ -128,7 +128,9 @@ def run_ticks(engine: BADEngine,
               make_batch: Callable = None,
               warmup: int = 2,
               live_sids: Optional[Dict[str, np.ndarray]] = None,
-              churn_rounds: int = 1) -> ChurnReport:
+              churn_rounds: int = 1,
+              use_channel_plans: bool = False,
+              on_tick: Callable = None) -> ChurnReport:
     """Drive ``ticks`` churn ticks: per workload, bulk-add then bulk-remove
     subscriptions, optionally churn a spatial cohort, ingest a record batch,
     run the fused ``execute_all`` (optionally with fused delivery), and
@@ -144,8 +146,17 @@ def run_ticks(engine: BADEngine,
     periods. Every batch pays the maintenance cost (the rebuild baseline
     re-aggregates per BATCH, exactly as the pre-churn-engine control plane
     did on every ``subscribe_bulk``).
+
+    ``use_channel_plans`` executes under each channel's assigned
+    ``ChannelPlan`` (``execute_all(None)`` — the planner-driven plan-group
+    partitioning) instead of homogeneous ``flags``. ``on_tick(tick,
+    reports)`` fires after every executed tick — hook a
+    ``RuntimePlanner.step`` here to re-plan mid-run.
     """
-    flags = flags or ExecutionFlags.fully_optimized()
+    if use_channel_plans:
+        flags = None
+    else:
+        flags = flags or ExecutionFlags.fully_optimized()
     make_batch = make_batch or (lambda r, n, t0: tweet_batch(r, n, t0=t0))
     live: Dict[str, _LivePool] = {
         w.channel: _LivePool(np.zeros((0,), np.int32)) for w in workloads}
@@ -193,6 +204,8 @@ def run_ticks(engine: BADEngine,
             now += 100
             engine.ingest(make_batch(rng, ingest_per_tick, now))
         reports = engine.execute_all(flags, timed=False, deliver=deliver)
+        if on_tick is not None:
+            on_tick(tick, reports)
         if timed:
             for rep in reports.values():
                 results += rep.num_results

@@ -139,6 +139,11 @@ class ChannelState:
     index: int                      # row in the stacked conditionsList / BADIndexState
     aggregator: subs.Aggregator
     user_params: UserParameters
+    # the channel's current physical plan (scan mode x layout x backend);
+    # None falls back to the engine default. ``execute_all(flags=None)``
+    # partitions channels into plan-groups by this value — set it via
+    # ``BADEngine.set_plan`` (the runtime planner's switch point)
+    plan: Optional[plans.ChannelPlan] = None
     last_exec_ts: int = 0
     last_exec_size: int = 0
     executions: int = 0
@@ -391,6 +396,9 @@ class ExecutionReport:
     num_notified: int
     scanned: int
     broker_bytes: np.ndarray
+    # the full plan (flags + backend) this execution ran under; None on the
+    # per-channel ``execute_channel`` path (which stays flags-driven)
+    plan: Optional[plans.ChannelPlan] = None
     # broker overflow accounting; None unless executed with ``deliver=True``
     overflow: Optional[DeliveryStats] = None
     # delivered wire buffers (delivered prefix meaningful); only populated
@@ -500,6 +508,37 @@ class BADEngine:
         for i, st in enumerate(survivors):
             st.index = i
         self._rebuild_conditions(old_rows)
+
+    def default_plan(self) -> plans.ChannelPlan:
+        """The plan channels run under until one is assigned: the default
+        ExecutionFlags with the engine's kernel backend."""
+        return plans.ChannelPlan(
+            backend="pallas" if self.use_pallas else "oracle")
+
+    def channel_plan(self, name: str) -> plans.ChannelPlan:
+        return self.channels[name].plan or self.default_plan()
+
+    def set_plan(self, name: str, plan: plans.ChannelPlan) -> bool:
+        """Assign a channel's physical plan; returns True when it changed.
+
+        Purely a host-side assignment: the NEXT ``execute_all(flags=None)``
+        call partitions plan-groups from the new value. A switch migrates
+        the old plan-group's retry-ring state through the existing
+        ``flush_rings`` path (entries land in the host SpillQueue, tagged
+        with the layout they were produced under, and re-deliver via
+        ``drain_spilled``) — no notification is lost or misrouted across
+        the switch."""
+        if not isinstance(plan, plans.ChannelPlan):
+            raise TypeError(f"expected ChannelPlan, got {type(plan)!r}")
+        st = self.channels[name]
+        if st.plan == plan:
+            return False
+        st.plan = plan
+        return True
+
+    def plan_assignment(self) -> Dict[str, plans.ChannelPlan]:
+        """Every channel's effective plan (assigned or engine default)."""
+        return {name: self.channel_plan(name) for name in self.channels}
 
     def subscribe(self, channel: str, param: int, broker: str = "BrokerA",
                   sid: Optional[int] = None) -> int:
@@ -1014,7 +1053,10 @@ class BADEngine:
         identity)."""
         names = tuple(st.spec.name for st in chs)
         epochs = [st.epoch for st in chs]
-        cache = self._stacked_cache.get(("groups", aggregated))
+        # keyed by layout AND the group's channel membership: concurrent
+        # plan-groups (heterogeneous assignments) each keep their own
+        # patchable entry instead of thrashing a single slot
+        cache = self._stacked_cache.get(("groups", aggregated, names))
         if cache is not None and cache.names == names:
             if cache.epochs == epochs:
                 return cache
@@ -1030,8 +1072,16 @@ class BADEngine:
                         self._apply_flat_patches(cache, chs, patches)
                         return cache
         cache = self._build_group_state(chs, aggregated)
-        self._stacked_cache[("groups", aggregated)] = cache
+        self._stacked_put(("groups", aggregated, names), cache)
         return cache
+
+    def _stacked_put(self, key, cache, cap: int = 32) -> None:
+        """Insert a stacked cache entry with FIFO eviction — plan switches
+        re-group channels, and superseded groupings must not pin dead
+        device arrays forever."""
+        if key not in self._stacked_cache and len(self._stacked_cache) >= cap:
+            self._stacked_cache.pop(next(iter(self._stacked_cache)))
+        self._stacked_cache[key] = cache
 
     def _build_group_state(self, chs: List[ChannelState],
                            aggregated: bool) -> _GroupCache:
@@ -1341,7 +1391,7 @@ class BADEngine:
         names = tuple(st.spec.name for st in chs)
         cohorted = tuple(st.cohort is not None for st in chs)
         epochs = [st.user_epoch for st in chs]
-        cache = self._stacked_cache.get("spatial")
+        cache = self._stacked_cache.get(("spatial", names))
         if cache is not None and cache.names == names \
                 and cache.user_version == self._user_version \
                 and cache.cohorted == cohorted:
@@ -1353,7 +1403,7 @@ class BADEngine:
                     self._apply_spatial_patches(cache, chs, patches)
                     return cache
         cache = self._build_spatial_state(chs)
-        self._stacked_cache["spatial"] = cache
+        self._stacked_put(("spatial", names), cache)
         return cache
 
     def _cohort_rows(self, st: ChannelState, slots=None):
@@ -1460,16 +1510,17 @@ class BADEngine:
 
     def _exec_all_fn(self, param_chs: List[ChannelState],
                      spatial_chs: List[ChannelState],
-                     flags: plans.ExecutionFlags, max_cand: int,
+                     plan: plans.ChannelPlan, max_cand: int,
                      deliver: bool = False) -> Callable:
-        """ONE compiled plan for every channel: stacked candidate discovery
-        per join group (param / spatial), vmapped joins, fused broker
-        accounting. With ``use_pallas`` the discovery runs the Pallas
-        ``predicate_filter`` kernel and the spatial join the Pallas
-        ``spatial_match`` kernel (both batched over the channel axis). With
-        ``deliver`` the broker convert+send stages (``deliver_all``) run in
-        the SAME call — no host round-trip between discovery and fanout."""
-        key = ("all", flags, max_cand, deliver,
+        """ONE compiled plan for every channel of a plan-group: stacked
+        candidate discovery per join group (param / spatial), vmapped joins,
+        fused broker accounting. With ``plan.backend == "pallas"`` the
+        discovery runs the Pallas ``predicate_filter`` kernel and the
+        spatial join the Pallas ``spatial_match`` kernel (both batched over
+        the channel axis). With ``deliver`` the broker convert+send stages
+        (``deliver_all``) run in the SAME call — no host round-trip between
+        discovery and fanout."""
+        key = ("all", plan, max_cand, deliver,
                tuple((st.spec, st.index) for st in param_chs),
                tuple((st.spec, st.index) for st in spatial_chs))
         cached = self._exec_cache.get(key)
@@ -1478,10 +1529,10 @@ class BADEngine:
         conds = self._conds
         max_window = self.max_window
         num_brokers = self.brokers.num_brokers
-        scan_mode = flags.scan_mode
-        pushdown = flags.param_pushdown
-        aggregated = flags.aggregation
-        use_pallas = self.use_pallas
+        scan_mode = plan.scan_mode
+        pushdown = plan.param_pushdown
+        aggregated = plan.aggregation
+        use_pallas = plan.backend == "pallas"
         if use_pallas:
             from repro.kernels.predicate_filter import ops as pf_ops
             from repro.kernels.spatial_match import ops as sm_ops
@@ -1565,41 +1616,107 @@ class BADEngine:
         self._cache_put(key, fn)
         return fn
 
-    def execute_all(self, flags: plans.ExecutionFlags, advance: bool = True,
-                    timed: bool = True,
+    def execute_all(self, flags: Optional[plans.ExecutionFlags] = None,
+                    advance: bool = True, timed: bool = True,
                     deliver: bool = False) -> Dict[str, ExecutionReport]:
-        """Execute EVERY channel — param-join AND spatial — in one jitted
-        call: stacked candidate discovery per join group, vmapped param join,
-        vmapped spatial join (per-channel radii over the stacked user sets),
-        fused broker accounting. No per-channel host round-trips remain on
-        the hot path.
+        """Execute EVERY channel — param-join AND spatial — in one fused
+        jitted call per PLAN-GROUP: stacked candidate discovery per join
+        group, vmapped param join, vmapped spatial join (per-channel radii
+        over the stacked user sets), fused broker accounting. No per-channel
+        host round-trips remain on the hot path.
+
+        ``flags=None`` (the planner-driven mode) partitions channels by
+        their assigned ``ChannelPlan`` (``set_plan`` / engine default):
+        channels sharing a plan run in ONE fused call, heterogeneous
+        assignments run one call per distinct plan, each with its own
+        stacked caches and retry ring (keyed by the full plan identity).
+        Passing explicit ``flags`` forces the legacy homogeneous path —
+        every channel runs that plan under the engine backend (assignments
+        are ignored, not overwritten), which for a single plan is exactly
+        the pre-planner behavior: one fused call for the whole engine.
 
         Result-for-result equivalent to looping ``execute_channel`` — each
-        channel's report carries its own counts/bytes; ``wall_time_s`` is the
-        fused wall time amortized per channel. ``deliver=True`` runs the
-        broker convert+send stages (``broker.deliver_all``) INSIDE the same
-        jitted call — stacked wire packing, stacked sID fanout, one-hot
-        per-broker accounting, flat spill capture — and surfaces per-channel
-        ``DeliveryStats`` in ``report.overflow``, stats-identical to the
-        per-channel ``_deliver`` path.
+        channel's report carries its own counts/bytes; ``wall_time_s`` is
+        its plan-group's fused wall time amortized per channel.
+        ``deliver=True`` runs the broker convert+send stages
+        (``broker.deliver_all``) INSIDE each group's jitted call — stacked
+        wire packing, stacked sID fanout, one-hot per-broker accounting,
+        flat spill capture — and surfaces per-channel ``DeliveryStats`` in
+        ``report.overflow``, stats-identical to the per-channel ``_deliver``
+        path. A plan switch between calls migrates the superseded group's
+        ring state through ``_flush_ring`` into the host SpillQueue, so
+        delivered + spilled + dropped == produced telescopes across the
+        switch.
         """
         ordered = sorted(self.channels.values(), key=lambda s: s.index)
         reports: Dict[str, ExecutionReport] = {}
         if not ordered:
             return reports
-        param_chs = [st for st in ordered if st.spec.join == "param"]
-        spatial_chs = [st for st in ordered if st.spec.join == "spatial"]
+        if flags is not None:
+            base = plans.ChannelPlan.from_flags(
+                flags, "pallas" if self.use_pallas else "oracle")
+            plan_for = {st.spec.name: base for st in ordered}
+        else:
+            plan_for = {st.spec.name: (st.plan or self.default_plan())
+                        for st in ordered}
+        # plan-groups in first-channel order: Dict preserves insertion
+        # order, so homogeneous assignments reduce to one group == the
+        # legacy single fused call
+        groups: Dict[plans.ChannelPlan, Tuple[List, List]] = {}
+        for st in ordered:
+            g = groups.setdefault(plan_for[st.spec.name], ([], []))
+            (g[0] if st.spec.join == "param" else g[1]).append(st)
+        use_ring = deliver and self.ring_capacity > 0
+        if use_ring:
+            # plan-switch ring migration: a ring keyed by a (kind, plan,
+            # membership) no longer executing hands its resident entries to
+            # the host SpillQueue — tagged with the layout they were
+            # produced under, so the drain re-packs against the matching
+            # table — instead of being presented against another plan's
+            # tables or silently dropped
+            active = set()
+            for plan, (pchs, schs) in groups.items():
+                if pchs:
+                    active.add(("param", plan,
+                                tuple(st.spec.name for st in pchs)))
+                if schs:
+                    active.add(("spatial", plan,
+                                tuple(st.spec.name for st in schs)))
+            for k in [k for k in self._rings if k not in active]:
+                self._flush_ring(*self._rings.pop(k))
+        for plan, (param_chs, spatial_chs) in groups.items():
+            self._execute_plan_group(reports, plan, param_chs, spatial_chs,
+                                     timed, deliver, use_ring)
+        if advance:
+            self.index_state = bidx.advance_watermarks(
+                self.index_state,
+                jnp.asarray([st.index for st in ordered], jnp.int32))
+            for st in ordered:
+                st.last_exec_ts = self.now
+                st.last_exec_size = int(self.dataset.size)
+                st.executions += 1
+        return reports
+
+    def _execute_plan_group(self, reports: Dict[str, ExecutionReport],
+                            plan: plans.ChannelPlan,
+                            param_chs: List[ChannelState],
+                            spatial_chs: List[ChannelState],
+                            timed: bool, deliver: bool,
+                            use_ring: bool) -> None:
+        """Run ONE plan-group's fused call and write its channels' reports."""
+        chans = param_chs + spatial_chs
         max_cand = self.max_candidates
-        if flags.scan_mode == "bad_index":
-            # shared shape bucket: the largest per-channel watermark delta
-            # (two bulk host reads, not 2 device reads per channel)
+        if plan.scan_mode == "bad_index":
+            # shared shape bucket: the largest watermark delta across THIS
+            # group's channels (two bulk host reads, not 2 device reads per
+            # channel)
             counts = np.asarray(self.index_state.counts)
             wms = np.asarray(self.index_state.watermarks)
             pending = max(int(counts[st.index] - wms[st.index])
-                          for st in ordered)
+                          for st in chans)
             bucket = _pow2_bucket(pending, 6)
             max_cand = min(bucket, self.max_candidates)
-        fn = self._exec_all_fn(param_chs, spatial_chs, flags, max_cand,
+        fn = self._exec_all_fn(param_chs, spatial_chs, plan, max_cand,
                                deliver)
         # The fused aggregated targets of an incremental engine are SLOT
         # indices (free slots padded) and its flat targets are FLAT-slot
@@ -1607,14 +1724,15 @@ class BADEngine:
         # matching layout so a drain re-packs against the right table.
         # Non-incremental / spatial spills keep the per-channel layouts.
         if self.incremental:
-            p_layout = "slot" if flags.aggregation else "flat_slot"
+            p_layout = "slot" if plan.aggregation else "flat_slot"
         else:
-            p_layout = flags.aggregation
-        use_ring = deliver and self.ring_capacity > 0
+            p_layout = plan.aggregation
+        p_names = tuple(st.spec.name for st in param_chs)
+        s_names = tuple(st.spec.name for st in spatial_chs)
         p_in = s_in = None
         if param_chs:
             targets, up_masks, domains = self._stacked_inputs(
-                param_chs, flags.aggregation)
+                param_chs, plan.aggregation)
             p_in = dict(
                 targets=targets, up_masks=up_masks, domains=domains,
                 param_field=jnp.asarray(
@@ -1626,12 +1744,10 @@ class BADEngine:
                 last_size=jnp.asarray(
                     [st.last_exec_size for st in param_chs], jnp.int32))
             if deliver:
-                p_in["sids"] = self._stacked_sids(param_chs, flags.aggregation)
+                p_in["sids"] = self._stacked_sids(param_chs, plan.aggregation)
                 if use_ring:
                     p_in["ring"] = self._ring_in(
-                        ("param", p_layout),
-                        tuple(st.spec.name for st in param_chs),
-                        len(param_chs))
+                        ("param", plan, p_names), p_names, len(param_chs))
                     p_in["epochs"] = jnp.asarray(
                         [st.epoch for st in param_chs], jnp.int32)
         if spatial_chs:
@@ -1648,8 +1764,7 @@ class BADEngine:
                 s_in["sids"] = self._stacked_spatial_sids(spatial_chs)
                 if use_ring:
                     s_in["ring"] = self._ring_in(
-                        ("spatial",),
-                        tuple(st.spec.name for st in spatial_chs),
+                        ("spatial", plan, s_names), s_names,
                         len(spatial_chs))
                     s_in["epochs"] = jnp.asarray(
                         [st.epoch for st in spatial_chs], jnp.int32)
@@ -1660,34 +1775,24 @@ class BADEngine:
         res_p, res_s, del_p, del_s = fn(*args)
         jax.block_until_ready((res_p, res_s, del_p, del_s))
         wall = time.perf_counter() - t0
-        if advance:
-            self.index_state = bidx.advance_watermarks(
-                self.index_state,
-                jnp.asarray([st.index for st in ordered], jnp.int32))
-            for st in ordered:
-                st.last_exec_ts = self.now
-                st.last_exec_size = int(self.dataset.size)
-                st.executions += 1
         # One bulk device->host transfer per join group, then per-channel
         # numpy views: the per-channel path's int()/slice pattern would cost
         # dozens of device round-trips here. Delivery stats arrive the same
         # way: the fused call already packed/fanned out every channel, so the
         # host only pushes spills and reads (C,)-shaped counters.
-        share = wall / len(ordered)
+        share = wall / len(chans)
         if use_ring:
             # persist the successor rings (device-resident: no host
             # round-trip) so the next fused call re-delivers their content
             if param_chs:
-                self._rings[("param", p_layout)] = (
-                    tuple(st.spec.name for st in param_chs), p_layout,
-                    del_p.ring)
+                self._rings[("param", plan, p_names)] = (
+                    p_names, p_layout, del_p.ring)
             if spatial_chs:
-                self._rings[("spatial",)] = (
-                    tuple(st.spec.name for st in spatial_chs),
-                    flags.aggregation, del_s.ring)
+                self._rings[("spatial", plan, s_names)] = (
+                    s_names, plan.aggregation, del_s.ring)
         for chs, res, dlv, layout in (
                 (param_chs, res_p, del_p, p_layout),
-                (spatial_chs, res_s, del_s, flags.aggregation)):
+                (spatial_chs, res_s, del_s, plan.aggregation)):
             if not chs:
                 continue
             host = jax.tree.map(np.asarray, res)
@@ -1699,7 +1804,7 @@ class BADEngine:
                 noti = np.asarray(dlv.fan.notify)
             for i, st in enumerate(chs):
                 reports[st.spec.name] = ExecutionReport(
-                    channel=st.spec.name, flags=flags,
+                    channel=st.spec.name, flags=plan.flags, plan=plan,
                     result=jax.tree.map(lambda a, i=i: a[i], host),
                     wall_time_s=share,
                     num_results=int(host.num_results[i]),
@@ -1709,7 +1814,6 @@ class BADEngine:
                     overflow=stats.get(st.spec.name),
                     payload=None if pay is None else pay[i],
                     notify=None if noti is None else noti[i])
-        return reports
 
     # ------------------------------------------------------------------
     # device-resident retry rings
@@ -1717,16 +1821,14 @@ class BADEngine:
 
     def _ring_in(self, key, names: Tuple[str, ...],
                  num_channels: int) -> RetryRing:
-        """The resident ring for one fused join group, or a fresh empty one
-        when the group's channel set changed (the old ring's entries are
-        handed to the host queue — dropped channels drop at drain time,
-        counted — never silently lost). Rings of the SAME kind under a
-        different target layout are flushed too: a caller that switches
-        layouts must find the inactive ring's entries in the host queue
-        (drainable), not stranded on device."""
-        for other_key in [k for k in self._rings if k[0] == key[0]
-                          and k != key]:
-            self._flush_ring(*self._rings.pop(other_key))
+        """The resident ring for one plan-group, or a fresh empty one when
+        the group's channel set changed (the old ring's entries are handed
+        to the host queue — dropped channels drop at drain time, counted —
+        never silently lost). Rings whose (kind, plan, membership) key is no
+        longer active are flushed up front by ``execute_all``: a caller that
+        switches plans must find the inactive ring's entries in the host
+        queue (drainable), not stranded on device or replayed against
+        another plan's slot tables."""
         cur = self._rings.get(key)
         if cur is not None:
             if cur[0] == names:

@@ -27,6 +27,7 @@ from repro.core.predicates import CompiledConditions, apply_op, evaluate_conditi
 from repro.core.user_params import semi_join
 
 SCAN_MODES = ("full", "window", "trad_index", "bad_index")
+BACKENDS = ("oracle", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +48,57 @@ class ExecutionFlags:
     def fully_optimized() -> "ExecutionFlags":
         return ExecutionFlags(scan_mode="bad_index", aggregation=True,
                               param_pushdown=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelPlan:
+    """A channel's full physical plan: scan mode x target layout x kernel
+    backend. ``ExecutionFlags`` names the paper's three optimizations;
+    ``ChannelPlan`` extends it with the backend axis and is the unit the
+    engine partitions ``execute_all`` by — channels sharing a plan run in
+    ONE fused jitted call, distinct plans run as separate plan-groups
+    (each with its own stacked caches and retry ring, keyed by the plan).
+    """
+
+    scan_mode: str = "window"
+    aggregation: bool = False
+    param_pushdown: bool = False
+    backend: str = "oracle"
+
+    def __post_init__(self):
+        if self.scan_mode not in SCAN_MODES:
+            raise ValueError(f"scan_mode must be one of {SCAN_MODES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+
+    @property
+    def flags(self) -> "ExecutionFlags":
+        """The ExecutionFlags view (everything but the backend axis)."""
+        return ExecutionFlags(self.scan_mode, self.aggregation,
+                              self.param_pushdown)
+
+    @staticmethod
+    def from_flags(flags: "ExecutionFlags",
+                   backend: str = "oracle") -> "ChannelPlan":
+        return ChannelPlan(flags.scan_mode, flags.aggregation,
+                           flags.param_pushdown, backend)
+
+    def to_dict(self) -> dict:
+        return {"scan_mode": self.scan_mode, "aggregation": self.aggregation,
+                "param_pushdown": self.param_pushdown, "backend": self.backend}
+
+    @staticmethod
+    def from_dict(d: dict) -> "ChannelPlan":
+        return ChannelPlan(d["scan_mode"], bool(d["aggregation"]),
+                           bool(d["param_pushdown"]), d.get("backend", "oracle"))
+
+
+def enumerate_plans(backends=("oracle",), param_pushdown: bool = True):
+    """Every static (scan mode x layout x backend) combination — the search
+    space of the offline plan seeder and the planner-vs-static benchmark."""
+    return tuple(ChannelPlan(scan, agg, param_pushdown, b)
+                 for b in backends for scan in SCAN_MODES
+                 for agg in (False, True))
 
 
 class TargetArrays(NamedTuple):

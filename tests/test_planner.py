@@ -1,0 +1,372 @@
+"""Per-channel plans + adaptive runtime planner.
+
+Covers: plan-group partitioning parity (a heterogeneous assignment delivers
+exactly what per-plan homogeneous engines deliver, all 4 scan modes x
+{agg, flat} x {oracle, pallas}), ring migration across a layout switch (a
+flat-slot ring must drain against the FLAT table, never the aggregated slot
+table), delivered+dropped == produced telescoped across mid-stream plan
+switches, planner hysteresis (patience + cooldown), zero retraces at a
+stable assignment, and the offline search / plan-file roundtrip."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import planner as qp
+from repro.core.channel import tweets_about_drugs
+from repro.core.engine import BADEngine
+from repro.core.planner import PlannerConfig, RuntimePlanner
+from repro.core.plans import BACKENDS, ChannelPlan, enumerate_plans
+
+from conftest import check_delivery_conservation, make_tweets
+
+ALL_PLANS = enumerate_plans(backends=BACKENDS, param_pushdown=True)
+
+
+def _multi_engine(rng, names, **kw):
+    """One param channel per name (identical spec modulo name), identical
+    subscriptions per channel — engines built from equal generator states
+    are data-identical."""
+    args = dict(dataset_capacity=4096, index_capacity=1024, max_window=1024,
+                max_candidates=256, brokers=("B1", "B2"), group_cap=8,
+                max_deliver_pairs=512, max_notify=1024, ring_capacity=256)
+    args.update(kw)
+    eng = BADEngine(**args)
+    eng.debug_delivery_buffers = True
+    base = tweets_about_drugs()
+    for name in names:
+        eng.create_channel(dataclasses.replace(base, name=name))
+        eng.subscribe_bulk(name, rng.integers(0, 50, 40),
+                           rng.integers(0, 2, 40))
+    return eng
+
+
+def _content(rep):
+    """Delivered wire content of one report: pair (row, target) list + sID
+    list (delivered prefixes of the debug buffers)."""
+    o = rep.overflow
+    pairs = [tuple(p) for p in
+             np.asarray(rep.payload)[:o.delivered_pairs, :2].tolist()]
+    sids = np.asarray(rep.notify)[:o.delivered_sids].tolist()
+    return pairs, sids
+
+
+# ---------------------------------------------------------------------------
+# mixed-plan execute_all parity (satellite: heterogeneous fuzz)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_plan_parity_all_modes():
+    """One engine running SIXTEEN distinct plans — every scan mode x layout
+    x backend — delivers, per channel and per tick, the exact pair/sID
+    multisets of homogeneous engines running that channel's plan alone."""
+    names = [f"Drugs{i}" for i in range(len(ALL_PLANS))]
+    hetero = _multi_engine(np.random.default_rng(7), names)
+    refs = {b: _multi_engine(np.random.default_rng(7), names,
+                             use_pallas=(b == "pallas")) for b in BACKENDS}
+    for name, plan in zip(names, ALL_PLANS):
+        hetero.set_plan(name, plan)
+    data_rng = np.random.default_rng(99)
+    for tick in range(2):
+        batch = make_tweets(data_rng, 150, t0=1 + 100 * tick,
+                            match_drugs=0.3)
+        hetero.ingest(batch)
+        for ref in refs.values():
+            ref.ingest(batch)
+        got = hetero.execute_all(None, timed=False, deliver=True)
+        assert len(got) == len(names)
+        want = {}
+        for flags_plan in enumerate_plans(param_pushdown=True):
+            for backend in BACKENDS:
+                ref = refs[backend]
+                reps = ref.execute_all(flags_plan.flags, advance=False,
+                                       timed=False, deliver=True)
+                plan = dataclasses.replace(flags_plan, backend=backend)
+                for name, assigned in zip(names, ALL_PLANS):
+                    if assigned == plan:
+                        want[name] = reps[name]
+        for ref in refs.values():   # one watermark advance per tick, like
+            ref.execute_all(ALL_PLANS[0].flags, timed=False)  # hetero's call
+        for name in names:
+            g, w = got[name], want[name]
+            assert g.plan == dict(zip(names, ALL_PLANS))[name]
+            assert (g.num_results, g.num_notified) == \
+                (w.num_results, w.num_notified), name
+            o = g.overflow
+            check_delivery_conservation(o, g.num_results, g.num_notified)
+            assert o.spilled_pairs == o.dropped_pairs == 0, name
+            assert o.spilled_sids == o.dropped_sids == 0, name
+            gp, gs = _content(g)
+            wp, ws = _content(w)
+            assert sorted(gp) == sorted(wp), name
+            assert sorted(gs) == sorted(ws), name
+
+
+def test_legacy_flags_ignore_assignments(rng):
+    """Explicit flags force ONE homogeneous plan-group regardless of
+    per-channel assignments (and do not overwrite them)."""
+    eng = _multi_engine(rng, ["A", "B"])
+    eng.set_plan("A", ChannelPlan("bad_index", True, True))
+    eng.ingest(make_tweets(rng, 100, match_drugs=0.3))
+    flags = ChannelPlan("window", True, True).flags
+    reps = eng.execute_all(flags, timed=False, deliver=True)
+    assert all(r.plan == ChannelPlan.from_flags(flags)
+               for r in reps.values())
+    assert eng.channel_plan("A") == ChannelPlan("bad_index", True, True)
+
+
+# ---------------------------------------------------------------------------
+# ring migration across a plan switch (satellite: full-plan ring keys)
+# ---------------------------------------------------------------------------
+
+
+def _switch_build(seed, **kw):
+    rng = np.random.default_rng(seed)
+    eng = _multi_engine(rng, ["D"], **kw)
+    eng.ingest(make_tweets(np.random.default_rng(seed + 1), 300,
+                           match_drugs=0.4))
+    return eng
+
+
+def _drain_content(eng):
+    pairs, sids = [], []
+    while eng.spill.pending_pairs() + eng.spill.pending_sids() > 0:
+        for drr in eng.drain_spilled().values():
+            if drr.payload is not None:
+                pairs += [tuple(p) for p in np.asarray(
+                    drr.payload)[:drr.stats.delivered_pairs, :2].tolist()]
+            if drr.notify is not None:
+                sids += np.asarray(
+                    drr.notify)[:drr.stats.delivered_sids].tolist()
+            assert drr.stats.dropped_pairs == drr.stats.dropped_sids == 0
+    return pairs, sids
+
+
+def test_layout_switch_drains_flat_ring_against_flat_table():
+    """Regression (rings keyed by full plan identity): pairs resident in a
+    FLAT-slot ring when the channel switches to the aggregated layout must
+    migrate through the SpillQueue and re-pack against the FLAT slot table
+    — byte-identical to an engine that never switched — not be presented to
+    the aggregated plan's fused call (whose slot table they would silently
+    mis-index) or dropped."""
+    flat = ChannelPlan("window", False, True)
+    agg = ChannelPlan("window", True, True)
+    caps = dict(max_deliver_pairs=4, max_notify=8)
+    switched = _switch_build(3, **caps)
+    stayed = _switch_build(3, **caps)
+    for e in (switched, stayed):
+        e.set_plan("D", flat)
+        rep = e.execute_all(None, timed=False, deliver=True)["D"]
+        check_delivery_conservation(rep.overflow, rep.num_results,
+                                    rep.num_notified)
+    assert switched.ring_pending_pairs() > 0
+    key = ("param", flat, ("D",))
+    assert key in switched._rings
+    assert switched._rings[key][1] == "flat_slot"
+    # reference: never switches — flush the flat ring and drain it
+    stayed.flush_rings()
+    want = _drain_content(stayed)
+    # switched: layout flips, next call must NOT feed the flat ring into the
+    # aggregated group; its entries surface via the queue instead
+    switched.set_plan("D", agg)
+    rep2 = switched.execute_all(None, timed=False, deliver=True)["D"]
+    assert rep2.num_results == 0                 # no new data this tick
+    assert rep2.overflow.retried_pairs == 0      # flat ring NOT re-presented
+    assert key not in switched._rings
+    assert ("param", agg, ("D",)) in switched._rings
+    got = _drain_content(switched)
+    assert sorted(got[0]) == sorted(want[0])
+    assert sorted(got[1]) == sorted(want[1])
+
+
+def test_conservation_telescopes_across_plan_switches(rng):
+    """delivered + dropped == produced over a run whose plan switches
+    mid-stream (flat -> aggregated -> bad_index), rings flushed and the
+    queue drained to empty at the end; a no-cap engine following the same
+    switch schedule delivers the identical multisets."""
+    schedule = {0: ChannelPlan("window", False, True),
+                2: ChannelPlan("window", True, True),
+                4: ChannelPlan("bad_index", True, True)}
+    capped = _switch_build(11, max_deliver_pairs=8, max_notify=16)
+    oracle = _switch_build(11, max_deliver_pairs=2048, max_notify=4096,
+                           ring_capacity=4096)
+    tot = dict(prod_p=0, prod_s=0)
+    acc = {id(capped): ([], []), id(oracle): ([], [])}
+    data_rng = np.random.default_rng(12)
+    for tick in range(6):
+        batch = make_tweets(data_rng, 60, t0=200 + 100 * tick,
+                            match_drugs=0.4)
+        for eng in (capped, oracle):
+            if tick in schedule:
+                eng.set_plan("D", schedule[tick])
+            eng.ingest(batch)
+            rep = eng.execute_all(None, timed=False, deliver=True)["D"]
+            o = rep.overflow
+            check_delivery_conservation(o, rep.num_results, rep.num_notified)
+            p, s = _content(rep)
+            acc[id(eng)][0].extend(p)
+            acc[id(eng)][1].extend(s)
+            if eng is capped:
+                tot["prod_p"] += rep.num_results
+                tot["prod_s"] += rep.num_notified
+    for eng in (capped, oracle):
+        eng.flush_rings()
+        assert eng.ring_flush_drops == 0
+        p, s = _drain_content(eng)
+        acc[id(eng)][0].extend(p)
+        acc[id(eng)][1].extend(s)
+    got_p, got_s = acc[id(capped)]
+    want_p, want_s = acc[id(oracle)]
+    assert len(got_p) == tot["prod_p"] and len(got_s) == tot["prod_s"]
+    assert sorted(got_p) == sorted(want_p)
+    assert sorted(got_s) == sorted(want_s)
+
+
+# ---------------------------------------------------------------------------
+# zero-retrace steady state under a stable (heterogeneous) assignment
+# ---------------------------------------------------------------------------
+
+
+def test_stable_assignment_is_zero_retrace(rng):
+    eng = _multi_engine(rng, ["A", "B"])
+    eng.set_plan("A", ChannelPlan("bad_index", True, True))
+    eng.set_plan("B", ChannelPlan("window", False, True))
+    data_rng = np.random.default_rng(5)
+    for tick in range(2):  # warm both plan-groups' traces
+        eng.ingest(make_tweets(data_rng, 64, t0=1 + 100 * tick,
+                               match_drugs=0.3))
+        eng.execute_all(None, timed=False, deliver=True)
+    snap = eng.maintenance.snapshot()
+    for tick in range(3):
+        eng.ingest(make_tweets(data_rng, 64, t0=500 + 100 * tick,
+                               match_drugs=0.3))
+        eng.execute_all(None, timed=False, deliver=True)
+    d = eng.maintenance.since(snap)
+    assert d.traces == 0 and d.rebuilds == 0
+
+
+# ---------------------------------------------------------------------------
+# planner decision logic (hysteresis, proposals)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Rep:
+    channel: str
+    num_results: int
+    num_notified: int
+    scanned: int
+    overflow: object = None
+
+
+def _planner_engine():
+    eng = BADEngine(dataset_capacity=1024, index_capacity=256,
+                    max_window=256, max_candidates=64)
+    eng.create_channel(tweets_about_drugs())
+    return eng
+
+
+def test_planner_patience_and_cooldown():
+    eng = _planner_engine()
+    planner = RuntimePlanner(eng, PlannerConfig(patience=2, cooldown=4))
+    name = "TweetsAboutDrugs"
+    sparse = {name: _Rep(name, 5, 50, 1000)}     # fanout 10, sel 0.005
+    start = eng.channel_plan(name)
+    assert planner.step(sparse) == []            # streak 1 < patience
+    assert eng.channel_plan(name) == start
+    [sw] = planner.step(sparse)                  # streak 2 -> switch
+    assert sw.new == ChannelPlan("bad_index", True, True)
+    assert eng.channel_plan(name) == sw.new
+    # fanout collapses -> proposal drops aggregation, but the 0.5-EMA only
+    # crosses the 2.0 threshold at tick 6 (10 -> 5.5 -> 3.25 -> 2.125 ->
+    # 1.56) and cooldown covers ticks 3..5 anyway; patience then demands a
+    # second identical proposal, so the switch lands at tick 7
+    lone = {name: _Rep(name, 5, 5, 1000)}        # fanout 1
+    for _ in range(4):                           # ticks 3..6: no switch
+        assert planner.step(lone) == []
+        assert eng.channel_plan(name).aggregation
+    [sw2] = planner.step(lone)                   # tick 7
+    assert sw2.new == ChannelPlan("bad_index", False, True)
+    assert len(planner.switches) == 2
+    assert planner.stable_since() == 7
+
+
+def test_planner_never_proposes_full_and_ratchets_index():
+    eng = _planner_engine()
+    planner = RuntimePlanner(eng)
+    name = "TweetsAboutDrugs"
+    # dense observations: selectivity 0.9 -> a non-indexed channel would
+    # stay on window...
+    planner.observe({name: _Rep(name, 900, 900, 1000)})
+    assert planner.propose(name).scan_mode == "window"
+    # ...but once ON the index, a high observed selectivity (the index
+    # pre-filters what it scans) must not evict it
+    eng.set_plan(name, ChannelPlan("bad_index", True, True))
+    assert planner.propose(name).scan_mode == "bad_index"
+    assert "full" not in {planner.propose(name).scan_mode}
+
+
+def test_overflow_pressure_forces_aggregation():
+    eng = _planner_engine()
+    planner = RuntimePlanner(eng)
+    name = "TweetsAboutDrugs"
+
+    class _Ov:
+        delivered_pairs, spilled_pairs, dropped_pairs = 10, 40, 0
+        delivered_sids, spilled_sids, dropped_sids = 10, 0, 0
+
+    planner.observe({name: _Rep(name, 50, 50, 1000, _Ov())})  # fanout 1
+    prop = planner.propose(name)
+    assert prop.aggregation                      # pressure 0.57 >= 0.25
+
+
+# ---------------------------------------------------------------------------
+# plan spec + offline search / persistence
+# ---------------------------------------------------------------------------
+
+
+def test_channel_plan_validation_and_roundtrip():
+    p = ChannelPlan("bad_index", True, True, "pallas")
+    assert ChannelPlan.from_dict(p.to_dict()) == p
+    assert p.flags.scan_mode == "bad_index"
+    assert ChannelPlan.from_flags(p.flags, "pallas") == p
+    with pytest.raises(ValueError):
+        ChannelPlan("btree")
+    with pytest.raises(ValueError):
+        ChannelPlan(backend="cuda")
+    assert len(enumerate_plans()) == 8
+    assert len(enumerate_plans(backends=BACKENDS)) == 16
+
+
+def test_set_plan_validates_and_reports_change(rng):
+    eng = _multi_engine(rng, ["A"])
+    plan = ChannelPlan("bad_index", True, True)
+    assert eng.set_plan("A", plan) is True
+    assert eng.set_plan("A", plan) is False      # unchanged
+    with pytest.raises(TypeError):
+        eng.set_plan("A", plan.flags)
+    with pytest.raises(KeyError):
+        eng.set_plan("nope", plan)
+    assert eng.plan_assignment() == {"A": plan}
+
+
+def test_search_plans_and_plan_file_roundtrip(rng, tmp_path):
+    eng = _multi_engine(rng, ["A"])
+    eng.ingest(make_tweets(rng, 120, match_drugs=0.3))
+    cands = (ChannelPlan("window", False, True),
+             ChannelPlan("bad_index", True, True))
+    res = qp.search_plans(eng, candidates=cands, repeats=1)
+    assert set(res) == {"A"}
+    assert ChannelPlan.from_dict(res["A"]["best"]) in cands
+    walls = [r["wall_s"] for r in res["A"]["candidates"]]
+    assert walls == sorted(walls) and all(w > 0 for w in walls)
+    best = {n: ChannelPlan.from_dict(r["best"]) for n, r in res.items()}
+    path = tmp_path / "plans.json"
+    qp.save_plans(str(path), best, meta={"k": 1})
+    loaded = qp.load_plans(str(path))
+    assert loaded == best
+    fresh = _multi_engine(np.random.default_rng(0), ["A"])
+    assert qp.apply_plans(fresh, loaded) == int(
+        loaded["A"] != fresh.default_plan())
+    assert fresh.channel_plan("A") == loaded["A"]
+    assert qp.apply_plans(fresh, {"missing": cands[0]}) == 0
