@@ -21,8 +21,9 @@ import time
 import numpy as np
 
 from benchmarks import (aggregation, bad_index, broker_ops, churn, common,
-                        group_size, kernel_perf, max_subscriptions,
-                        multi_channel, query_plan, real_world, scaling)
+                        compact_join, group_size, kernel_perf,
+                        max_subscriptions, multi_channel, query_plan,
+                        real_world, scaling)
 
 SUITES = {
     "fig12_13_group_size": group_size.run,
@@ -36,6 +37,7 @@ SUITES = {
     "kernel_perf": kernel_perf.run,
     "multi_channel": multi_channel.run,
     "churn_sustained": churn.run,
+    "compact_join": compact_join.run,
 }
 
 

@@ -466,6 +466,14 @@ class BADEngine:
         # compiled plan caches (single-channel and fused all-channel), keyed
         # on the specs/flags they close over; cleared on channel create/drop
         self._exec_cache: Dict = {}
+        # adaptive compacted-stream capacities (the "compact"/"compact_pallas"
+        # backends): per plan-group pow2 buckets, grown on overflow (ONE
+        # re-run — the overflowed call reports the exact pre-truncation
+        # total) and halved after sustained low occupancy; a converged
+        # bucket replays cached traces, preserving the zero-retrace steady
+        # state. ``_stream_idle`` counts consecutive low-occupancy runs.
+        self._stream_buckets: Dict = {}
+        self._stream_idle: Dict = {}
         # stacked device state for execute_all: one epoch-tracked entry per
         # layout (aggregated / flat / spatial). With ``incremental`` the
         # aggregated + spatial entries are patched in place from group /
@@ -677,6 +685,8 @@ class BADEngine:
         self.index_state = new
         self._ingest_fn = None  # shapes changed; re-trace
         self._exec_cache.clear()  # compiled plans bind conds + channel rows
+        self._stream_buckets.clear()  # compact stream caps re-converge
+        self._stream_idle.clear()
         # stacked caches track per-channel epochs; a same-named channel
         # re-created at epoch 0 would collide, so drop them here too
         self._stacked_cache.clear()
@@ -803,14 +813,24 @@ class BADEngine:
         return jnp.asarray(flat.sids)[:, None]
 
     def _exec_fn(self, channel: str, flags: plans.ExecutionFlags,
-                 spatial: bool, max_cand: Optional[int] = None) -> Callable:
+                 spatial: bool, max_cand: Optional[int] = None,
+                 backend: Optional[str] = None,
+                 stream_cap: int = 0) -> Callable:
         """Compiled single-channel plan, cached by everything it closes over:
         the (frozen) spec, flags, and the channel's index row. Keying on the
         spec — not the name — means re-creating a same-named channel with new
         predicates can never be served a stale plan; the cache itself lives on
-        the engine and is cleared on channel create/drop."""
+        the engine and is cleared on channel create/drop.
+
+        ``backend`` overrides the engine backend (so plan search can time
+        every backend, compact included); the compact backends run the
+        single-channel pipeline as a C==1 compacted stream of ``stream_cap``
+        entries. The compiled function returns ``(result, stream_total)`` —
+        total is 0 on the padded backends."""
         st = self.channels[channel]
-        key = (st.spec, flags, spatial, max_cand, st.index)
+        backend = backend or ("pallas" if self.use_pallas else "oracle")
+        key = (st.spec, flags, spatial, max_cand, st.index, backend,
+               stream_cap)
         cached = self._exec_cache.get(key)
         if cached is not None:
             return cached
@@ -821,7 +841,12 @@ class BADEngine:
         max_window = self.max_window
         max_cand = max_cand or self.max_candidates
         num_brokers = self.brokers.num_brokers
-        use_pallas = self.use_pallas
+        use_pallas = plans.backend_family(backend) == "pallas"
+        compact = plans.is_compact(backend)
+        join_fn = None
+        if backend == "compact_pallas":
+            from repro.kernels.join_compact import ops as jc_ops
+            join_fn = jc_ops.join_pairs
         ch_idx = st.index
 
         maint = self.maintenance
@@ -838,18 +863,44 @@ class BADEngine:
                                                    last_size, max_window, max_cand)
             else:
                 cand = plans.candidates_bad_index(ds, index_state, ch_idx, max_cand)
+            if compact:
+                # C==1 compacted stream: same code path as the fused groups
+                cand1 = jax.tree.map(lambda a: a[None], cand)
+                stream = plans.compact_candidates(cand1, stream_cap)
+                if spatial:
+                    sj = plans.join_spatial_stream(
+                        ds, stream, user_locations[None], user_brokers[None],
+                        jnp.asarray([spec.spatial_radius], jnp.float32),
+                        jnp.asarray([spec.payload_bytes], jnp.int32),
+                        num_brokers)
+                else:
+                    sj = plans.join_param_stream(
+                        ds, stream, jax.tree.map(lambda a: a[None], targets),
+                        jnp.asarray([spec.param_field], jnp.int32),
+                        jnp.asarray([spec.payload_bytes], jnp.int32),
+                        num_brokers,
+                        up_mask[None] if flags.param_pushdown else None,
+                        flags.aggregation,
+                        jnp.asarray([targets.by_param.shape[0]], jnp.int32),
+                        join_fn)
+                width = min(stream_cap, cand.rows.shape[0])
+                res1 = plans.stream_to_stacked(sj, stream, cand1.scanned,
+                                               width)
+                return (jax.tree.map(lambda a: a[0], res1), stream.total)
             if spatial:
                 spatial_fn = None
                 if use_pallas:
                     from repro.kernels.spatial_match import ops as sm_ops
                     spatial_fn = sm_ops.spatial_match
-                return plans.join_spatial(ds, cand, user_locations, user_brokers,
-                                          spec.spatial_radius, spec.payload_bytes,
-                                          num_brokers, spatial_fn)
-            return plans.join_param_targets(
+                return (plans.join_spatial(ds, cand, user_locations,
+                                           user_brokers, spec.spatial_radius,
+                                           spec.payload_bytes, num_brokers,
+                                           spatial_fn),
+                        jnp.zeros((), jnp.int32))
+            return (plans.join_param_targets(
                 ds, cand, targets, spec.param_field, spec.payload_bytes,
                 num_brokers, up_mask if flags.param_pushdown else None,
-                flags.aggregation)
+                flags.aggregation), jnp.zeros((), jnp.int32))
 
         fn = jax.jit(run)
         self._cache_put(key, fn)
@@ -979,9 +1030,11 @@ class BADEngine:
                         flags: plans.ExecutionFlags,
                         advance: bool = True,
                         timed: bool = True,
-                        deliver: bool = False) -> ExecutionReport:
+                        deliver: bool = False,
+                        backend: Optional[str] = None) -> ExecutionReport:
         st = self.channels[channel]
         spatial = st.spec.join == "spatial"
+        backend = backend or ("pallas" if self.use_pallas else "oracle")
         # The BAD index knows its exact candidate count before execution (the
         # watermark delta) — unlike scans/traditional indexes — so downstream
         # buffers are shape-bucketed to the real volume ("early result
@@ -992,19 +1045,41 @@ class BADEngine:
                           - self.index_state.watermarks[st.index])
             bucket = _pow2_bucket(pending, 6)
             max_cand = min(bucket, self.max_candidates)
-        fn = self._exec_fn(channel, flags, spatial, max_cand)
         targets = self._targets(st, flags.aggregation)
         up_mask = st.user_params.mask()
         args = (self.dataset, self.index_state, targets, up_mask,
                 jnp.asarray(st.last_exec_ts, jnp.int32),
                 jnp.asarray(st.last_exec_size, jnp.int32),
                 *self._channel_users(st))
-        if timed:  # warm the trace so wall time measures execution, not tracing
-            jax.block_until_ready(fn(*args))
-        t0 = time.perf_counter()
-        result = fn(*args)
-        jax.block_until_ready(result.num_results)
-        wall = time.perf_counter() - t0
+        if plans.is_compact(backend):
+            # per-channel grow-on-overflow, same protocol as the fused path
+            key = ("chan", channel, flags, spatial)
+            width = (self.max_window if flags.scan_mode == "window"
+                     else (max_cand or self.max_candidates))
+            stream_cap = min(self._stream_buckets.get(key, 1 << _STREAM_FLOOR),
+                             _pow2_bucket(width, _STREAM_FLOOR))
+            while True:
+                fn = self._exec_fn(channel, flags, spatial, max_cand,
+                                   backend, stream_cap)
+                if timed:  # warm so wall time measures execution, not tracing
+                    jax.block_until_ready(fn(*args))
+                t0 = time.perf_counter()
+                result, tot = fn(*args)
+                jax.block_until_ready(result.num_results)
+                wall = time.perf_counter() - t0
+                if int(jax.device_get(tot)) <= stream_cap:
+                    break
+                stream_cap = _pow2_bucket(int(jax.device_get(tot)),
+                                          _STREAM_FLOOR)
+            self._stream_buckets[key] = stream_cap
+        else:
+            fn = self._exec_fn(channel, flags, spatial, max_cand, backend)
+            if timed:  # warm the trace so wall time measures execution
+                jax.block_until_ready(fn(*args))
+            t0 = time.perf_counter()
+            result, _tot = fn(*args)
+            jax.block_until_ready(result.num_results)
+            wall = time.perf_counter() - t0
         if advance:
             self.index_state = bidx.advance_watermark(self.index_state, st.index)
             st.last_exec_ts = self.now
@@ -1511,16 +1586,25 @@ class BADEngine:
     def _exec_all_fn(self, param_chs: List[ChannelState],
                      spatial_chs: List[ChannelState],
                      plan: plans.ChannelPlan, max_cand: int,
-                     deliver: bool = False) -> Callable:
+                     deliver: bool = False, p_stream: int = 0,
+                     s_stream: int = 0) -> Callable:
         """ONE compiled plan for every channel of a plan-group: stacked
         candidate discovery per join group (param / spatial), vmapped joins,
-        fused broker accounting. With ``plan.backend == "pallas"`` the
-        discovery runs the Pallas ``predicate_filter`` kernel and the
-        spatial join the Pallas ``spatial_match`` kernel (both batched over
-        the channel axis). With ``deliver`` the broker convert+send stages
-        (``deliver_all``) run in the SAME call — no host round-trip between
-        discovery and fanout."""
-        key = ("all", plan, max_cand, deliver,
+        fused broker accounting. With a pallas-family backend the discovery
+        runs the Pallas ``predicate_filter`` kernel and the spatial join the
+        Pallas ``spatial_match`` kernel (both batched over the channel
+        axis). The compact backends additionally compress the discovered
+        candidates into a channel-major CSR stream (``p_stream`` /
+        ``s_stream`` capacities, chosen by ``_run_compact_group``) and run
+        the join + accounting over live entries only, scattering back to the
+        stacked layout so delivery is bit-identical to the padded path. With
+        ``deliver`` the broker convert+send stages (``deliver_all``) run in
+        the SAME call — no host round-trip between discovery and fanout.
+
+        Returns ``(res_p, res_s, del_p, del_s, (tot_p, tot_s))`` — the
+        totals are the pre-truncation live-candidate counts (0 on the padded
+        backends), read by the grow loop to detect stream overflow."""
+        key = ("all", plan, max_cand, deliver, p_stream, s_stream,
                tuple((st.spec, st.index) for st in param_chs),
                tuple((st.spec, st.index) for st in spatial_chs))
         cached = self._exec_cache.get(key)
@@ -1532,11 +1616,16 @@ class BADEngine:
         scan_mode = plan.scan_mode
         pushdown = plan.param_pushdown
         aggregated = plan.aggregation
-        use_pallas = plan.backend == "pallas"
+        use_pallas = plans.backend_family(plan.backend) == "pallas"
+        compact = plans.is_compact(plan.backend)
+        join_fn = None
         if use_pallas:
             from repro.kernels.predicate_filter import ops as pf_ops
             from repro.kernels.spatial_match import ops as sm_ops
             spatial_fn = sm_ops.spatial_match
+            if plan.backend == "compact_pallas":
+                from repro.kernels.join_compact import ops as jc_ops
+                join_fn = jc_ops.join_pairs
         else:
             spatial_fn = None
 
@@ -1583,14 +1672,27 @@ class BADEngine:
         def run(ds, index_state, p_in, s_in):
             maint.traces += 1          # trace-time side effect: counts traces
             res_p = res_s = del_p = del_s = None
+            tot_p = tot_s = jnp.zeros((), jnp.int32)
             if p_static is not None:
                 cand = discover(ds, index_state, p_static,
                                 p_in["last_ts"], p_in["last_size"])
-                res_p = plans.join_param_targets_all(
-                    ds, cand, p_in["targets"], p_in["param_field"],
-                    p_in["payload"], num_brokers,
-                    p_in["up_masks"] if pushdown else None, aggregated,
-                    p_in["domains"])
+                if compact:
+                    stream = plans.compact_candidates(cand, p_stream)
+                    tot_p = stream.total
+                    sj = plans.join_param_stream(
+                        ds, stream, p_in["targets"], p_in["param_field"],
+                        p_in["payload"], num_brokers,
+                        p_in["up_masks"] if pushdown else None, aggregated,
+                        p_in["domains"], join_fn)
+                    res_p = plans.stream_to_stacked(
+                        sj, stream, cand.scanned,
+                        min(p_stream, cand.rows.shape[1]))
+                else:
+                    res_p = plans.join_param_targets_all(
+                        ds, cand, p_in["targets"], p_in["param_field"],
+                        p_in["payload"], num_brokers,
+                        p_in["up_masks"] if pushdown else None, aggregated,
+                        p_in["domains"])
                 if deliver:
                     del_p = deliver_all(
                         res_p, p_in["sids"], pw, mp, mn, sc,
@@ -1601,16 +1703,26 @@ class BADEngine:
             if s_static is not None:
                 cand = discover(ds, index_state, s_static,
                                 s_in["last_ts"], s_in["last_size"])
-                res_s = plans.join_spatial_all(
-                    ds, cand, s_in["locs"], s_in["brokers"], radii,
-                    s_in["payload"], num_brokers, spatial_fn)
+                if compact:
+                    stream = plans.compact_candidates(cand, s_stream)
+                    tot_s = stream.total
+                    sj = plans.join_spatial_stream(
+                        ds, stream, s_in["locs"], s_in["brokers"], radii,
+                        s_in["payload"], num_brokers)
+                    res_s = plans.stream_to_stacked(
+                        sj, stream, cand.scanned,
+                        min(s_stream, cand.rows.shape[1]))
+                else:
+                    res_s = plans.join_spatial_all(
+                        ds, cand, s_in["locs"], s_in["brokers"], radii,
+                        s_in["payload"], num_brokers, spatial_fn)
                 if deliver:
                     del_s = deliver_all(
                         res_s, s_in["sids"], pw, mp, mn, sc,
                         target_brokers=s_in["brokers"],
                         num_brokers=num_brokers,
                         ring=s_in.get("ring"), epochs=s_in.get("epochs"))
-            return res_p, res_s, del_p, del_s
+            return res_p, res_s, del_p, del_s, (tot_p, tot_s)
 
         fn = jax.jit(run)
         self._cache_put(key, fn)
@@ -1716,8 +1828,6 @@ class BADEngine:
                           for st in chans)
             bucket = _pow2_bucket(pending, 6)
             max_cand = min(bucket, self.max_candidates)
-        fn = self._exec_all_fn(param_chs, spatial_chs, plan, max_cand,
-                               deliver)
         # The fused aggregated targets of an incremental engine are SLOT
         # indices (free slots padded) and its flat targets are FLAT-slot
         # indices — not build()'s compacted rows — tag their spills with the
@@ -1769,12 +1879,19 @@ class BADEngine:
                     s_in["epochs"] = jnp.asarray(
                         [st.epoch for st in spatial_chs], jnp.int32)
         args = (self.dataset, self.index_state, p_in, s_in)
-        if timed:  # warm the trace so wall time measures execution
-            jax.block_until_ready(fn(*args))
-        t0 = time.perf_counter()
-        res_p, res_s, del_p, del_s = fn(*args)
-        jax.block_until_ready((res_p, res_s, del_p, del_s))
-        wall = time.perf_counter() - t0
+        if plans.is_compact(plan.backend):
+            res, wall = self._run_compact_group(
+                plan, param_chs, spatial_chs, max_cand, deliver, args, timed)
+        else:
+            fn = self._exec_all_fn(param_chs, spatial_chs, plan, max_cand,
+                                   deliver)
+            if timed:  # warm the trace so wall time measures execution
+                jax.block_until_ready(fn(*args))
+            t0 = time.perf_counter()
+            res = fn(*args)
+            jax.block_until_ready(res)
+            wall = time.perf_counter() - t0
+        res_p, res_s, del_p, del_s, _tots = res
         # One bulk device->host transfer per join group, then per-channel
         # numpy views: the per-channel path's int()/slice pattern would cost
         # dozens of device round-trips here. Delivery stats arrive the same
@@ -1814,6 +1931,62 @@ class BADEngine:
                     overflow=stats.get(st.spec.name),
                     payload=None if pay is None else pay[i],
                     notify=None if noti is None else noti[i])
+
+    def _run_compact_group(self, plan: plans.ChannelPlan,
+                           param_chs: List[ChannelState],
+                           spatial_chs: List[ChannelState],
+                           max_cand: int, deliver: bool,
+                           args: tuple, timed: bool):
+        """Run one compact plan-group under the adaptive stream-capacity
+        protocol (see the ``_STREAM_FLOOR`` note): per (kind, plan,
+        membership) key, start from the remembered bucket, grow straight to
+        the observed live total's power-of-two bucket when the stream
+        overflowed (re-running ONCE — discovery is pure, and a truncated
+        run's outputs are discarded before any delivery or ring state
+        escapes, so re-presenting the same ring is safe), and halve the
+        bucket after ``_STREAM_PATIENCE`` consecutive runs at <= half
+        occupancy. Returns the final run's 5-tuple and its wall time."""
+        width = self.max_window if plan.scan_mode == "window" else max_cand
+        floor = 1 << _STREAM_FLOOR
+        p_key = ("param", plan, tuple(st.spec.name for st in param_chs))
+        s_key = ("spatial", plan, tuple(st.spec.name for st in spatial_chs))
+        p_cap = (min(self._stream_buckets.get(p_key, floor),
+                     _pow2_bucket(len(param_chs) * width, _STREAM_FLOOR))
+                 if param_chs else 0)
+        s_cap = (min(self._stream_buckets.get(s_key, floor),
+                     _pow2_bucket(len(spatial_chs) * width, _STREAM_FLOOR))
+                 if spatial_chs else 0)
+        while True:
+            fn = self._exec_all_fn(param_chs, spatial_chs, plan, max_cand,
+                                   deliver, p_cap, s_cap)
+            if timed:  # warm the trace so wall time measures execution
+                jax.block_until_ready(fn(*args))
+            t0 = time.perf_counter()
+            res = fn(*args)
+            jax.block_until_ready(res)
+            wall = time.perf_counter() - t0
+            tot_p, tot_s = (int(x) for x in jax.device_get(res[4]))
+            grew = False
+            if param_chs and tot_p > p_cap:
+                p_cap, grew = _pow2_bucket(tot_p, _STREAM_FLOOR), True
+            if spatial_chs and tot_s > s_cap:
+                s_cap, grew = _pow2_bucket(tot_s, _STREAM_FLOOR), True
+            if not grew:
+                break
+        for key, cap, tot, live in ((p_key, p_cap, tot_p, bool(param_chs)),
+                                    (s_key, s_cap, tot_s,
+                                     bool(spatial_chs))):
+            if not live:
+                continue
+            if cap > floor and tot <= cap // 2:
+                idle = self._stream_idle.get(key, 0) + 1
+                if idle >= _STREAM_PATIENCE:
+                    cap, idle = cap // 2, 0
+                self._stream_idle[key] = idle
+            else:
+                self._stream_idle[key] = 0
+            self._stream_buckets[key] = cap
+        return res, wall
 
     # ------------------------------------------------------------------
     # device-resident retry rings
@@ -1913,7 +2086,7 @@ class BADEngine:
         return plans.ChannelResult(
             jnp.asarray(r)[:, None], jnp.asarray(t)[:, None],
             jnp.asarray(valid)[:, None], jnp.asarray(r), jnp.asarray(valid),
-            z, z, z, jnp.zeros((nb,), jnp.float32), jnp.zeros((nb,), jnp.int32))
+            z, z, z, jnp.zeros((nb,), jnp.int32), jnp.zeros((nb,), jnp.int32))
 
     def drain_spilled(self) -> Dict[str, DrainReport]:
         """Re-deliver spilled notifications, exactly once per stage.
@@ -2014,6 +2187,17 @@ def _pow2_bucket(n: int, floor_bits: int) -> int:
     """Smallest power of two >= n, clamped below by 2**floor_bits. Shared by
     every shape-bucketing site so fused and per-channel traces agree."""
     return 1 << max(floor_bits, (max(n, 1) - 1).bit_length())
+
+
+# Compacted-stream capacity policy: streams start at 2**_STREAM_FLOOR
+# entries, grow straight to the power-of-two bucket of the observed live
+# total on overflow (ONE re-run — the truncated run's outputs are discarded,
+# never delivered, so re-presenting the same ring to the re-run is safe),
+# and halve after _STREAM_PATIENCE consecutive runs at <= half occupancy.
+# Buckets converge to the workload's live-candidate envelope, after which
+# the (plan, bucket) cache key is stable: zero retraces at steady state.
+_STREAM_FLOOR = 7
+_STREAM_PATIENCE = 8
 
 
 def _pred_rank(p) -> int:

@@ -43,6 +43,7 @@ class PlannerConfig:
     dense_selectivity: float = 0.5   # results/scanned above -> window scan
     agg_fanout: float = 2.0          # notified/results above -> aggregate
     overflow_pressure: float = 0.25  # (spilled+dropped)/produced above -> agg
+    compact_selectivity: float = 0.15  # window-scan sel below -> compact join
     param_pushdown: bool = True      # proposed for every param-join channel
     backend: Optional[str] = None    # force a backend; None keeps current
 
@@ -112,8 +113,17 @@ class RuntimePlanner:
                             + o.dropped_pairs + o.delivered_sids
                             + o.spilled_sids + o.dropped_sids)
                 if produced:
-                    prs = (o.spilled_pairs + o.dropped_pairs
-                           + o.spilled_sids + o.dropped_sids) / produced
+                    # ring-resident entries count as spilled EVERY call they
+                    # are re-presented (the conservation identity needs
+                    # that), so raw spill counts overstate pressure exactly
+                    # when the retry ring is absorbing the overflow —
+                    # subtract the retried volume so a ring doing its job
+                    # doesn't flip the channel to aggregated
+                    retried = (getattr(o, "retried_pairs", 0)
+                               + getattr(o, "retried_sids", 0))
+                    prs = max(0, (o.spilled_pairs + o.dropped_pairs
+                                  + o.spilled_sids + o.dropped_sids)
+                              - retried) / produced
             self.obs.setdefault(name, ChannelObservation()).update(
                 sel, fan, prs, cfg.ema)
 
@@ -150,6 +160,20 @@ class RuntimePlanner:
                or ob.pressure >= cfg.overflow_pressure)
         pushdown = cfg.param_pushdown and st.spec.join == "param"
         backend = cfg.backend or cur.backend
+        if cfg.backend is None:
+            # the compact join pays off when a wide scan yields few live
+            # candidates but the channel cannot use the BAD index (no fixed
+            # predicates pins it to a window scan): the padded grid is
+            # mostly dead slots and the CSR stream collapses it. Dense
+            # channels propose the padded fused join of the same backend
+            # family (compaction would just add scatter overhead).
+            if (scan == "window" and not st.spec.fixed_preds
+                    and ob.selectivity < cfg.compact_selectivity):
+                backend = plans.compact_variant(backend)
+            else:
+                backend = ("pallas"
+                           if plans.backend_family(backend) == "pallas"
+                           else "oracle")
         return ChannelPlan(scan, agg, pushdown, backend)
 
     def step(self, reports: Dict) -> List[PlanSwitch]:
@@ -200,20 +224,28 @@ def search_plans(engine, candidates: Optional[Tuple[ChannelPlan, ...]] = None,
     The offline analogue of the runtime planner: measures real per-channel
     ``execute_channel`` wall time (best of ``repeats``, post-warm) for each
     candidate, like ``launch/hillclimb.py`` measures re-lowered variants
-    against a baseline. Candidates default to every (scan x layout) under
-    the engine's current backend — ``execute_channel`` runs the engine
-    backend, so foreign-backend candidates would be mistimed. Watermarks are
-    left untouched (``advance=False``): searching must not consume the BAD
-    index's pending deltas."""
+    against a baseline. One untimed warmup execution per candidate compiles
+    its trace (and, for the compact backends, converges the stream-capacity
+    bucket) BEFORE the timed repeats, so winners are chosen by execution
+    time, never by compile time. Candidates default to every (scan x layout)
+    under the engine's backend family plus its compact variant; each
+    candidate runs under its own ``plan.backend`` via the
+    ``execute_channel`` backend override. Watermarks are left untouched
+    (``advance=False``): searching must not consume the BAD index's pending
+    deltas."""
     if candidates is None:
         backend = "pallas" if engine.use_pallas else "oracle"
-        candidates = plans.enumerate_plans(backends=(backend,))
+        candidates = plans.enumerate_plans(
+            backends=(backend, plans.compact_variant(backend)))
     out: Dict[str, dict] = {}
     for name in engine.channels:
         rows = []
         for cand in candidates:
+            engine.execute_channel(name, cand.flags, advance=False,
+                                   timed=False, backend=cand.backend)
             walls = [engine.execute_channel(name, cand.flags, advance=False,
-                                            timed=True).wall_time_s
+                                            timed=True,
+                                            backend=cand.backend).wall_time_s
                      for _ in range(repeats)]
             rows.append({"plan": cand.to_dict(),
                          "wall_s": float(np.min(walls))})

@@ -27,7 +27,28 @@ from repro.core.predicates import CompiledConditions, apply_op, evaluate_conditi
 from repro.core.user_params import semi_join
 
 SCAN_MODES = ("full", "window", "trad_index", "bad_index")
-BACKENDS = ("oracle", "pallas")
+# Kernel backends come in two families (oracle = pure jnp, pallas = the
+# Pallas kernels) x two join formulations: padded ("oracle"/"pallas" — the
+# stacked C x shape-bucket x member-cap pair grid) and compacted
+# ("compact"/"compact_pallas" — the flat CSR candidate stream below, where
+# join cost scales with LIVE candidates instead of padding).
+BACKENDS = ("oracle", "pallas", "compact", "compact_pallas")
+
+
+def backend_family(backend: str) -> str:
+    """The kernel family ("oracle" | "pallas") of any backend name."""
+    return "pallas" if backend in ("pallas", "compact_pallas") else "oracle"
+
+
+def is_compact(backend: str) -> bool:
+    """True for the compacted-stream join formulation."""
+    return backend in ("compact", "compact_pallas")
+
+
+def compact_variant(backend: str) -> str:
+    """The compacted-stream backend of the given backend's family."""
+    return "compact_pallas" if backend_family(backend) == "pallas" \
+        else "compact"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,7 +147,7 @@ class ChannelResult(NamedTuple):
     num_results: jnp.ndarray   # () int32 -- result records produced (pairs)
     num_notified: jnp.ndarray  # () int32 -- end subscribers covered
     scanned: jnp.ndarray       # () int32
-    broker_bytes: jnp.ndarray  # (B,) f32 platform->broker traffic (bytes)
+    broker_bytes: jnp.ndarray  # (B,) i32 platform->broker traffic (bytes)
     broker_results: jnp.ndarray  # (B,) int32 results per broker
 
 
@@ -236,8 +257,10 @@ def join_param_targets(ds: R.ActiveDataset, cand: CandidateSet,
     num_notified = jnp.sum(members.astype(jnp.int32))
     # Platform->broker traffic: one payload per result pair; aggregated pairs
     # additionally carry the member sID list (4 B each) -- paper §4.1.2.
+    # Byte totals accumulate in int32 end-to-end (exact to 2^31 bytes per
+    # (channel, broker) per tick; float32 would silently round past 2^24).
     per_pair_bytes = payload_bytes + (4 * members if aggregated else jnp.zeros_like(members))
-    pair_bytes = jnp.where(pair_valid, per_pair_bytes, 0).astype(jnp.float32)
+    pair_bytes = jnp.where(pair_valid, per_pair_bytes, 0).astype(jnp.int32)
     bids = jnp.where(pair_valid, targets.brokers[tgt_safe], num_brokers)
     if fused:
         # Per-broker masked reductions: each is an (Rm, maxT) elementwise
@@ -246,7 +269,7 @@ def join_param_targets(ds: R.ActiveDataset, cand: CandidateSet,
         # == num_brokers and match no broker; counts stay integer end-to-end
         # (float32 accumulation would silently round past 2^24 pairs).
         broker_bytes = jnp.stack(
-            [jnp.sum(jnp.where(bids == b, pair_bytes, 0.0))
+            [jnp.sum(jnp.where(bids == b, pair_bytes, 0))
              for b in range(num_brokers)])
         broker_results = jnp.stack(
             [jnp.sum((bids == b).astype(jnp.int32))
@@ -285,10 +308,10 @@ def join_spatial(ds: R.ActiveDataset, cand: CandidateSet,
     pair_targets = jnp.where(pair_valid, jnp.arange(U, dtype=jnp.int32)[None, :], -1)
     num_results = jnp.sum(pair_valid.astype(jnp.int32))
     bids = jnp.where(pair_valid, user_brokers[None, :], num_brokers)
-    pair_bytes = jnp.where(pair_valid, payload_bytes, 0).astype(jnp.float32)
+    pair_bytes = jnp.where(pair_valid, payload_bytes, 0).astype(jnp.int32)
     if fused:
         broker_bytes = jnp.stack(
-            [jnp.sum(jnp.where(bids == b, pair_bytes, 0.0))
+            [jnp.sum(jnp.where(bids == b, pair_bytes, 0))
              for b in range(num_brokers)])
         broker_results = jnp.stack(
             [jnp.sum((bids == b).astype(jnp.int32))
@@ -464,8 +487,9 @@ def join_spatial_all(ds: R.ActiveDataset, cand: CandidateSet,
 # capture (dropped pairs/sIDs keep their channel identity; the broker fills
 # them by per-channel-window gathers). The flatten_* builders below are the
 # standalone scatter-compaction API over arbitrary masks — exercised by the
-# property suites and the landing zone for eventually routing the fused join
-# output itself through a compacted stream (ROADMAP).
+# property suites. The compacted execution join (CandStream and the
+# join_*_stream functions further down) routes the fused join itself through
+# the same formulation.
 # ---------------------------------------------------------------------------
 
 
@@ -553,6 +577,195 @@ def flatten_values_all(values: jnp.ndarray, mask: jnp.ndarray,
         jnp.where(valid, vals.reshape(-1)[idx], neg),
         jnp.where(valid, (idx // per).astype(jnp.int32), neg),
         valid, total)
+
+
+# ---------------------------------------------------------------------------
+# Compacted execution join: the "compact"/"compact_pallas" backends. After
+# stacked discovery, live candidates across ALL channels compact into one flat
+# channel-major CandStream (the same CSR prefix-sum/scatter formulation as
+# flatten_pairs_all); the param/spatial join, member-count gather, and broker
+# accounting then run over that stream, so execution cost scales with live
+# candidates instead of the padded C x shape-bucket grid. stream_to_stacked
+# re-presents the stream join as a standard stacked ChannelResult (contiguous
+# per-channel segments), so deliver_all — ring semantics, per-channel caps,
+# conservation — runs verbatim; because the compaction is stable and
+# channel-major, each channel's valid pairs appear in EXACTLY the padded
+# path's ravel order, making delivery pair-for-pair identical under caps.
+# ---------------------------------------------------------------------------
+
+
+class CandStream(NamedTuple):
+    """Flat channel-major compacted candidate stream.
+
+    ``counts`` / ``total`` are PRE-truncation (sum over the discovery masks):
+    ``total > rows.shape[0]`` means the stream overflowed its static capacity
+    and the caller must re-run with a larger one (the engine's grow-on-
+    overflow protocol — a truncated stream's results are never used).
+    ``channels`` is 0 on invalid slots (safe as a gather index)."""
+
+    rows: jnp.ndarray      # (S,) int32 record row ids, -1 on invalid slots
+    channels: jnp.ndarray  # (S,) int32 owning channel, 0 on invalid slots
+    valid: jnp.ndarray     # (S,) bool
+    counts: jnp.ndarray    # (C,) int32 per-channel live counts
+    total: jnp.ndarray     # () int32
+
+
+class StreamJoin(NamedTuple):
+    """Per-entry join output over a CandStream: (S, maxT) pair grids plus
+    per-channel (C,) accounting, ready for ``stream_to_stacked``."""
+
+    pair_rows: jnp.ndarray       # (S, maxT) int32
+    pair_targets: jnp.ndarray    # (S, maxT) int32
+    pair_valid: jnp.ndarray      # (S, maxT) bool
+    matched_rows: jnp.ndarray    # (S,) int32
+    matched_valid: jnp.ndarray   # (S,) bool
+    num_results: jnp.ndarray     # (C,) int32
+    num_notified: jnp.ndarray    # (C,) int32
+    broker_bytes: jnp.ndarray    # (C, B) int32
+    broker_results: jnp.ndarray  # (C, B) int32
+
+
+def compact_candidates(cand: CandidateSet, max_total: int) -> CandStream:
+    """Compact a stacked (C, Rm) CandidateSet into one flat channel-major
+    stream of at most ``max_total`` live candidates. Stable: within a
+    channel, candidates keep their discovery order."""
+    C, Rm = cand.rows.shape
+    idx, valid, total = _compact_flat_indices(cand.valid.reshape(-1),
+                                              max_total)
+    rows = jnp.where(valid, cand.rows.reshape(-1)[idx], -1)
+    channels = jnp.where(valid, (idx // Rm).astype(jnp.int32), 0)
+    counts = jnp.sum(cand.valid.astype(jnp.int32), axis=1)
+    return CandStream(rows, channels, valid, counts, total)
+
+
+def join_param_stream(ds: R.ActiveDataset, stream: CandStream,
+                      targets: TargetArrays, param_field: jnp.ndarray,
+                      payload_bytes: jnp.ndarray, num_brokers: int,
+                      up_mask: Optional[jnp.ndarray], aggregated: bool,
+                      domain: jnp.ndarray, join_fn=None) -> StreamJoin:
+    """``join_param_targets_all`` over a compacted stream: every gather is
+    per stream ENTRY (channel id -> that channel's stacked tables), so work
+    is O(S x maxT) instead of O(C x Rm x maxT). ``targets`` and the
+    (C,)-shaped scalars are the same stacked inputs the padded path uses.
+    ``join_fn`` is the pair-expansion hook (``kernels/join_compact``): the
+    jnp ref by default, the Pallas kernel under "compact_pallas"."""
+    if join_fn is None:
+        from repro.kernels.join_compact import ref as jc_ref
+        join_fn = jc_ref.join_pairs
+    ch = stream.channels
+    slots = jnp.maximum(stream.rows, 0) % ds.capacity
+    pvals = ds.fields[slots, param_field[ch]]               # (S,)
+    valid = stream.valid
+    if up_mask is not None:
+        # per-entry semi_join (Fig. 9(b)): same clip/in-domain semantics
+        dom_max = up_mask.shape[1]
+        clipped = jnp.clip(pvals, 0, dom_max - 1)
+        in_dom = (pvals >= 0) & (pvals < dom_max)
+        valid = valid & up_mask[ch, clipped] & in_dom
+    pv = jnp.clip(pvals, 0, domain[ch] - 1)
+    tgt = targets.by_param[ch, pv]                          # (S, maxT)
+    tgt_n = targets.by_param_count[ch, pv]                  # (S,)
+    tgt_safe = jnp.maximum(tgt, 0)
+    members_tbl = targets.counts[ch[:, None], tgt_safe]     # (S, maxT)
+    bids_tbl = targets.brokers[ch[:, None], tgt_safe]       # (S, maxT)
+    pair_valid, members, pair_bytes, bids = join_fn(
+        tgt, tgt_n, members_tbl, bids_tbl, valid, payload_bytes[ch],
+        num_brokers, aggregated)
+    pair_rows = jnp.where(pair_valid, stream.rows[:, None], -1)
+    pair_targets = jnp.where(pair_valid, tgt, -1)
+    return StreamJoin(
+        pair_rows, pair_targets, pair_valid,
+        jnp.where(valid, stream.rows, -1), valid,
+        *_stream_accounting(ch, pair_valid, members, pair_bytes, bids,
+                            param_field.shape[0], num_brokers))
+
+
+def join_spatial_stream(ds: R.ActiveDataset, stream: CandStream,
+                        user_locations: jnp.ndarray, user_brokers: jnp.ndarray,
+                        radius: jnp.ndarray, payload_bytes: jnp.ndarray,
+                        num_brokers: int) -> StreamJoin:
+    """``join_spatial_all`` over a compacted stream: each entry gathers its
+    channel's user set and evaluates the euclidean oracle formula (the MXU
+    spatial kernel's |t|^2+|u|^2-2t.u form is tied to the per-channel dense
+    layout and rounds differently at boundaries — the compact family keeps
+    the oracle formula for both backends, so compacted spatial results are
+    bitwise identical to the padded oracle path)."""
+    ch = stream.channels
+    slots = jnp.maximum(stream.rows, 0) % ds.capacity
+    locs = ds.location[slots]                               # (S, 2)
+    ulocs = user_locations[ch]                              # (S, U, 2)
+    d = locs[:, None, :] - ulocs
+    hits = jnp.sum(d * d, axis=-1) < radius[ch][:, None] ** 2
+    pair_valid = hits & stream.valid[:, None]               # (S, U)
+    U = user_locations.shape[1]
+    pair_rows = jnp.where(pair_valid, stream.rows[:, None], -1)
+    pair_targets = jnp.where(
+        pair_valid, jnp.arange(U, dtype=jnp.int32)[None, :], -1)
+    members = pair_valid.astype(jnp.int32)
+    pair_bytes = jnp.where(pair_valid, payload_bytes[ch][:, None],
+                           0).astype(jnp.int32)
+    bids = jnp.where(pair_valid, user_brokers[ch], num_brokers)
+    num_results, num_notified, broker_bytes, broker_results = \
+        _stream_accounting(ch, pair_valid, members, pair_bytes, bids,
+                           user_locations.shape[0], num_brokers)
+    return StreamJoin(pair_rows, pair_targets, pair_valid,
+                      jnp.where(stream.valid, stream.rows, -1), stream.valid,
+                      num_results, num_results, broker_bytes, broker_results)
+
+
+def _stream_accounting(ch: jnp.ndarray, pair_valid: jnp.ndarray,
+                       members: jnp.ndarray, pair_bytes: jnp.ndarray,
+                       bids: jnp.ndarray, num_channels: int,
+                       num_brokers: int):
+    """Per-channel result/notify/broker accounting over a flat stream: ONE
+    segment_sum per quantity with segment = channel x (broker + sentinel)
+    (unvmapped, so the scatter-add lowering is fine; invalid pairs carry the
+    sentinel broker id == num_brokers, dropped by the slice)."""
+    nb1 = num_brokers + 1
+    seg = ch[:, None] * nb1 + bids                          # (S, maxT)
+    broker_bytes = jax.ops.segment_sum(
+        pair_bytes.ravel(), seg.ravel(),
+        num_segments=num_channels * nb1).reshape(
+            num_channels, nb1)[:, :-1]
+    pvc = pair_valid.astype(jnp.int32)
+    broker_results = jax.ops.segment_sum(
+        pvc.ravel(), seg.ravel(),
+        num_segments=num_channels * nb1).reshape(
+            num_channels, nb1)[:, :-1]
+    num_results = jax.ops.segment_sum(jnp.sum(pvc, axis=1), ch,
+                                      num_segments=num_channels)
+    num_notified = jax.ops.segment_sum(jnp.sum(members, axis=1), ch,
+                                       num_segments=num_channels)
+    return num_results, num_notified, broker_bytes, broker_results
+
+
+def stream_to_stacked(sj: StreamJoin, stream: CandStream,
+                      scanned: jnp.ndarray, width: int) -> ChannelResult:
+    """Re-present a stream join as a stacked (C, width, maxT) ChannelResult.
+
+    The stream is channel-major, so channel c's entries are the contiguous
+    segment [off_c, off_c + counts_c) — a plain offset gather rebuilds the
+    per-channel view, preserving within-channel pair order exactly.
+    ``width`` need only bound the largest per-channel live count (<= the
+    discovery buffer width), NOT the stream size, so the stacked view never
+    exceeds the padded grid's footprint. Only meaningful when the stream did
+    not truncate (``total <= S``) — the engine discards overflowed runs."""
+    S = stream.rows.shape[0]
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                           jnp.cumsum(stream.counts)[:-1].astype(jnp.int32)])
+    k = jnp.arange(width, dtype=jnp.int32)
+    src = off[:, None] + k[None, :]                         # (C, width)
+    ok = (k[None, :] < stream.counts[:, None]) & (src < S)
+    srcc = jnp.minimum(src, S - 1)
+    pair_valid = sj.pair_valid[srcc] & ok[..., None]
+    return ChannelResult(
+        jnp.where(pair_valid, sj.pair_rows[srcc], -1),
+        jnp.where(pair_valid, sj.pair_targets[srcc], -1),
+        pair_valid,
+        jnp.where(ok, sj.matched_rows[srcc], -1),
+        sj.matched_valid[srcc] & ok,
+        sj.num_results, sj.num_notified, scanned,
+        sj.broker_bytes, sj.broker_results)
 
 
 # ---------------------------------------------------------------------------

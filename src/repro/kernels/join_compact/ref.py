@@ -1,0 +1,39 @@
+"""Reference (pure-jnp) pair expansion over a compacted candidate stream.
+
+The compacted execution join ("compact"/"compact_pallas" backends,
+``core/plans.py join_param_stream``) gathers, per stream entry, the owning
+channel's join-map row and its member/broker tables; this module expands
+those per-entry gathers into the (S, maxT) pair grids — validity, member
+counts, wire bytes, broker ids. It is the oracle the Pallas kernel
+(``kernel.py``/``ops.py``) must match bit-for-bit: everything is integer
+arithmetic, so the two backends are exactly identical.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def join_pairs(tgt: jnp.ndarray, tgt_n: jnp.ndarray, members: jnp.ndarray,
+               brokers: jnp.ndarray, valid: jnp.ndarray,
+               payload: jnp.ndarray, num_brokers: int,
+               aggregated: bool):
+    """Per-entry pair expansion.
+
+    tgt (S, maxT) int32 target slots (-1 padded), tgt_n (S,) live targets per
+    entry, members/brokers (S, maxT) int32 per-target gathers, valid (S,)
+    entry mask (post semi-join), payload (S,) int32 bytes per pair.
+
+    Returns (pair_valid (S, maxT) bool, members (S, maxT) int32,
+    pair_bytes (S, maxT) int32, bids (S, maxT) int32 with the sentinel
+    ``num_brokers`` on invalid pairs). Aggregated pairs carry their member
+    sID list on the wire (4 B each) — paper §4.1.2; byte totals stay int32
+    end-to-end (float32 would round past 2^24).
+    """
+    maxT = tgt.shape[1]
+    cols = jnp.arange(maxT, dtype=jnp.int32)[None, :]
+    pair_valid = valid[:, None] & (cols < tgt_n[:, None]) & (tgt >= 0)
+    mem = jnp.where(pair_valid, members, 0).astype(jnp.int32)
+    per = payload[:, None].astype(jnp.int32) + (4 * mem if aggregated else 0)
+    pair_bytes = jnp.where(pair_valid, per, 0)
+    bids = jnp.where(pair_valid, brokers, num_brokers).astype(jnp.int32)
+    return pair_valid, mem, pair_bytes, bids

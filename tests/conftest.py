@@ -37,7 +37,7 @@ def random_broker_result(rng, n_rows, max_t, n_groups, cap):
     res = ChannelResult(jnp.asarray(rows), jnp.asarray(tgts),
                         jnp.asarray(valid), jnp.asarray(rows[:, 0]),
                         jnp.asarray(valid[:, 0]), z, z, z,
-                        jnp.zeros((1,), jnp.float32),
+                        jnp.zeros((1,), jnp.int32),
                         jnp.zeros((1,), jnp.int32))
     flat = valid.ravel()
     return res, group_sids, rows.ravel()[flat], tgts.ravel()[flat]

@@ -1,0 +1,274 @@
+"""Compacted execution join ("compact" / "compact_pallas" backends).
+
+Covers: pair-for-pair parity with the padded fused path (4 scan modes x
+{agg, flat} x both compact backends, param AND spatial channels), delivery
+identity under tight caps (DeliveryStats + retry-ring behavior + drained
+content multisets), the adaptive stream-capacity protocol (grow on a burst,
+halve after sustained idleness, zero retraces at steady state), the
+single-channel backend override, join_compact kernel-vs-ref bit parity, and
+the integer broker-byte accounting regression."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import (most_threatening_tweets,
+                                trending_tweets_in_country, tweets_about_crime,
+                                tweets_about_drugs)
+from repro.core.engine import _STREAM_FLOOR, _STREAM_PATIENCE, BADEngine
+from repro.core.plans import SCAN_MODES, ChannelPlan, ExecutionFlags
+from repro.kernels.join_compact import ops as jc_ops
+from repro.kernels.join_compact import ref as jc_ref
+
+from conftest import check_delivery_conservation, make_tweets
+
+COMPACT = ("compact", "compact_pallas")
+
+
+def _mixed_engine(seed, use_pallas=False, n_tweets=700, **kw):
+    """3 param channels (distinct domains/payloads) + 1 spatial, the same
+    data for equal seeds — the padded-vs-compact reference pair."""
+    rng = np.random.default_rng(seed)
+    args = dict(dataset_capacity=2048, index_capacity=1024, max_window=1024,
+                max_candidates=256, brokers=("Broker1", "Broker2"),
+                use_pallas=use_pallas)
+    args.update(kw)
+    eng = BADEngine(**args)
+    eng.create_channel(tweets_about_drugs())
+    eng.create_channel(most_threatening_tweets())
+    eng.create_channel(trending_tweets_in_country(0, "EnglishTrending"))
+    eng.create_channel(tweets_about_crime(3))
+    eng.set_user_locations((rng.normal(size=(40, 2)) * 30).astype(np.float32),
+                           rng.integers(0, 2, 40))
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, 300),
+                       rng.integers(0, 2, 300))
+    eng.subscribe_bulk("MostThreateningTweets", rng.integers(0, 50, 200),
+                       rng.integers(0, 2, 200))
+    eng.subscribe_bulk("EnglishTrending", rng.integers(0, 200, 250),
+                       rng.integers(0, 2, 250))
+    if n_tweets:
+        eng.ingest(make_tweets(rng, n_tweets))
+    return eng
+
+
+def _assert_pair_identical(got, want, ctx):
+    """Counts, per-broker bytes, and the exact valid (row, target) pair
+    sequences — compaction must preserve the padded ravel order."""
+    assert got.num_results == want.num_results, ctx
+    assert got.num_notified == want.num_notified, ctx
+    assert got.scanned == want.scanned, ctx
+    np.testing.assert_array_equal(got.broker_bytes, want.broker_bytes,
+                                  err_msg=str(ctx))
+    gv = np.asarray(got.result.pair_valid)
+    wv = np.asarray(want.result.pair_valid)
+    np.testing.assert_array_equal(
+        np.asarray(got.result.pair_rows)[gv],
+        np.asarray(want.result.pair_rows)[wv], err_msg=str(ctx))
+    np.testing.assert_array_equal(
+        np.asarray(got.result.pair_targets)[gv],
+        np.asarray(want.result.pair_targets)[wv], err_msg=str(ctx))
+
+
+@pytest.mark.parametrize("scan", SCAN_MODES)
+def test_compact_matches_padded_fused(scan):
+    """Every channel of a mixed engine, per scan mode x layout x compact
+    backend, is pair-for-pair identical to the padded oracle path (which the
+    padded pallas path already matches, see test_multi_channel)."""
+    ref_eng = _mixed_engine(7)
+    engs = {b: _mixed_engine(7, use_pallas=(b == "compact_pallas"))
+            for b in COMPACT}
+    for agg in (False, True):
+        flags = ExecutionFlags(scan_mode=scan, aggregation=agg,
+                               param_pushdown=agg)
+        want = ref_eng.execute_all(flags, advance=False, timed=False)
+        for backend, eng in engs.items():
+            plan = ChannelPlan.from_flags(flags, backend)
+            for name in eng.channels:
+                eng.set_plan(name, plan)
+            got = eng.execute_all(advance=False, timed=False)
+            assert set(got) == set(want)
+            for name in want:
+                _assert_pair_identical(got[name], want[name],
+                                       (scan, agg, backend, name))
+            assert got["TweetsAboutCrime3"].num_results > 0
+
+
+def test_execute_channel_backend_override():
+    """``execute_channel(..., backend=...)`` runs the foreign backend (the
+    plan-search timing fix) and the compact result matches the padded one."""
+    eng = _mixed_engine(3)
+    flags = ExecutionFlags(scan_mode="window")
+    want = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                               timed=False)
+    assert want.num_results > 0
+    for backend in COMPACT:
+        got = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                                  timed=False, backend=backend)
+        _assert_pair_identical(got, want, backend)
+    got = eng.execute_channel("TweetsAboutCrime3", flags, advance=False,
+                              timed=False, backend="compact")
+    want = eng.execute_channel("TweetsAboutCrime3", flags, advance=False,
+                               timed=False)
+    _assert_pair_identical(got, want, "spatial")
+
+
+def _delivery_engine(seed, backend, **kw):
+    rng = np.random.default_rng(seed)
+    args = dict(dataset_capacity=4096, index_capacity=1024, max_window=1024,
+                max_candidates=256, brokers=("B1", "B2"), group_cap=8,
+                max_deliver_pairs=8, max_notify=16, ring_capacity=64)
+    args.update(kw)
+    eng = BADEngine(**args)
+    eng.debug_delivery_buffers = True
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, 40),
+                       rng.integers(0, 2, 40))
+    eng.set_plan("TweetsAboutDrugs",
+                 ChannelPlan("window", False, True, backend))
+    return eng
+
+
+def _delivered(rep):
+    o = rep.overflow
+    pairs = [tuple(p) for p in
+             np.asarray(rep.payload)[:o.delivered_pairs, :2].tolist()]
+    return pairs, np.asarray(rep.notify)[:o.delivered_sids].tolist()
+
+
+def test_compact_delivery_stats_and_ring_identical():
+    """Under caps tight enough to spill into the retry ring every tick, the
+    compact path's DeliveryStats (including retried_*), delivered wire
+    content, and conservation identity are tick-for-tick identical to the
+    padded path: ``stream_to_stacked`` hands ``deliver_all`` the exact
+    padded pair order, so capped prefixes agree pair for pair."""
+    padded = _delivery_engine(11, "oracle")
+    compact = _delivery_engine(11, "compact")
+    data_rng = np.random.default_rng(12)
+    for tick in range(4):
+        batch = make_tweets(data_rng, 120, t0=1 + 100 * tick,
+                            match_drugs=0.4)
+        reps = {}
+        for eng in (padded, compact):
+            eng.ingest(batch)
+            rep = eng.execute_all(None, timed=False, deliver=True)
+            reps[id(eng)] = rep["TweetsAboutDrugs"]
+        w, g = reps[id(padded)], reps[id(compact)]
+        check_delivery_conservation(g.overflow, g.num_results,
+                                    g.num_notified)
+        assert g.overflow == w.overflow, tick
+        assert _delivered(g) == _delivered(w), tick
+    assert compact.ring_pending_pairs() == padded.ring_pending_pairs()
+    assert compact.ring_pending_pairs() > 0      # the ring was exercised
+
+
+def test_stream_capacity_grows_on_burst_and_shrinks_after_idle():
+    """The adaptive capacity protocol: a burst overflows the stream and the
+    bucket jumps straight to the live total's power of two (results still
+    exact — the truncated run is discarded); ``_STREAM_PATIENCE`` quiet
+    ticks later the bucket halves back."""
+    eng = _mixed_engine(5, n_tweets=0)
+    ref = _mixed_engine(5, n_tweets=0)
+    plan = ChannelPlan("window", False, True, "compact")
+    names = [n for n in eng.channels
+             if eng.channels[n].spec.join == "param"]
+    for name in names:
+        eng.set_plan(name, plan)
+    key = ("param", plan, tuple(names))
+    floor = 1 << _STREAM_FLOOR
+    data_rng = np.random.default_rng(6)
+
+    def tick(n, match, t0):
+        # advancing ticks: each execution sees only the new records, so the
+        # quiet ticks after the burst really are near-empty streams
+        batch = make_tweets(data_rng, n, t0=t0, match_drugs=match)
+        eng.ingest(batch)
+        ref.ingest(batch)
+        got = eng.execute_all(timed=False)
+        want = ref.execute_all(plan.flags, timed=False)
+        for name in names:
+            _assert_pair_identical(got[name], want[name], name)
+
+    tick(30, 0.1, 1)                             # tiny: floor bucket
+    assert eng._stream_buckets[key] == floor
+    tick(900, 0.9, 100)                          # burst: > floor live cands
+    grown = eng._stream_buckets[key]
+    assert grown > floor
+    for i in range(_STREAM_PATIENCE):            # quiet run halves it once
+        assert eng._stream_buckets[key] == grown
+        tick(5, 0.1, 2000 + 10 * i)
+    assert eng._stream_buckets[key] == grown // 2
+
+
+def test_compact_steady_state_is_zero_retrace():
+    """Once the stream bucket converges, same-shaped ticks reuse the cached
+    fused trace: no retraces, no rebuilds — the compacted path preserves the
+    executor's steady-state contract."""
+    eng = _mixed_engine(9)
+    plan = ChannelPlan("window", False, True, "compact")
+    for name in eng.channels:
+        eng.set_plan(name, plan)
+    data_rng = np.random.default_rng(10)
+    for tick in range(2):                        # converge buckets + traces
+        eng.ingest(make_tweets(data_rng, 64, t0=1 + 100 * tick,
+                               match_drugs=0.3))
+        eng.execute_all(None, timed=False, deliver=True)
+    snap = eng.maintenance.snapshot()
+    for tick in range(3):
+        eng.ingest(make_tweets(data_rng, 64, t0=500 + 100 * tick,
+                               match_drugs=0.3))
+        eng.execute_all(None, timed=False, deliver=True)
+    d = eng.maintenance.since(snap)
+    assert d.traces == 0 and d.rebuilds == 0
+
+
+def test_join_compact_kernel_matches_ref():
+    """ops.join_pairs (Pallas, interpret on CPU) is bit-identical to the jnp
+    ref on random streams — including a non-tile-multiple S (padding path)
+    and both layout modes."""
+    rng = np.random.default_rng(0)
+    for s, max_t, ts in ((37, 5, 16), (64, 8, 16), (130, 3, 64)):
+        tgt = rng.integers(-1, 20, (s, max_t)).astype(np.int32)
+        tgt_n = rng.integers(0, max_t + 1, s).astype(np.int32)
+        members = rng.integers(0, 9, (s, max_t)).astype(np.int32)
+        brokers = rng.integers(0, 2, (s, max_t)).astype(np.int32)
+        valid = rng.random(s) < 0.7
+        payload = rng.integers(1, 4000, s).astype(np.int32)
+        for aggregated in (False, True):
+            want = jc_ref.join_pairs(jnp.asarray(tgt), jnp.asarray(tgt_n),
+                                     jnp.asarray(members),
+                                     jnp.asarray(brokers),
+                                     jnp.asarray(valid),
+                                     jnp.asarray(payload), 2, aggregated)
+            got = jc_ops.join_pairs(jnp.asarray(tgt), jnp.asarray(tgt_n),
+                                    jnp.asarray(members),
+                                    jnp.asarray(brokers), jnp.asarray(valid),
+                                    jnp.asarray(payload), 2, aggregated,
+                                    ts=ts)
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_broker_bytes_integer_exact_at_large_volume():
+    """Regression: per-broker byte totals accumulated in float32 silently
+    round once a channel-broker tick crosses 2^24 bytes with a payload that
+    is not a power-of-two multiple. An ODD payload and ~10^8 bytes/tick must
+    still satisfy bytes == num_results * payload exactly, in an integer
+    dtype end-to-end."""
+    payload = 30 * 1024 + 3                      # odd: float32 sums DO round
+    rng = np.random.default_rng(1)
+    eng = BADEngine(dataset_capacity=2048, index_capacity=1024,
+                    max_window=2048, max_candidates=2048, brokers=("B1",))
+    eng.create_channel(dataclasses.replace(tweets_about_drugs(),
+                                           payload_bytes=payload))
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, 600),
+                       np.zeros(600, np.int64))
+    eng.ingest(make_tweets(rng, 1024, match_drugs=0.6))
+    flags = ExecutionFlags(scan_mode="window")   # flat: bytes = pairs * payload
+    for backend in ("oracle", "compact"):
+        rep = eng.execute_channel("TweetsAboutDrugs", flags, advance=False,
+                                  timed=False, backend=backend)
+        assert np.issubdtype(rep.broker_bytes.dtype, np.integer), backend
+        want = rep.num_results * payload
+        assert want > 2 ** 24                    # past float32 exactness
+        assert int(rep.broker_bytes.sum()) == want, backend

@@ -179,6 +179,40 @@ def test_flatten_pairs_stream_invariants(seed, n_channels, n_rows, max_t,
     assert (np.asarray(s.channels)[k:] == -1).all()
 
 
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(1, 12),
+       st.integers(1, 3), st.integers(0, 40))
+@settings(**SETTINGS)
+def test_stream_total_is_pretruncation(seed, n_channels, n_rows, max_t,
+                                       max_total):
+    """``total`` is the PRE-truncation live count for both stream types —
+    ``sum(valid) == min(total, max_total)``, never clamped to the buffer —
+    including the ``max_total=0`` edge (a counting-only stream with empty
+    buffers), and the valid prefix is channel-major (non-decreasing channel
+    ids). The compacted execution join's grow-on-overflow protocol reads
+    exactly this contract: ``total > capacity`` means re-run bigger."""
+    from repro.core.plans import flatten_pairs_all, flatten_values_all
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 999, (n_channels, n_rows, max_t)).astype(np.int32)
+    tgts = rng.integers(0, 99, (n_channels, n_rows, max_t)).astype(np.int32)
+    mask = rng.random((n_channels, n_rows, max_t)) < 0.5
+    total = int(mask.sum())
+    k = min(total, max_total)
+    ps = flatten_pairs_all(jnp.asarray(rows), jnp.asarray(tgts),
+                           jnp.asarray(mask), max_total)
+    vs = flatten_values_all(jnp.asarray(rows).reshape(n_channels, -1),
+                            jnp.asarray(mask).reshape(n_channels, -1),
+                            max_total)
+    for s in (ps, vs):
+        assert int(s.total) == total
+        v = np.asarray(s.valid)
+        assert v.shape == (max_total,)
+        assert int(v.sum()) == k
+        ch = np.asarray(s.channels)[v]
+        assert (np.diff(ch) >= 0).all()          # channel-major order
+    np.testing.assert_array_equal(np.asarray(vs.values)[np.asarray(vs.valid)],
+                                  np.asarray(ps.rows)[np.asarray(ps.valid)])
+
+
 @given(st.integers(1, 6), st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
 @settings(**SETTINGS)
 def test_flash_merge_associativity(n_parts, kh, seed):
