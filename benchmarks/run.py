@@ -23,7 +23,7 @@ import numpy as np
 from benchmarks import (aggregation, bad_index, broker_ops, churn, common,
                         compact_join, group_size, kernel_perf,
                         max_subscriptions, multi_channel, query_plan,
-                        real_world, scaling)
+                        real_world, scaling, sharded)
 
 SUITES = {
     "fig12_13_group_size": group_size.run,
@@ -38,6 +38,7 @@ SUITES = {
     "multi_channel": multi_channel.run,
     "churn_sustained": churn.run,
     "compact_join": compact_join.run,
+    "sharded_scaling": sharded.run,
 }
 
 

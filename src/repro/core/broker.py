@@ -177,6 +177,28 @@ def _fanout_one(result: ChannelResult, group_sids: jnp.ndarray,
     return out[:max_notify], delivered, produced, flat, mask & ~within
 
 
+def payload_notifications(payload: np.ndarray, delivered: int,
+                          payload_words: int) -> np.ndarray:
+    """Expand a delivered wire buffer into its (row_id, sID) notification
+    pairs — the partition-INDEPENDENT view of the convert stage.
+
+    Group chopping depends on load order (and, on the sharded engine, on
+    which shard owns each subscription), so delivered (row, group) pair
+    counts differ between equivalent engines; the end-subscriber
+    notifications each line fans out to do not. Each delivered line
+    contributes one (row_id, sid) per live member sID (the -1 padding in
+    the line's sID slots is skipped). Used by the sharded parity harness to
+    compare engines whose group partitions differ."""
+    buf = np.asarray(payload)[:int(delivered)]
+    if buf.size == 0:
+        return np.zeros((0, 2), np.int64)
+    sid_cap = buf.shape[1] - HEADER_WORDS - payload_words
+    sids = buf[:, HEADER_WORDS:HEADER_WORDS + sid_cap].astype(np.int64)
+    rows = np.broadcast_to(buf[:, :1].astype(np.int64), sids.shape)
+    live = sids >= 0
+    return np.stack([rows[live], sids[live]], axis=1)
+
+
 def pack_payloads(result: ChannelResult, group_sids: jnp.ndarray,
                   payload_words: int, max_pairs: int
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:

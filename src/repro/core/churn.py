@@ -21,7 +21,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.engine import BADEngine, MaintenanceStats
+from repro.core.engine import MaintenanceStats
 from repro.core.plans import ExecutionFlags
 from repro.data.synthetic import tweet_batch
 
@@ -118,7 +118,7 @@ class ChurnWorkload:
     user_churn_per_tick: int = 0
 
 
-def run_ticks(engine: BADEngine,
+def run_ticks(engine,
               workloads: List[ChurnWorkload],
               ticks: int,
               rng: np.random.Generator,
@@ -135,6 +135,12 @@ def run_ticks(engine: BADEngine,
     subscriptions, optionally churn a spatial cohort, ingest a record batch,
     run the fused ``execute_all`` (optionally with fused delivery), and
     drain any spilled notifications.
+
+    ``engine`` is any object with the BADEngine control/data-plane surface
+    (subscribe_bulk / remove_subscriptions / ingest / execute_all /
+    drain_spilled / spill / maintenance / ring_pending_*) — the single-device
+    ``BADEngine`` or the mesh-sharded ``core.sharded.ShardedBADEngine``; the
+    driver never reaches into engine internals.
 
     ``live_sids`` (channel -> sID array) seeds the removable population —
     pass the sIDs of a preloaded engine; it is updated in place. The first

@@ -562,10 +562,17 @@ class BADEngine:
         return sid
 
     def subscribe_bulk(self, channel: str, params: np.ndarray,
-                       brokers: np.ndarray) -> np.ndarray:
+                       brokers: np.ndarray,
+                       sids: Optional[np.ndarray] = None) -> np.ndarray:
         """Bulk control-plane load through the vectorized ``aggregate`` path:
         Algorithm-1 grouping semantics with no per-subscription Python work.
-        Returns the assigned sIDs."""
+        Returns the assigned sIDs.
+
+        ``sids`` assigns EXPLICIT subscription ids instead of the
+        aggregator's sequential allocation — the sharded engine
+        (core/sharded.py) allocates globally and hands each shard its
+        hash-owned slice, so a sID names the same subscription on every
+        shard and across reshards."""
         st = self.channels[channel]
         params = np.asarray(params, dtype=np.int32).ravel()
         brokers = np.asarray(brokers, dtype=np.int32).ravel()
@@ -580,13 +587,13 @@ class BADEngine:
         if brokers.size and (int(brokers.min()) < 0 or int(brokers.max()) >= nb):
             raise ValueError(f"broker ids out of [0, {nb}) for {channel}")
         if self.incremental:
-            sids = st.aggregator.add_bulk(params, brokers)
+            sids = st.aggregator.add_bulk(params, brokers, sids)
             st.user_params.add_bulk(params)
             st.note_change()
         else:
             # the rebuild baseline: O(S) re-aggregation (group identity not
             # preserved) + out-of-band invalidation (full cache rebuild)
-            sids = st.aggregator.rebuild_bulk(params, brokers)
+            sids = st.aggregator.rebuild_bulk(params, brokers, sids)
             st.user_params.add_bulk(params)
             st.invalidate_targets()
         return sids

@@ -1,0 +1,552 @@
+"""Mesh-sharded BAD engine: N device-local engines behind one control plane.
+
+``ShardedBADEngine`` partitions the subscription population (and spatial
+cohorts) over ``num_shards`` device-local ``BADEngine`` instances and
+presents the single-engine surface the churn driver, planner, and tests
+already speak. The partitioning model:
+
+  channels      replicated — every shard compiles every channel's plan, so
+                plan-groups, stacked caches, and retry rings stay keyed by
+                (shard, plan) exactly as PR 6/7 left them per engine.
+  data plane    replicated — each shard ingests every record batch into its
+                own dataset + BAD index, so candidate discovery is local and
+                row ids agree across shards (and with a 1-shard oracle).
+  subscriptions partitioned — global sIDs are allocated here and assigned to
+                shards by the stable hash ``partition.shard_for_sids``; each
+                shard aggregates only its own slice (its join/delivery work
+                scales with its share of the groups). Explicit-sID
+                ``subscribe_bulk`` keeps ids global across shards/reshards.
+  cohort users  partitioned by ``partition.shard_for_users``; spatial
+                channels always run with explicit per-shard cohorts (the
+                legacy all-users semantics would deliver S copies), so
+                ``create_channel`` snapshots the current population.
+  brokers       endpoints owned round-robin by ``partition.broker_owner``;
+                with ``route_cross_shard=True`` every tick's delivered
+                notify sIDs are regrouped onto their owner shards by the
+                ``collectives.shuffle_notify`` all-gather collective over a
+                ("shard",) mesh (host reference fallback when the runtime
+                has fewer devices than shards).
+
+Accounting telescopes globally: each shard's DeliveryStats conserves
+delivered + spilled + dropped == produced, and the merged per-channel stats
+sum shard-wise, so the same identity holds for the whole mesh while
+ring-resident entries stay shard-local. ``reshard`` migrates to a new shard
+count conservation-exactly: rings flush through each shard's SpillQueue,
+the queues drain to empty against the OLD tables (the drained reports are
+returned so callers keep the delivered content), and the live population —
+re-read from the host registry, the single source of truth — is
+re-partitioned under the new hash with its original sIDs.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plans
+from repro.core.broker import DeliveryStats
+from repro.core.channel import ChannelSpec
+from repro.core.engine import BADEngine, DrainReport, MaintenanceStats
+from repro.distributed import collectives, partition
+
+
+@dataclasses.dataclass
+class ShardedExecutionReport:
+    """One channel's tick merged across shards. Field-compatible with
+    ``ExecutionReport`` where downstream readers look (num_results /
+    num_notified / scanned / wall_time_s / overflow); ``per_shard`` keeps
+    the raw shard reports (payload/notify buffers included when the engine
+    runs with ``debug_delivery_buffers``) for content-level parity checks,
+    and ``routed`` the owner-shard-grouped notify sIDs when cross-shard
+    routing is on."""
+
+    channel: str
+    num_results: int
+    num_notified: int
+    scanned: int
+    wall_time_s: float
+    overflow: Optional[DeliveryStats]
+    per_shard: List
+    routed: Optional[np.ndarray] = None
+
+
+class _SpillView:
+    """Summed SpillQueue facade over every shard (read-only surface the
+    churn driver polls)."""
+
+    def __init__(self, owner: "ShardedBADEngine"):
+        self._owner = owner
+
+    def pending_pairs(self, channel: Optional[str] = None) -> int:
+        return sum(e.spill.pending_pairs(channel)
+                   for e in self._owner.shards)
+
+    def pending_sids(self, channel: Optional[str] = None) -> int:
+        return sum(e.spill.pending_sids(channel)
+                   for e in self._owner.shards)
+
+
+class _ChannelRegistry:
+    """Host-side live-subscription table for one channel, dense by global
+    sID: the allocator for new ids and the single source of truth for
+    re-partitioning (reshard, drop/re-create). O(1) amortized add, O(Δ)
+    remove, vectorized broker lookup for notification routing."""
+
+    def __init__(self):
+        self.params = np.zeros((0,), np.int32)
+        self.brokers = np.zeros((0,), np.int32)
+        self.live = np.zeros((0,), bool)
+        self.next_sid = 0
+
+    def _grow(self, n: int) -> None:
+        if n <= self.params.shape[0]:
+            return
+        cap = max(1024, 1 << int(n - 1).bit_length())
+        for name in ("params", "brokers"):
+            old = getattr(self, name)
+            buf = np.zeros((cap,), np.int32)
+            buf[:old.shape[0]] = old
+            setattr(self, name, buf)
+        lv = np.zeros((cap,), bool)
+        lv[:self.live.shape[0]] = self.live
+        self.live = lv
+
+    def add(self, params: np.ndarray, brokers: np.ndarray) -> np.ndarray:
+        n = params.shape[0]
+        sids = self.next_sid + np.arange(n, dtype=np.int32)
+        self.next_sid += n
+        self._grow(self.next_sid)
+        self.params[sids] = params
+        self.brokers[sids] = brokers
+        self.live[sids] = True
+        return sids
+
+    def remove(self, sids: np.ndarray) -> np.ndarray:
+        """Mark known live sids dead; returns the ones actually removed."""
+        sids = np.unique(np.asarray(sids, np.int64))
+        sids = sids[(sids >= 0) & (sids < self.next_sid)].astype(np.int32)
+        sids = sids[self.live[sids]]
+        self.live[sids] = False
+        return sids
+
+    def live_sids(self) -> np.ndarray:
+        return np.nonzero(self.live[:self.next_sid])[0].astype(np.int32)
+
+
+class ShardedBADEngine:
+    """N-way sharded BAD engine. ``num_shards=1`` is the single-device
+    oracle with the identical control surface (the parity harness compares
+    against it). Extra keyword arguments configure every per-shard
+    ``BADEngine`` identically — per-DEVICE capacities (max_deliver_pairs,
+    max_notify, ring_capacity, ...) stay per shard, so aggregate delivery
+    capacity scales with the mesh."""
+
+    def __init__(self, num_shards: int = 1, route_cross_shard: bool = False,
+                 **engine_kwargs):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = num_shards
+        self.route_cross_shard = route_cross_shard
+        self.engine_kwargs = dict(engine_kwargs)
+        self._devices = jax.devices()
+        self._debug = False
+        self._specs: Dict[str, ChannelSpec] = {}
+        self._reg: Dict[str, _ChannelRegistry] = {}
+        self._plans: Dict[str, plans.ChannelPlan] = {}
+        self._cohorts: Dict[str, set] = {}
+        self._user_brokers = np.zeros((1,), np.int32)
+        self.shards: List[BADEngine] = [self._make_engine(i)
+                                        for i in range(num_shards)]
+        self.spill = _SpillView(self)
+
+    # ------------------------------------------------------------------
+    # shard plumbing
+    # ------------------------------------------------------------------
+
+    def _on(self, i: int):
+        """Device context for shard i: pins the shard's engine state to its
+        own XLA device when the runtime exposes several (the forced-host-
+        device CI idiom or a real mesh); single-device runtimes share."""
+        if len(self._devices) > 1:
+            return jax.default_device(self._devices[i % len(self._devices)])
+        return contextlib.nullcontext()
+
+    def shard_device(self, i: int):
+        return self._devices[i % len(self._devices)]
+
+    def _make_engine(self, i: int) -> BADEngine:
+        with self._on(i):
+            eng = BADEngine(**self.engine_kwargs)
+        eng.debug_delivery_buffers = self._debug or self.route_cross_shard
+        return eng
+
+    @property
+    def debug_delivery_buffers(self) -> bool:
+        return self._debug or self.route_cross_shard
+
+    @debug_delivery_buffers.setter
+    def debug_delivery_buffers(self, value: bool) -> None:
+        self._debug = bool(value)
+        for e in self.shards:
+            e.debug_delivery_buffers = self._debug or self.route_cross_shard
+
+    @property
+    def now(self) -> int:
+        return self.shards[0].now
+
+    @property
+    def user_locations(self):
+        return self.shards[0].user_locations
+
+    @property
+    def maintenance(self) -> MaintenanceStats:
+        """Mesh-wide maintenance counters (summed). The returned object is a
+        plain ``MaintenanceStats``, so ``snapshot()``/``since()`` (the churn
+        driver's protocol) work unchanged; per-shard views for the
+        zero-retrace-per-shard invariant come from
+        ``per_shard_maintenance``."""
+        merged = MaintenanceStats()
+        for e in self.shards:
+            merged.traces += e.maintenance.traces
+            merged.rebuilds += e.maintenance.rebuilds
+            merged.patches += e.maintenance.patches
+        return merged
+
+    def per_shard_maintenance(self) -> List[MaintenanceStats]:
+        return [e.maintenance.snapshot() for e in self.shards]
+
+    # ------------------------------------------------------------------
+    # control plane
+    # ------------------------------------------------------------------
+
+    def create_channel(self, spec: ChannelSpec) -> None:
+        if spec.name in self._specs:
+            raise ValueError(f"channel {spec.name} exists")
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                e.create_channel(spec)
+        self._specs[spec.name] = spec
+        self._reg[spec.name] = _ChannelRegistry()
+        if spec.join == "spatial":
+            # explicit cohorts always: the legacy all-users semantics would
+            # notify every user once PER SHARD. Snapshot the population now;
+            # later membership flows through subscribe/unsubscribe_users.
+            nu = int(self.shards[0].user_locations.shape[0])
+            self._cohorts[spec.name] = set()
+            self.subscribe_users(spec.name, np.arange(nu, dtype=np.int32))
+
+    def drop_channel(self, name: str) -> None:
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                e.drop_channel(name)
+        del self._specs[name]
+        del self._reg[name]
+        self._plans.pop(name, None)
+        self._cohorts.pop(name, None)
+
+    def default_plan(self) -> plans.ChannelPlan:
+        return self.shards[0].default_plan()
+
+    def channel_plan(self, name: str) -> plans.ChannelPlan:
+        return self.shards[0].channel_plan(name)
+
+    def plan_assignment(self) -> Dict[str, plans.ChannelPlan]:
+        return self.shards[0].plan_assignment()
+
+    def set_plan(self, name: str, plan: plans.ChannelPlan) -> bool:
+        changed = False
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                changed = e.set_plan(name, plan) or changed
+        if changed:
+            self._plans[name] = plan
+        return changed
+
+    def subscribe(self, channel: str, param: int, broker: str = "BrokerA",
+                  sid: Optional[int] = None) -> int:
+        if sid is not None:
+            raise ValueError("explicit sids are allocated by the sharded "
+                             "engine; use subscribe_bulk slices instead")
+        bid = self.shards[0].brokers.names[broker]
+        return int(self.subscribe_bulk(
+            channel, np.asarray([param], np.int32),
+            np.asarray([bid], np.int32))[0])
+
+    def subscribe_bulk(self, channel: str, params: np.ndarray,
+                       brokers: np.ndarray) -> np.ndarray:
+        """Allocate global sIDs, register them in the host registry, and
+        hand each shard its hash-owned slice (untouched shards see no call,
+        so their epochs/caches stay put). Returns the global sIDs."""
+        params = np.asarray(params, dtype=np.int32).ravel()
+        brokers = np.asarray(brokers, dtype=np.int32).ravel()
+        if params.shape != brokers.shape:
+            raise ValueError("params and brokers must have the same length")
+        spec = self._specs[channel]
+        # validate before ANY shard or registry mutation (same contract as
+        # BADEngine.subscribe_bulk: a bad batch leaves nothing half-applied)
+        if params.size and (int(params.min()) < 0
+                            or int(params.max()) >= spec.param_domain):
+            raise ValueError(
+                f"params out of [0, {spec.param_domain}) for {channel}")
+        nb = self.shards[0].brokers.num_brokers
+        if brokers.size and (int(brokers.min()) < 0
+                            or int(brokers.max()) >= nb):
+            raise ValueError(f"broker ids out of [0, {nb}) for {channel}")
+        sids = self._reg[channel].add(params, brokers)
+        owner = partition.shard_for_sids(sids, self.num_shards)
+        for i, e in enumerate(self.shards):
+            mine = owner == i
+            if not mine.any():
+                continue
+            with self._on(i):
+                e.subscribe_bulk(channel, params[mine], brokers[mine],
+                                 sids=sids[mine])
+        return sids
+
+    def remove_subscriptions(self, channel: str, sids: np.ndarray) -> int:
+        gone = self._reg[channel].remove(np.asarray(sids))
+        owner = partition.shard_for_sids(gone, self.num_shards)
+        removed = 0
+        for i, e in enumerate(self.shards):
+            mine = owner == i
+            if not mine.any():
+                continue
+            with self._on(i):
+                removed += e.remove_subscriptions(channel, gone[mine])
+        return removed
+
+    def unsubscribe(self, channel: str, param: int, broker: str,
+                    sid: int) -> bool:
+        return self.remove_subscriptions(
+            channel, np.asarray([sid], np.int32)) == 1
+
+    def live_sids(self, channel: str) -> np.ndarray:
+        """The registry's live population (sorted global sIDs)."""
+        return self._reg[channel].live_sids()
+
+    def shard_live_sids(self, channel: str) -> List[np.ndarray]:
+        """Each shard's aggregator-held live sIDs (the device-side truth the
+        partition tests reconcile against the registry)."""
+        return [np.sort(e.channels[channel].aggregator.live_sids())
+                for e in self.shards]
+
+    def set_user_locations(self, locations: np.ndarray,
+                           brokers: Optional[np.ndarray] = None) -> None:
+        locations = np.asarray(locations, np.float32)
+        if brokers is None:
+            brokers = np.zeros((locations.shape[0],), np.int32)
+        self._user_brokers = np.asarray(brokers, np.int32)
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                e.set_user_locations(locations, brokers)
+
+    def subscribe_users(self, channel: str, user_ids: np.ndarray) -> int:
+        uids = np.asarray(user_ids, dtype=np.int32).ravel()
+        nu = int(self.shards[0].user_locations.shape[0])
+        if uids.size and (int(uids.min()) < 0 or int(uids.max()) >= nu):
+            raise ValueError(f"user ids out of [0, {nu})")
+        owner = partition.shard_for_users(uids, self.num_shards)
+        attached = 0
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                # EVERY shard gets the call (possibly empty) so the first
+                # one converts all shards to explicit-cohort semantics
+                attached += e.subscribe_users(channel, uids[owner == i])
+        self._cohorts.setdefault(channel, set()).update(
+            int(u) for u in uids)
+        return attached
+
+    def unsubscribe_users(self, channel: str, user_ids: np.ndarray) -> int:
+        uids = np.asarray(user_ids, dtype=np.int32).ravel()
+        owner = partition.shard_for_users(uids, self.num_shards)
+        detached = 0
+        for i, e in enumerate(self.shards):
+            mine = owner == i
+            if not mine.any():
+                continue
+            with self._on(i):
+                detached += e.unsubscribe_users(channel, uids[mine])
+        cohort = self._cohorts.get(channel)
+        if cohort is not None:
+            cohort.difference_update(int(u) for u in uids)
+        return detached
+
+    # ------------------------------------------------------------------
+    # data plane
+    # ------------------------------------------------------------------
+
+    def ingest(self, batch) -> np.ndarray:
+        rows = None
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                got = e.ingest(batch)
+            if i == 0:
+                rows = got
+        return rows
+
+    def execute_all(self, flags: Optional[plans.ExecutionFlags] = None,
+                    advance: bool = True, timed: bool = True,
+                    deliver: bool = False
+                    ) -> Dict[str, ShardedExecutionReport]:
+        """One mesh tick: every shard's fused ``execute_all`` over its local
+        subscriptions (plan-groups, rings, and caches per shard), merged
+        per channel. With ``route_cross_shard`` the delivered notify sIDs
+        are then regrouped onto their broker-owner shards through the
+        collective shuffle."""
+        per_shard = []
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                per_shard.append(e.execute_all(flags, advance=advance,
+                                               timed=timed, deliver=deliver))
+        merged: Dict[str, ShardedExecutionReport] = {}
+        for name in self._specs:
+            reps = [r[name] for r in per_shard if name in r]
+            if not reps:
+                continue
+            overflow = None
+            if any(r.overflow is not None for r in reps):
+                overflow = DeliveryStats(0, 0, 0, 0, 0, 0)
+                for r in reps:
+                    if r.overflow is not None:
+                        overflow = overflow.merged(r.overflow)
+            merged[name] = ShardedExecutionReport(
+                channel=name,
+                num_results=sum(r.num_results for r in reps),
+                num_notified=sum(r.num_notified for r in reps),
+                scanned=sum(r.scanned for r in reps),
+                wall_time_s=sum(r.wall_time_s for r in reps),
+                overflow=overflow,
+                per_shard=reps)
+        if deliver and self.route_cross_shard:
+            self._route(merged)
+        return merged
+
+    def _route(self, merged: Dict[str, ShardedExecutionReport]) -> None:
+        mesh = collectives.notify_mesh(self.num_shards)
+        for name, rep in merged.items():
+            if any(r.notify is None for r in rep.per_shard):
+                continue
+            # notify buffers are already fixed-width (-1 padded past the
+            # delivered prefix), so the shuffle shapes are tick-stable
+            sids = np.stack([np.asarray(r.notify) for r in rep.per_shard])
+            owners = np.full(sids.shape, -1, np.int32)
+            live = sids >= 0
+            if live.any():
+                if self._specs[name].join == "spatial":
+                    bids = self._user_brokers[sids[live]]
+                else:
+                    bids = self._reg[name].brokers[sids[live]]
+                owners[live] = partition.broker_owner(bids, self.num_shards)
+            if mesh is not None:
+                rep.routed = np.asarray(
+                    collectives.shuffle_notify(mesh, sids, owners))
+            else:
+                rep.routed = collectives.shuffle_notify_ref(
+                    sids, owners, self.num_shards)
+
+    # ------------------------------------------------------------------
+    # overflow surface
+    # ------------------------------------------------------------------
+
+    def ring_pending_pairs(self) -> int:
+        return sum(e.ring_pending_pairs() for e in self.shards)
+
+    def ring_pending_sids(self) -> int:
+        return sum(e.ring_pending_sids() for e in self.shards)
+
+    def flush_rings(self) -> None:
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                e.flush_rings()
+
+    def drain_spilled(self) -> Dict[str, DrainReport]:
+        """One drain round on every shard. Keys are suffixed with the shard
+        (``chan@s0``) so no shard's DrainReport shadows another's — readers
+        that fold over ``.values()`` (the churn driver) are unaffected."""
+        out: Dict[str, DrainReport] = {}
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                for name, rep in e.drain_spilled().items():
+                    key = name if self.num_shards == 1 else f"{name}@s{i}"
+                    out[key] = rep
+        return out
+
+    # ------------------------------------------------------------------
+    # resharding
+    # ------------------------------------------------------------------
+
+    def reshard(self, num_shards: int) -> Dict[str, DrainReport]:
+        """Migrate to ``num_shards`` mid-stream, conservation-exactly.
+
+        Every shard's retry ring flushes through its SpillQueue and the
+        queues drain to empty against the OLD engines (correct epochs and
+        tables — nothing is re-presented against a re-partitioned layout);
+        the accumulated DrainReports are returned so callers keep the
+        delivered content and counts. Then fresh engines are built at the
+        new count: the replicated data plane (dataset, BAD index,
+        watermarks, clock, user locations) transplants from shard 0, and
+        the live subscription population re-partitions from the host
+        registry under the new hash with its ORIGINAL global sIDs."""
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        drained: Dict[str, DrainReport] = {}
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                e.flush_rings()
+                rounds = 0
+                while e.spill.pending_pairs() + e.spill.pending_sids() > 0:
+                    for name, rep in e.drain_spilled().items():
+                        drained[f"{name}@s{i}#r{rounds}"] = rep
+                    rounds += 1
+        src = self.shards[0]
+        dataset_host = jax.tree.map(np.asarray, src.dataset)
+        index_host = jax.tree.map(np.asarray, src.index_state)
+        locations = np.asarray(src.user_locations)
+        user_brokers = np.asarray(src.user_brokers)
+        exec_marks = {name: (src.channels[name].last_exec_ts,
+                             src.channels[name].last_exec_size)
+                      for name in self._specs}
+        self.num_shards = num_shards
+        self.shards = [self._make_engine(i) for i in range(num_shards)]
+        self.spill = _SpillView(self)
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                e.now = src.now
+                e.set_user_locations(locations, user_brokers)
+                for spec in self._specs.values():
+                    e.create_channel(spec)
+                # channels first: every create_channel re-shapes the BAD
+                # index, so the transplanted rows must land on the final
+                # C-channel layout (identical creation order -> identical
+                # row assignment)
+                e.dataset = jax.tree.map(jnp.asarray, dataset_host)
+                e.index_state = jax.tree.map(jnp.asarray, index_host)
+                for name in self._specs:
+                    ts, size = exec_marks[name]
+                    e.channels[name].last_exec_ts = ts
+                    e.channels[name].last_exec_size = size
+        for name, reg in self._reg.items():
+            sids = reg.live_sids()
+            owner = partition.shard_for_sids(sids, num_shards)
+            for i, e in enumerate(self.shards):
+                mine = sids[owner == i]
+                if not mine.size:
+                    continue
+                with self._on(i):
+                    e.subscribe_bulk(name, reg.params[mine],
+                                     reg.brokers[mine], sids=mine)
+        for name, cohort in self._cohorts.items():
+            uids = np.fromiter(sorted(cohort), np.int32, count=len(cohort))
+            owner = partition.shard_for_users(uids, num_shards)
+            for i, e in enumerate(self.shards):
+                with self._on(i):
+                    e.subscribe_users(name, uids[owner == i])
+        for name, plan in self._plans.items():
+            for i, e in enumerate(self.shards):
+                with self._on(i):
+                    e.set_plan(name, plan)
+        return drained

@@ -19,6 +19,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -142,3 +143,53 @@ def shard(x: jnp.ndarray, spec_name: str) -> jnp.ndarray:
         return x
     spec = sanitize_spec(rules.spec(spec_name), x.shape, rules.mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# BAD-engine entity partitioning (the sharded engine, core/sharded.py)
+#
+# Subscriptions and spatial cohort users are assigned to shards by a STABLE
+# hash of their global id: the owner of an entity is a pure function of
+# (id, num_shards), never of load order or of what else is live — so churn
+# deltas route without any directory lookup, and re-partitioning after a
+# channel drop or a reshard recomputes the same assignment for every
+# surviving id. Knuth's multiplicative hash decorrelates the assignment from
+# the sequential id allocation (consecutive sIDs spread across shards
+# instead of landing in contiguous runs); users get a different odd
+# multiplier so a uid and an equal-valued sID do not co-locate.
+# ---------------------------------------------------------------------------
+
+_SID_MULT = np.uint64(2654435761)    # Knuth 2^32 / phi
+_UID_MULT = np.uint64(2246822519)    # xxhash PRIME32_2
+
+
+def _multiplicative_shard(ids: np.ndarray, num_shards: int,
+                          mult: np.uint64) -> np.ndarray:
+    ids = np.asarray(ids)
+    if ids.size and int(ids.min()) < 0:
+        raise ValueError("entity ids must be non-negative")
+    if num_shards <= 1:
+        return np.zeros(ids.shape, np.int32)
+    h = (ids.astype(np.uint64) * mult) & np.uint64(0xFFFFFFFF)
+    return (h % np.uint64(num_shards)).astype(np.int32)
+
+
+def shard_for_sids(sids: np.ndarray, num_shards: int) -> np.ndarray:
+    """Owning shard for each subscription id (vectorized, stable)."""
+    return _multiplicative_shard(sids, num_shards, _SID_MULT)
+
+
+def shard_for_users(uids: np.ndarray, num_shards: int) -> np.ndarray:
+    """Owning shard for each spatial-cohort user id."""
+    return _multiplicative_shard(uids, num_shards, _UID_MULT)
+
+
+def broker_owner(broker_ids: np.ndarray, num_shards: int) -> np.ndarray:
+    """The shard hosting each broker endpoint. Brokers are few and
+    enumerated densely, so round-robin placement is balanced by
+    construction; notifications whose subscription lives elsewhere are
+    routed here by the collective shuffle (collectives.shuffle_notify)."""
+    if num_shards <= 1:
+        return np.zeros(np.asarray(broker_ids).shape, np.int32)
+    return (np.asarray(broker_ids).astype(np.int64)
+            % num_shards).astype(np.int32)

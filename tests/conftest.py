@@ -1,5 +1,45 @@
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# --- multi-device plumbing (tests marked ``multidevice``) -------------------
+# XLA fixes the host device count at backend initialization, so the flag must
+# be in the environment BEFORE anything imports jax. conftest import is the
+# earliest hook pytest gives us; if jax is already in (a re-entrant run, a
+# plugin that imported it first), leave the environment alone and let the
+# marker hook below skip the marked tests instead of asserting on a count
+# that can no longer change.
+MULTIDEVICE_COUNT = 4
+if "jax" not in sys.modules \
+        and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={MULTIDEVICE_COUNT}"
+    ).strip()
+
+
+def pytest_runtest_setup(item):
+    if item.get_closest_marker("multidevice") is None:
+        return
+    import jax
+    if jax.device_count() < MULTIDEVICE_COUNT:
+        pytest.skip(
+            f"needs {MULTIDEVICE_COUNT} XLA host devices; have "
+            f"{jax.device_count()} (JAX initialized before the forced host "
+            f"device count could take effect)")
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    """Device list for marked tests: asserts the forced host device count
+    took effect (or skips the requester) and hands back the devices."""
+    import jax
+    if jax.device_count() < MULTIDEVICE_COUNT:
+        pytest.skip(f"needs {MULTIDEVICE_COUNT} XLA host devices")
+    return jax.devices()
 
 
 @pytest.fixture

@@ -262,3 +262,60 @@ def test_gla_chunked_equals_stepwise(seed, n_chunks):
     np.testing.assert_allclose(np.asarray(o_chunk), np.asarray(o_seq),
                                atol=2e-4)
     np.testing.assert_allclose(np.asarray(s_fin), np.asarray(state), atol=2e-4)
+
+
+# --- sharded-engine partition hash (distributed/partition.py) --------------
+# The mesh-sharded engine routes every subscription/user/broker through
+# these maps; re-partitioning correctness (reshard, drop/re-create) rests on
+# them being pure elementwise functions of the GLOBAL id.
+
+
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=300),
+       st.integers(1, 16))
+@settings(**SETTINGS)
+def test_shard_partition_exact_cover(ids, num_shards):
+    """Every id lands on exactly one shard, in range [0, num_shards)."""
+    from repro.distributed import partition as dpart
+    ids = np.asarray(ids, np.int64)
+    for fn in (dpart.shard_for_sids, dpart.shard_for_users,
+               dpart.broker_owner):
+        owner = fn(ids, num_shards)
+        assert owner.shape == ids.shape
+        assert ((owner >= 0) & (owner < num_shards)).all()
+        hits = np.sum([(owner == s) for s in range(num_shards)], axis=0)
+        assert hits.tolist() == [1] * len(ids)
+        if num_shards == 1:
+            assert (owner == 0).all()
+
+
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=120),
+       st.lists(st.integers(0, 2 ** 31 - 1), max_size=120),
+       st.integers(1, 16),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_shard_assignment_stable_under_churn_deltas(ids, others, num_shards,
+                                                    seed):
+    """An id's shard is a pure function of the id: independent of what else
+    is in the batch, the batch order, and the call (so churn — arbitrary
+    adds/removes around a surviving subscription — can never migrate it)."""
+    from repro.distributed import partition as dpart
+    ids = np.asarray(ids, np.int64)
+    others = np.asarray(others, np.int64)
+    alone = dpart.shard_for_sids(ids, num_shards)
+    np.testing.assert_array_equal(alone, dpart.shard_for_sids(ids, num_shards))
+    mixed = dpart.shard_for_sids(np.concatenate([ids, others]), num_shards)
+    np.testing.assert_array_equal(mixed[:len(ids)], alone)
+    perm = np.random.default_rng(seed).permutation(len(ids))
+    np.testing.assert_array_equal(
+        dpart.shard_for_sids(ids[perm], num_shards), alone[perm])
+    for i in range(min(len(ids), 5)):    # singleton == batched
+        assert dpart.shard_for_sids(ids[i:i + 1], num_shards)[0] == alone[i]
+
+
+@given(st.integers(1, 16))
+@settings(**SETTINGS)
+def test_shard_partition_rejects_negative_ids(num_shards):
+    """Negative ids are allocator bugs, not hashable population."""
+    from repro.distributed import partition as dpart
+    with pytest.raises(ValueError):
+        dpart.shard_for_sids(np.asarray([3, -1, 5]), num_shards)
