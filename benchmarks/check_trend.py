@@ -27,6 +27,10 @@ import re
 import sys
 
 RATIO_RE = re.compile(r"x(\d+(?:\.\d+)?)")
+# pipelined rows carry the MEASURED in-flight depth (``depth=N``) next to
+# the ratio: a depth that collapsed to 1 explains a ratio regression as a
+# pipelining failure rather than a kernel slowdown
+DEPTH_RE = re.compile(r"depth=(\d+)")
 
 
 def parse_ratio(derived: str):
@@ -34,14 +38,23 @@ def parse_ratio(derived: str):
     return float(m.group(1)) if m else None
 
 
+def parse_depth(derived: str):
+    m = DEPTH_RE.search(derived)
+    return int(m.group(1)) if m else None
+
+
 def check(results, thresholds, tolerance: float):
-    by_name = {}
+    by_name, depth_of = {}, {}
     for row in results:
         if "name" not in row:
             continue                     # malformed emit row: not trackable
-        r = parse_ratio(str(row.get("derived", "")))
+        derived = str(row.get("derived", ""))
+        r = parse_ratio(derived)
         if r is not None:
             by_name[row["name"]] = r
+            d = parse_depth(derived)
+            if d is not None:
+                depth_of[row["name"]] = d
     failures, report = [], []
     for i, entry in enumerate(thresholds):
         name, baseline = entry.get("name"), entry.get("baseline")
@@ -66,8 +79,11 @@ def check(results, thresholds, tolerance: float):
                    else f"ratio rows present: {have}"))
             continue
         status = "ok" if got >= floor else "REGRESSED"
+        depth = depth_of.get(name)
         report.append(f"{status:>9}  {name}: x{got:g} "
-                      f"(baseline x{baseline:g}, floor x{floor:.2f})")
+                      f"(baseline x{baseline:g}, floor x{floor:.2f})"
+                      + (f" [measured pipeline depth {depth}]"
+                         if depth is not None else ""))
         if got < floor:
             failures.append(report[-1])
     return failures, report

@@ -1,0 +1,229 @@
+"""Pipelined vs synchronous tick loop (core/runtime.py TickPipeline).
+
+The synchronous driver serializes host and device every tick: dispatch all
+plan-groups, block, materialize stats, drain, THEN synthesize the next
+batch and churn subscriptions. The pipelined driver
+(``run_ticks(pipeline_depth=N)``) keeps up to N ticks in flight — the next
+tick's control-plane numpy work (churn + batch synthesis + ingest) runs
+while the previous ticks' fused joins and delivery execute, and
+``drain_spilled`` host round-trips batch every N ticks through the
+SpillQueue's epoch-free resolved lane.
+
+Two phases:
+
+  * parity — churn + sustained overflow through tightly capped engines:
+    the pipelined run must deliver the IDENTICAL per-channel (row, sID)
+    pair / sID multisets as the synchronous run (asserted, not trended)
+    with zero steady-state retraces;
+  * throughput — a 4-plan-group engine (four param channels, four distinct
+    ChannelPlans) under sustained churn: ticks/sec at depth 3 vs depth 1.
+
+Acceptance: >= x1.2 pipelined speedup at >= 4 plan-groups (tracked in
+benchmarks/thresholds.json as ``pipeline/overlap/speedup``; the measured
+in-flight depth rides in the derived column as ``depth=N`` and
+check_trend prints it next to the ratio).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.broker import payload_notifications
+from repro.core.channel import (most_threatening_tweets,
+                                trending_tweets_in_country,
+                                tweets_about_drugs)
+from repro.core.churn import ChurnWorkload, run_ticks
+from repro.core.engine import BADEngine
+from repro.core.plans import ChannelPlan, ExecutionFlags
+from benchmarks.common import emit, fresh_rng, scale
+
+from repro.data.synthetic import drug_tweak, tweet_batch
+from repro.core import records as R
+
+PW = 8    # engine default deliver_payload_words
+TICKS = 12
+# the warm phase absorbs trace/compile AND the slot tables' one-time
+# settling into their steady padded capacity bucket (churn.py's regime):
+# the timed window then replays cached traces only
+WARMUP = 8
+DEPTH = 3
+
+
+def _drug_batch(rng, n, t0):
+    batch = tweet_batch(rng, n, t0)
+    fields = drug_tweak(np.asarray(batch.fields).copy(), rng, 0.3)
+    return R.RecordBatch.from_numpy(fields, np.asarray(batch.location))
+
+
+# ---------------------------------------------------------------------------
+# phase 1: delivered-content parity under churn + sustained overflow
+# ---------------------------------------------------------------------------
+
+
+def _parity_engine(seed):
+    rng = fresh_rng(("pipeline-parity", seed))
+    eng = BADEngine(dataset_capacity=4096, index_capacity=1024,
+                    max_window=2048, max_candidates=512,
+                    brokers=("B1", "B2"), group_cap=8,
+                    max_deliver_pairs=12, max_notify=24, ring_capacity=24)
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, 200),
+                       rng.integers(0, 2, 200))
+    eng.debug_delivery_buffers = True
+    return eng
+
+
+def _fold_tick(pairs, sids):
+    def on_tick(tick, reports):
+        for name, rep in reports.items():
+            o = rep.overflow
+            if o is None or rep.payload is None:
+                continue
+            pairs.extend((name,) + tuple(x) for x in payload_notifications(
+                np.asarray(rep.payload), o.delivered_pairs, PW).tolist())
+            sids.extend(np.asarray(rep.notify)[:o.delivered_sids].tolist())
+
+    def on_drain(drained):
+        for name, dr in drained.items():
+            if dr.payload is not None and dr.stats.delivered_pairs:
+                pairs.extend((name,) + tuple(x) for x in
+                             payload_notifications(
+                                 np.asarray(dr.payload),
+                                 dr.stats.delivered_pairs, PW).tolist())
+            if dr.notify is not None and dr.stats.delivered_sids:
+                sids.extend(dr.notify[:dr.stats.delivered_sids].tolist())
+    return on_tick, on_drain
+
+
+def _parity_run(depth):
+    eng = _parity_engine(0)
+    drive = fresh_rng("pipeline-parity-drive")
+    flags = ExecutionFlags(scan_mode="window", aggregation=True,
+                           param_pushdown=True)
+    wl = [ChurnWorkload("TweetsAboutDrugs", adds_per_tick=10,
+                        removes_per_tick=6)]
+    pairs, sids = [], []
+    on_tick, on_drain = _fold_tick(pairs, sids)
+    rep = run_ticks(eng, wl, 6, drive, flags=flags, deliver=True,
+                    ingest_per_tick=96, make_batch=_drug_batch, warmup=2,
+                    on_tick=on_tick, on_drain=on_drain,
+                    pipeline_depth=depth)
+    # settle ring residue so the multisets cover everything produced
+    eng.flush_rings()
+    while eng.spill.pending_pairs() + eng.spill.pending_sids() > 0:
+        on_drain(eng.drain_spilled())
+    return rep, sorted(pairs), sorted(sids)
+
+
+def bench_parity(rng) -> None:
+    rep_sync, pairs_sync, sids_sync = _parity_run(1)
+    rep_pipe, pairs_pipe, sids_pipe = _parity_run(DEPTH)
+    assert pairs_pipe == pairs_sync, \
+        f"pair multiset diverged: {len(pairs_pipe)} vs {len(pairs_sync)}"
+    assert sids_pipe == sids_sync, \
+        f"sID multiset diverged: {len(sids_pipe)} vs {len(sids_sync)}"
+    assert rep_pipe.maintenance.traces == 0, \
+        f"steady-state retraces: {rep_pipe.maintenance.traces}"
+    emit("pipeline/parity/churn_overflow", 0.0,
+         f"pairs={len(pairs_pipe)};sids={len(sids_pipe)};"
+         f"depth={rep_pipe.pipeline_depth};"
+         f"drains {rep_pipe.drain_calls} vs {rep_sync.drain_calls};"
+         f"steady_retraces={rep_pipe.maintenance.traces}")
+
+
+# ---------------------------------------------------------------------------
+# phase 2: ticks/sec, 4 plan-groups, depth 3 vs 1
+# ---------------------------------------------------------------------------
+
+# four DISTINCT plans -> dispatch_all partitions the channels into four
+# plan-groups per tick (the >= 4-group regime the overlap target is set
+# at). All padded: the compact backends' grow protocol reads the live
+# total AT DISPATCH (a documented sync point), which would serialize the
+# very overlap this suite measures.
+_PLANS = (
+    ChannelPlan.from_flags(ExecutionFlags(
+        scan_mode="window", aggregation=True, param_pushdown=True),
+        "oracle"),
+    ChannelPlan.from_flags(ExecutionFlags(
+        scan_mode="window", aggregation=False), "oracle"),
+    ChannelPlan.from_flags(ExecutionFlags(
+        scan_mode="full", aggregation=True, param_pushdown=True), "oracle"),
+    ChannelPlan.from_flags(ExecutionFlags(
+        scan_mode="full", aggregation=False), "oracle"),
+)
+
+
+def _group_engine(n_subs):
+    rng = fresh_rng("pipeline-groups")
+    eng = BADEngine(dataset_capacity=1 << 14, index_capacity=1 << 12,
+                    max_window=1 << 11, max_candidates=1 << 10,
+                    brokers=("B1", "B2", "B3", "B4"), group_cap=16,
+                    max_deliver_pairs=1 << 12, max_notify=1 << 14,
+                    ring_capacity=1 << 9)
+    channels = [tweets_about_drugs(), most_threatening_tweets(),
+                trending_tweets_in_country(0, "EnglishTrending"),
+                trending_tweets_in_country(1, "Lang1Trending")]
+    live = {}
+    for spec, plan in zip(channels, _PLANS):
+        eng.create_channel(spec)
+        dom = 200 if "Trending" in spec.name else 50
+        live[spec.name] = eng.subscribe_bulk(
+            spec.name, rng.integers(0, dom, n_subs),
+            rng.integers(0, 4, n_subs))
+        eng.set_plan(spec.name, plan)
+    return eng, live
+
+
+def _throughput_run(depth, n_subs, churn):
+    eng, live = _group_engine(n_subs)
+    drive = fresh_rng("pipeline-drive")   # depth-independent: identical
+    # seeds -> identical op/data streams for the A/B comparison
+    wl = [ChurnWorkload(name, adds_per_tick=churn,
+                        removes_per_tick=churn, num_brokers=4,
+                        param_domain=200 if "Trending" in name else 50)
+          for name in eng.channels]
+    return run_ticks(eng, wl, TICKS + WARMUP, drive, deliver=True,
+                     ingest_per_tick=scale(2048), make_batch=_drug_batch,
+                     warmup=WARMUP, live_sids=live, use_channel_plans=True,
+                     pipeline_depth=depth)
+
+
+def bench_throughput(rng) -> None:
+    import os
+    n_subs = scale(6000, 512)
+    # churn small relative to the live population: balanced add/remove at
+    # ~5% keeps the slot tables inside their padded capacity bucket, so the
+    # steady-state window replays cached traces only
+    churn = scale(512, 24)
+    reps = {}
+    for tag, depth in (("sync", 1), ("pipelined", DEPTH)):
+        rep = _throughput_run(depth, n_subs, churn)
+        reps[tag] = rep
+        emit(f"pipeline/{tag}/ticks", rep.wall_s / max(rep.ticks, 1),
+             f"ticks_per_s={rep.ticks_per_s:.2f};groups=4;"
+             f"depth={rep.pipeline_depth};results={rep.results};"
+             f"retraces={rep.maintenance.traces}")
+    # identical seeds -> identical subscriber-level outcomes
+    assert reps["pipelined"].delivered_sids == reps["sync"].delivered_sids, \
+        (reps["pipelined"].delivered_sids, reps["sync"].delivered_sids)
+    assert reps["pipelined"].maintenance.traces == 0, \
+        f"steady-state retraces: {reps['pipelined'].maintenance.traces}"
+    ratio = reps["pipelined"].ticks_per_s / max(reps["sync"].ticks_per_s,
+                                                1e-9)
+    # the overlap win needs a second core to overlap WITH: on single-core
+    # hosts the schedules serialize onto the same hardware and the honest
+    # ratio degrades to ~x1.0 (cores ride in the derived column so a CI
+    # trend reader can tell the difference from a real regression)
+    emit("pipeline/overlap/speedup", 0.0,
+         f"x{ratio:.2f} (target >= 1.2x at >= 4 plan-groups, multi-core); "
+         f"depth={reps['pipelined'].pipeline_depth}; "
+         f"cores={os.cpu_count()}; "
+         f"steady retraces={reps['pipelined'].maintenance.traces}")
+
+
+def run(rng) -> None:
+    bench_parity(rng)
+    bench_throughput(rng)
+
+
+if __name__ == "__main__":
+    run(np.random.default_rng(0))

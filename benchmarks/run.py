@@ -22,8 +22,8 @@ import numpy as np
 
 from benchmarks import (aggregation, bad_index, broker_ops, churn, common,
                         compact_join, group_size, kernel_perf,
-                        max_subscriptions, multi_channel, query_plan,
-                        real_world, scaling, sharded)
+                        max_subscriptions, multi_channel, pipeline,
+                        query_plan, real_world, scaling, sharded)
 
 SUITES = {
     "fig12_13_group_size": group_size.run,
@@ -39,6 +39,7 @@ SUITES = {
     "churn_sustained": churn.run,
     "compact_join": compact_join.run,
     "sharded_scaling": sharded.run,
+    "pipeline_overlap": pipeline.run,
 }
 
 

@@ -59,7 +59,8 @@ def run(rng) -> None:
     for s in (1, 4):
         tag = _child(s, n_subs, ingest, ticks).split(",")
         rows[s] = dict(delivered=int(tag[2]), dropped=int(tag[3]),
-                       wall=float(tag[4]), ticks=int(tag[5]))
+                       wall=float(tag[4]), ticks=int(tag[5]),
+                       p50=float(tag[6]), p99=float(tag[7]))
     r1, r4 = rows[1], rows[4]
     # the ratio is only meaningful over identical content, delivered exactly
     assert r1["dropped"] == r4["dropped"] == 0, (r1, r4)
@@ -73,6 +74,13 @@ def run(rng) -> None:
                 f"x{rate4 / rate1:.2f} delivered-notification throughput vs "
                 f"1 shard ({rate4:.0f}/s, {r4['ticks']} ticks, fixed "
                 f"per-device caps)")
+    # dispatch-to-materialize latency of one fused tick across all shards
+    # (the window the pipelined runtime overlaps with control-plane work)
+    for s in (1, 4):
+        common.emit(f"sharded/scaling_n{s}/tick_latency", rows[s]["p50"],
+                    f"p50={rows[s]['p50'] * 1e3:.1f}ms;"
+                    f"p99={rows[s]['p99'] * 1e3:.1f}ms "
+                    f"dispatch-to-materialize, {s} shard(s)")
 
 
 # ---------------------------------------------------------------------------
@@ -132,9 +140,14 @@ def _child_main(num_shards: int, n_subs: int, ingest: int,
         dropped += stats.dropped_pairs + stats.dropped_sids
 
     t0 = time.perf_counter()
+    lat = []     # per-tick dispatch-to-materialize seconds
     for tick in range(ticks):
         eng.ingest(make_tweets(rng, ingest, t0=1000 * (tick + 3)))
-        reps = eng.execute_all(flags, timed=False, deliver=True)
+        # dispatch/sync split so the measured latency is the one the
+        # pipelined runtime hides: all shards enqueue before any blocks
+        pend = eng.dispatch_all(flags, timed=False, deliver=True)
+        reps = pend.sync()
+        lat.append(pend.latency_s)
         ticks_run += 1
         for rep in reps.values():
             account(rep.overflow)
@@ -150,7 +163,9 @@ def _child_main(num_shards: int, n_subs: int, ingest: int,
         for dr in eng.drain_spilled().values():
             account(dr.stats)
     wall = time.perf_counter() - t0
-    print(f"CHILD,{num_shards},{delivered},{dropped},{wall:.4f},{ticks_run}")
+    p50, p99 = (float(np.percentile(lat, q)) for q in (50, 99))
+    print(f"CHILD,{num_shards},{delivered},{dropped},{wall:.4f},{ticks_run},"
+          f"{p50:.6f},{p99:.6f}")
 
 
 if __name__ == "__main__":

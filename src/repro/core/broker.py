@@ -199,6 +199,31 @@ def payload_notifications(payload: np.ndarray, delivered: int,
     return np.stack([rows[live], sids[live]], axis=1)
 
 
+def resolve_pair_sids(table: np.ndarray, targets: np.ndarray) -> np.ndarray:
+    """Resolve spilled pair TARGETS to their member sID rows against the
+    producing call's own sID table (host side, numpy).
+
+    This is the capture half of the SpillQueue's epoch-free resolved lane:
+    the pipelined runtime materializes delivery stats ticks after dispatch,
+    when control-plane churn may have moved the live table past the one the
+    join actually used — resolving here, against the DISPATCH-time table,
+    makes the spilled entry self-contained, so a deferred drain re-delivers
+    the identical notification multiset as an immediate one.
+
+    ``table`` is one channel's slice of the stacked delivery sID table:
+    (tmax, cap) group tables resolve by row; the identity fanouts (0-width
+    spatial / 1-wide flat) resolve to the target itself — mirroring
+    ``_pack_one``'s ndim dispatch. Returns (n, w>=1) int32 rows, -1-padded."""
+    targets = np.asarray(targets, np.int32)
+    table = np.asarray(table)
+    if table.ndim != 2 or table.shape[1] == 0:
+        return targets[:, None].copy()
+    if table.shape[0] == 0:
+        return np.full((len(targets), 1), -1, np.int32)
+    safe = np.clip(targets, 0, table.shape[0] - 1)
+    return table[safe].astype(np.int32)
+
+
 def pack_payloads(result: ChannelResult, group_sids: jnp.ndarray,
                   payload_words: int, max_pairs: int
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -285,10 +310,17 @@ class RetryRing(NamedTuple):
 
 
 def empty_ring(num_channels: int, window: int) -> RetryRing:
-    neg = jnp.full((num_channels, window), -1, jnp.int32)
-    z1 = jnp.zeros((num_channels,), jnp.int32)
-    return RetryRing(neg, neg, jnp.zeros((num_channels, window), jnp.int32),
-                     z1, neg, z1)
+    # one buffer PER field: the engine donates rings into the fused call,
+    # and XLA rejects donating the same buffer twice in one execute
+    def neg():
+        return jnp.full((num_channels, window), -1, jnp.int32)
+
+    def z1():
+        return jnp.zeros((num_channels,), jnp.int32)
+
+    return RetryRing(neg(), neg(), jnp.zeros((num_channels, window),
+                                             jnp.int32),
+                     z1(), neg(), z1())
 
 
 class RingCounters(NamedTuple):
@@ -306,7 +338,14 @@ class FusedDelivery(NamedTuple):
     preserved) for the engine's SpillQueue. Ring-aware calls additionally
     carry the successor ``ring`` and its ``counters``; the spill streams
     then hold only what overflowed PAST the ring (the host queue as the
-    ring's bounded last resort)."""
+    ring's bounded last resort).
+
+    LAZY-STATS CONTRACT: every field is a device-array handle valid the
+    moment the producing jitted call RETURNS (dispatch), not when it
+    completes — holding one costs nothing and forces no sync. The engine's
+    pipelined runtime threads ``ring`` straight into the next dispatch and
+    defers every host read (``np.asarray`` of the stats/spill/payload
+    fields) to ``PendingExecution.sync()``, ticks later."""
 
     pack: PackedDelivery
     fan: FanoutDelivery

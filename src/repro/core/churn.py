@@ -52,6 +52,9 @@ class ChurnReport:
     drain_calls: int = 0
     ring_pending: int = 0
     queue_pending: int = 0
+    # measured maximum number of ticks simultaneously in flight (1 on the
+    # synchronous path; == requested depth once a pipelined run warms up)
+    pipeline_depth: int = 1
 
     @property
     def subs_per_s(self) -> float:
@@ -130,7 +133,10 @@ def run_ticks(engine,
               live_sids: Optional[Dict[str, np.ndarray]] = None,
               churn_rounds: int = 1,
               use_channel_plans: bool = False,
-              on_tick: Callable = None) -> ChurnReport:
+              on_tick: Callable = None,
+              on_drain: Callable = None,
+              pipeline_depth: int = 1,
+              drain_every: Optional[int] = None) -> ChurnReport:
     """Drive ``ticks`` churn ticks: per workload, bulk-add then bulk-remove
     subscriptions, optionally churn a spatial cohort, ingest a record batch,
     run the fused ``execute_all`` (optionally with fused delivery), and
@@ -157,13 +163,29 @@ def run_ticks(engine,
     ``ChannelPlan`` (``execute_all(None)`` — the planner-driven plan-group
     partitioning) instead of homogeneous ``flags``. ``on_tick(tick,
     reports)`` fires after every executed tick — hook a
-    ``RuntimePlanner.step`` here to re-plan mid-run.
+    ``RuntimePlanner.step`` here to re-plan mid-run. ``on_drain(reports)``
+    fires after every ``drain_spilled`` round (testing/parity hook).
+
+    ``pipeline_depth >= 2`` drives the ticks through the asynchronous
+    ``TickPipeline`` (core/runtime.py): each tick's fused calls are
+    dispatched while up to ``depth - 1`` previous ticks are still executing
+    on device, the next tick's churn/ingest numpy work overlaps them, and
+    ``drain_spilled`` batches every ``drain_every`` ticks (default: ==
+    depth). Reports are accounted by their DISPATCH tick number, spill
+    capture runs through the SpillQueue's epoch-free resolved lane, and the
+    run flushes + drains to empty before returning — the delivered
+    notification multiset is identical to the synchronous path's.
     """
     if use_channel_plans:
         flags = None
     else:
         flags = flags or ExecutionFlags.fully_optimized()
     make_batch = make_batch or (lambda r, n, t0: tweet_batch(r, n, t0=t0))
+    if pipeline_depth > 1:
+        return _run_ticks_pipelined(
+            engine, workloads, ticks, rng, flags, deliver, ingest_per_tick,
+            make_batch, warmup, live_sids, churn_rounds, on_tick, on_drain,
+            pipeline_depth, drain_every)
     live: Dict[str, _LivePool] = {
         w.channel: _LivePool(np.zeros((0,), np.int32)) for w in workloads}
     if live_sids:
@@ -223,7 +245,10 @@ def run_ticks(engine,
         while engine.spill.pending_pairs() + engine.spill.pending_sids() > 0:
             if timed:
                 drains += 1
-            for drr in engine.drain_spilled().values():
+            drained = engine.drain_spilled()
+            if on_drain is not None:
+                on_drain(drained)
+            for drr in drained.values():
                 if timed:
                     dp += drr.stats.delivered_pairs
                     ds += drr.stats.delivered_sids
@@ -243,3 +268,124 @@ def run_ticks(engine,
                       + engine.ring_pending_sids()),
         queue_pending=(engine.spill.pending_pairs()
                        + engine.spill.pending_sids()))
+
+
+def _run_ticks_pipelined(engine, workloads, ticks, rng, flags, deliver,
+                         ingest_per_tick, make_batch, warmup, live_sids,
+                         churn_rounds, on_tick, on_drain,
+                         pipeline_depth, drain_every) -> ChurnReport:
+    """The ``pipeline_depth >= 2`` body of ``run_ticks``: same workload
+    schedule, ticks driven through ``TickPipeline``. Reports surface up to
+    ``depth - 1`` ticks after dispatch and are accounted by DISPATCH tick
+    number (so the timed window covers exactly the same work as the
+    synchronous path); the pipeline is flushed at the warmup boundary so
+    trace/compile latency is never billed to the timed window."""
+    from repro.core.runtime import TickPipeline
+
+    live: Dict[str, _LivePool] = {
+        w.channel: _LivePool(np.zeros((0,), np.int32)) for w in workloads}
+    if live_sids:
+        live.update({k: _LivePool(np.asarray(v, np.int32))
+                     for k, v in live_sids.items()})
+    adds = removes = user_adds = user_removes = 0
+    results = dp = ds = sp = dr = drains = 0
+    t0_clock = 0.0
+    snap = engine.maintenance.snapshot()
+    now = engine.now
+    pipe = TickPipeline(engine, depth=pipeline_depth,
+                        drain_every=drain_every)
+
+    def account(tick_no: int, reports: Dict) -> None:
+        nonlocal results, dp, ds, sp, dr
+        if on_tick is not None:
+            on_tick(tick_no, reports)
+        if tick_no < warmup:
+            return
+        for rep in reports.values():
+            results += rep.num_results
+            if rep.overflow is not None:
+                dp += rep.overflow.delivered_pairs
+                ds += rep.overflow.delivered_sids
+                sp += (rep.overflow.spilled_pairs
+                       + rep.overflow.spilled_sids)
+                dr += (rep.overflow.dropped_pairs
+                       + rep.overflow.dropped_sids)
+
+    def drain_to_empty(timed: bool) -> None:
+        nonlocal dp, ds, dr, drains
+        while engine.spill.pending_pairs() + engine.spill.pending_sids() > 0:
+            if timed:
+                drains += 1
+            drained = engine.drain_spilled()
+            if on_drain is not None:
+                on_drain(drained)
+            for drr in drained.values():
+                if timed:
+                    dp += drr.stats.delivered_pairs
+                    ds += drr.stats.delivered_sids
+                    dr += drr.stats.dropped_pairs + drr.stats.dropped_sids
+
+    for tick in range(ticks):
+        if tick == warmup:
+            # quiesce before the timed window: in-flight warmup ticks sync
+            # (their trace/compile and spills stay unbilled), the queue
+            # empties, and the clock starts on a clean pipeline
+            for t, reps in pipe.flush():
+                account(t, reps)
+            drain_to_empty(False)
+            snap = engine.maintenance.snapshot()
+            t0_clock = time.perf_counter()
+        timed = tick >= warmup
+        for _ in range(max(1, churn_rounds)):
+            for w in workloads:
+                if w.adds_per_tick:
+                    params = rng.integers(0, w.param_domain,
+                                          w.adds_per_tick).astype(np.int32)
+                    brokers = rng.integers(0, w.num_brokers,
+                                           w.adds_per_tick).astype(np.int32)
+                    new = engine.subscribe_bulk(w.channel, params, brokers)
+                    live[w.channel].add(new)
+                    if timed:
+                        adds += len(new)
+                n_rm = min(w.removes_per_tick, live[w.channel].n)
+                if n_rm:
+                    rm = live[w.channel].sample_remove(rng, n_rm)
+                    gone = engine.remove_subscriptions(w.channel, rm)
+                    if timed:
+                        removes += gone
+                if w.user_channel and w.user_churn_per_tick:
+                    nu = engine.user_locations.shape[0]
+                    k = w.user_churn_per_tick
+                    out = engine.unsubscribe_users(
+                        w.user_channel, rng.integers(0, nu, k))
+                    inn = engine.subscribe_users(
+                        w.user_channel, rng.integers(0, nu, k))
+                    if timed:
+                        user_removes += out
+                        user_adds += inn
+        if ingest_per_tick:
+            now += 100
+            engine.ingest(make_batch(rng, ingest_per_tick, now))
+        for t, reps in pipe.step(flags, deliver=deliver):
+            account(t, reps)
+        if pipe.drain_due():
+            drain_to_empty(timed)
+    for t, reps in pipe.flush():
+        account(t, reps)
+    drain_to_empty(ticks > warmup)
+    wall = time.perf_counter() - t0_clock if ticks > warmup else 0.0
+    if live_sids is not None:    # hand the surviving population back
+        for k, pool in live.items():
+            live_sids[k] = pool.view().copy()
+    return ChurnReport(
+        ticks=max(0, ticks - warmup), adds=adds, removes=removes,
+        user_adds=user_adds, user_removes=user_removes, wall_s=wall,
+        maintenance=engine.maintenance.since(snap),
+        live_subs=sum(pool.n for pool in live.values()),
+        results=results, delivered_pairs=dp, delivered_sids=ds,
+        spilled=sp, dropped=dr, drain_calls=drains,
+        ring_pending=(engine.ring_pending_pairs()
+                      + engine.ring_pending_sids()),
+        queue_pending=(engine.spill.pending_pairs()
+                       + engine.spill.pending_sids()),
+        pipeline_depth=max(pipe.max_in_flight, 1))

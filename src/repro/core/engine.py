@@ -49,7 +49,8 @@ from repro.core import records as R
 from repro.core import subscriptions as subs
 from repro.core.broker import (BrokerRegistry, DeliveryStats, FusedDelivery,
                                RetryRing, deliver_all, empty_ring,
-                               fanout_sids, pack_payloads)
+                               fanout_sids, pack_payloads,
+                               resolve_pair_sids)
 from repro.core.channel import ChannelSpec
 from repro.core.predicates import (CompiledConditions, compile_conditions,
                                    evaluate_conditions)
@@ -264,12 +265,21 @@ class SpillQueue:
     target indices are only meaningful against the table they were produced
     from, so a drain discards (and counts as dropped) entries whose channel
     churned in between. Raw sIDs never go stale.
+
+    A third *resolved* lane holds pairs whose target->sID fanout was already
+    resolved against the producing call's OWN table (the pipelined runtime
+    materializes stats ticks after dispatch, when the live table may have
+    churned past the dispatch-time epoch — resolving at capture time makes
+    the entry epoch-free, so deferred batched drains deliver the identical
+    multiset as the synchronous path). Resolved entries share the pairs
+    lane's capacity budget and never go stale.
     """
 
     def __init__(self, capacity: int = 1 << 16):
         self.capacity = capacity
         self._pairs: Dict[Tuple[str, bool], Deque] = {}
         self._sids: Dict[str, Deque] = {}
+        self._resolved: Dict[str, Deque] = {}
         self._n_pairs = 0
         self._n_sids = 0
 
@@ -322,6 +332,57 @@ class SpillQueue:
                           else np.zeros((0,), np.int32))
         return cat(rows), cat(tgts), stale
 
+    def push_resolved(self, channel: str, rows: np.ndarray,
+                      targets: np.ndarray, sid_rows: np.ndarray) -> int:
+        """Append pre-resolved (row, target, sID-row) entries up to the
+        remaining PAIR capacity; returns entries accepted. ``sid_rows`` is
+        the (n, w) slice of the producing call's sID table for these
+        targets (w >= 1; -1 padding never fans out)."""
+        n = min(len(rows), self.capacity - self._n_pairs)
+        if n > 0:
+            q = self._resolved.setdefault(channel, collections.deque())
+            q.append((np.asarray(rows[:n]), np.asarray(targets[:n]),
+                      np.asarray(sid_rows[:n])))
+            self._n_pairs += n
+        return max(n, 0)
+
+    def _push_front_resolved(self, channel: str, rows: np.ndarray,
+                             targets: np.ndarray,
+                             sid_rows: np.ndarray) -> None:
+        if len(rows):
+            q = self._resolved.setdefault(channel, collections.deque())
+            q.appendleft((np.asarray(rows), np.asarray(targets),
+                          np.asarray(sid_rows)))
+            self._n_pairs += len(rows)
+
+    def pop_resolved(self, channel: str, n: int
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Remove up to ``n`` resolved entries in FIFO order; sID rows from
+        entries of different widths are right-padded with -1 to the widest.
+        Returns (rows, targets, sid_rows)."""
+        q = self._resolved.get(channel)
+        rows, tgts, srows, taken = [], [], [], 0
+        while q and taken < n:
+            r, t, s = q.popleft()
+            take = min(len(r), n - taken)
+            if take < len(r):
+                q.appendleft((r[take:], t[take:], s[take:]))
+            self._n_pairs -= take
+            rows.append(r[:take])
+            tgts.append(t[:take])
+            srows.append(s[:take])
+            taken += take
+        if q is not None and not q:
+            del self._resolved[channel]
+        if not rows:
+            return (np.zeros((0,), np.int32), np.zeros((0,), np.int32),
+                    np.zeros((0, 1), np.int32))
+        w = max(s.shape[1] for s in srows)
+        srows = [np.pad(s, ((0, 0), (0, w - s.shape[1])), constant_values=-1)
+                 if s.shape[1] < w else s for s in srows]
+        return (np.concatenate(rows), np.concatenate(tgts),
+                np.concatenate(srows))
+
     def push_sids(self, channel: str, sids: np.ndarray) -> int:
         n = min(len(sids), self.capacity - self._n_sids)
         if n > 0:
@@ -357,11 +418,16 @@ class SpillQueue:
     def sid_keys(self) -> List[str]:
         return list(self._sids.keys())
 
+    def resolved_keys(self) -> List[str]:
+        return list(self._resolved.keys())
+
     def pending_pairs(self, channel: Optional[str] = None) -> int:
         if channel is None:
             return self._n_pairs
-        return sum(sum(len(r) for r, _, _ in q)
-                   for (name, _), q in self._pairs.items() if name == channel)
+        return (sum(sum(len(r) for r, _, _ in q)
+                    for (name, _), q in self._pairs.items()
+                    if name == channel)
+                + sum(len(r) for r, _, _ in self._resolved.get(channel, ())))
 
     def pending_sids(self, channel: Optional[str] = None) -> int:
         if channel is None:
@@ -371,6 +437,7 @@ class SpillQueue:
     def clear(self) -> None:
         self._pairs.clear()
         self._sids.clear()
+        self._resolved.clear()
         self._n_pairs = self._n_sids = 0
 
 
@@ -384,6 +451,30 @@ class DrainReport:
     stats: DeliveryStats
     payload: Optional[np.ndarray] = None
     notify: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class _PendingGroup:
+    """One dispatched plan-group awaiting materialization: the fused call's
+    result pytree (device handles, possibly still executing) plus everything
+    the host half needs — layouts and DISPATCH-TIME epoch snapshots for
+    SpillQueue tagging, and (when spills are being resolved) the
+    dispatch-time stacked sID table handles, so deferred stats resolve pair
+    fanout against the tables the call actually joined."""
+
+    plan: plans.ChannelPlan
+    param_chs: List
+    spatial_chs: List
+    res: tuple                       # (res_p, res_s, del_p, del_s, tots)
+    p_layout: object
+    s_layout: object
+    deliver: bool
+    wall: float                      # timed fused wall; 0.0 when untimed
+    t0: float                        # dispatch timestamp (latency fallback)
+    p_epochs: List[int]
+    s_epochs: List[int]
+    p_sids: Optional[jnp.ndarray] = None
+    s_sids: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -460,9 +551,17 @@ class BADEngine:
         # keys the stacked-user-set cache; bumped by set_user_locations
         self._user_version = 0
         self.now = 0
+        # host mirror of dataset.size, maintained by ``ingest`` — advance
+        # and plan bucketing read it instead of syncing on the device scalar
+        # (``int(self.dataset.size)`` would block the host on every tick)
+        self.size_host = 0
         self._conds: Optional[CompiledConditions] = None
         self.index_state = bidx.BADIndexState.create(0, index_capacity)
         self._ingest_fn = None
+        # (plan-cache key, arg-shape signature) pairs already executed once:
+        # ``_warm_if_new`` warms ONLY on an actual trace-cache miss, so a
+        # timed call never runs a cached executable twice
+        self._warmed: set = set()
         # compiled plan caches (single-channel and fused all-channel), keyed
         # on the specs/flags they close over; cleared on channel create/drop
         self._exec_cache: Dict = {}
@@ -494,7 +593,7 @@ class BADEngine:
     def create_channel(self, spec: ChannelSpec) -> None:
         if spec.name in self.channels:
             raise ValueError(f"channel {spec.name} exists")
-        if self.dataset.size.item() > 0 and spec.fixed_preds:
+        if self.size_host > 0 and spec.fixed_preds:
             # BAD indexes only see records ingested after channel creation —
             # same semantics as the paper (continuous queries over new data).
             pass
@@ -505,7 +604,7 @@ class BADEngine:
             user_params=UserParameters.create(spec.param_domain),
             last_exec_ts=self.now,
         )
-        st.last_exec_size = int(self.dataset.size)
+        st.last_exec_size = self.size_host
         self.channels[spec.name] = st
         self._rebuild_conditions()
 
@@ -697,6 +796,7 @@ class BADEngine:
         # stacked caches track per-channel epochs; a same-named channel
         # re-created at epoch 0 would collide, so drop them here too
         self._stacked_cache.clear()
+        self._warmed.clear()   # warm bookkeeping follows the plan caches
         # retry rings are shaped/positioned by the channel set: hand their
         # resident entries to the host queue (dropped channels drop at
         # drain time, counted) rather than silently losing them
@@ -707,7 +807,6 @@ class BADEngine:
         use_pallas = self.use_pallas
         maint = self.maintenance
 
-        @jax.jit
         def ingest_step(ds, index_state, batch):
             maint.traces += 1          # Python body runs at trace time only
             ds, row_ids = _append(ds, batch)
@@ -719,17 +818,35 @@ class BADEngine:
             index_state = _insert(index_state, row_ids, matches)
             return ds, index_state, row_ids
 
-        return ingest_step
+        # steady-state ticks update the dataset + BAD index IN PLACE: the
+        # previous tick's buffers are donated, so XLA aliases them into the
+        # outputs instead of allocating/copying per tick. The engine never
+        # re-presents a pre-ingest handle (self.dataset/index_state are
+        # reassigned right here), so donation is externally invisible.
+        return jax.jit(ingest_step, donate_argnums=(0, 1))
 
     def ingest(self, batch: R.RecordBatch) -> np.ndarray:
-        """Data feed entry point: append + BAD-index maintenance (Algorithm 2)."""
+        """Data feed entry point: append + BAD-index maintenance (Algorithm 2).
+
+        Host-sync free: row ids and the ``now`` watermark are derived on the
+        host (``append`` assigns ``size + arange(n)`` and ``size_host``
+        mirrors device size exactly), so ingest never blocks on the device
+        queue — the returned ids are valid while the append is still in
+        flight."""
         if self._ingest_fn is None:
             self._ingest_fn = self._build_ingest()
-        self.dataset, self.index_state, row_ids = self._ingest_fn(
+        n = batch.num_records
+        row_ids = np.arange(self.size_host, self.size_host + n,
+                            dtype=np.int32)
+        self.dataset, self.index_state, _ = self._ingest_fn(
             self.dataset, self.index_state, batch)
-        ts = batch.fields[:, R.TIMESTAMP]
-        self.now = max(self.now, int(jnp.max(ts))) if batch.num_records else self.now
-        return np.asarray(row_ids)
+        self.size_host += n
+        if n:
+            # reads the batch INPUT buffer (already materialized), not a
+            # computation output — no dispatch-queue sync
+            ts = np.asarray(batch.fields)[:, R.TIMESTAMP]
+            self.now = max(self.now, int(ts.max()))
+        return row_ids
 
     # ------------------------------------------------------------------
     # data plane: channel execution
@@ -833,14 +950,15 @@ class BADEngine:
         every backend, compact included); the compact backends run the
         single-channel pipeline as a C==1 compacted stream of ``stream_cap``
         entries. The compiled function returns ``(result, stream_total)`` —
-        total is 0 on the padded backends."""
+        total is 0 on the padded backends. Returns ``(fn, key)`` so callers
+        can warm through ``_warm_if_new`` on actual cache misses only."""
         st = self.channels[channel]
         backend = backend or ("pallas" if self.use_pallas else "oracle")
         key = (st.spec, flags, spatial, max_cand, st.index, backend,
                stream_cap)
         cached = self._exec_cache.get(key)
         if cached is not None:
-            return cached
+            return cached, key
         spec = st.spec
         conds_one = compile_conditions([list(spec.fixed_preds)])
         best_pred = int(np.argmax([_pred_rank(p) for p in spec.fixed_preds])) \
@@ -911,7 +1029,7 @@ class BADEngine:
 
         fn = jax.jit(run)
         self._cache_put(key, fn)
-        return fn
+        return fn, key
 
     def _cache_put(self, key, fn: Callable, cap: int = 256) -> None:
         """Insert into the plan cache with FIFO eviction — superseded shape
@@ -919,6 +1037,25 @@ class BADEngine:
         if len(self._exec_cache) >= cap:
             self._exec_cache.pop(next(iter(self._exec_cache)))
         self._exec_cache[key] = fn
+
+    def _warm_if_new(self, key, fn: Callable, args: tuple) -> None:
+        """Warm (execute + block) a compiled plan ONLY when this (plan key,
+        concrete arg shapes) pair has never executed — i.e. on an actual
+        trace-cache miss. Timed callers use this so wall time measures
+        execution, not tracing; warming unconditionally would run every
+        cached executable twice per timed call. Keyed on the plan-cache key
+        plus the argument shape/dtype signature (a new shape bucket on a
+        cached key still traces, so it still warms)."""
+        leaves = jax.tree_util.tree_leaves(args)
+        sig = (key, tuple(
+            (leaf.shape, str(leaf.dtype)) if hasattr(leaf, "shape")
+            else repr(leaf) for leaf in leaves))
+        if sig in self._warmed:
+            return
+        if len(self._warmed) > 1024:   # follows the plan caches' spirit:
+            self._warmed.clear()       # never pin unbounded bookkeeping
+        self._warmed.add(sig)
+        jax.block_until_ready(fn(*args))
 
     def _delivery_fn(self) -> Callable:
         """The per-channel reference delivery: the SAME fused kernels as
@@ -971,14 +1108,25 @@ class BADEngine:
         return self._spill_and_stats([st], aggregated, d)[st.spec.name]
 
     def _spill_and_stats(self, chs: List[ChannelState], layout,
-                         d: FusedDelivery) -> Dict[str, DeliveryStats]:
+                         d: FusedDelivery,
+                         epochs: Optional[List[int]] = None,
+                         resolve_tables: Optional[np.ndarray] = None
+                         ) -> Dict[str, DeliveryStats]:
         """Host side of a delivery: push the captured flat spill streams into
         the SpillQueue per channel (entries past the queue's capacity — or
         past the device capture buffer — become counted drops) and assemble
         each channel's conserving DeliveryStats. ``layout`` tags the pair
         lane with the TARGET INDEX SPACE the producing join used (False =
         flat rows, True = compacted group rows, "slot" = aggregator slot
-        rows) so the drain re-packs against the matching table."""
+        rows) so the drain re-packs against the matching table.
+
+        ``epochs`` stamps pair entries with the DISPATCH-time epoch instead
+        of the live one (a deferred sync may run after churn moved the
+        channel on). ``resolve_tables`` (the dispatch-time stacked sID
+        tables, host-materialized) switches pair capture to the epoch-free
+        RESOLVED lane: each spilled pair's fanout is resolved here, against
+        the table its producing call joined, so deferred batched drains
+        cannot go stale."""
         pack_d = np.asarray(d.pack.delivered)
         pack_p = np.asarray(d.pack.produced)
         fan_d = np.asarray(d.fan.delivered)
@@ -999,8 +1147,15 @@ class BADEngine:
         for i, st in enumerate(chs):
             name = st.spec.name
             sel = pchan == i
-            spilled_p = self.spill.push_pairs(name, layout, prows[sel],
-                                              ptgts[sel], st.epoch)
+            if resolve_tables is not None:
+                rows_i, tgts_i = prows[sel], ptgts[sel]
+                sid_rows = resolve_pair_sids(resolve_tables[i], tgts_i)
+                spilled_p = self.spill.push_resolved(name, rows_i, tgts_i,
+                                                     sid_rows)
+            else:
+                epoch = st.epoch if epochs is None else epochs[i]
+                spilled_p = self.spill.push_pairs(name, layout, prows[sel],
+                                                  ptgts[sel], epoch)
             sel = schan == i
             spilled_s = self.spill.push_sids(name, svals[sel])
             ov_p = int(pack_p[i] - pack_d[i])
@@ -1066,10 +1221,10 @@ class BADEngine:
             stream_cap = min(self._stream_buckets.get(key, 1 << _STREAM_FLOOR),
                              _pow2_bucket(width, _STREAM_FLOOR))
             while True:
-                fn = self._exec_fn(channel, flags, spatial, max_cand,
-                                   backend, stream_cap)
+                fn, fkey = self._exec_fn(channel, flags, spatial, max_cand,
+                                         backend, stream_cap)
                 if timed:  # warm so wall time measures execution, not tracing
-                    jax.block_until_ready(fn(*args))
+                    self._warm_if_new(fkey, fn, args)
                 t0 = time.perf_counter()
                 result, tot = fn(*args)
                 jax.block_until_ready(result.num_results)
@@ -1080,9 +1235,10 @@ class BADEngine:
                                           _STREAM_FLOOR)
             self._stream_buckets[key] = stream_cap
         else:
-            fn = self._exec_fn(channel, flags, spatial, max_cand, backend)
+            fn, fkey = self._exec_fn(channel, flags, spatial, max_cand,
+                                     backend)
             if timed:  # warm the trace so wall time measures execution
-                jax.block_until_ready(fn(*args))
+                self._warm_if_new(fkey, fn, args)
             t0 = time.perf_counter()
             result, _tot = fn(*args)
             jax.block_until_ready(result.num_results)
@@ -1090,7 +1246,7 @@ class BADEngine:
         if advance:
             self.index_state = bidx.advance_watermark(self.index_state, st.index)
             st.last_exec_ts = self.now
-            st.last_exec_size = int(self.dataset.size)
+            st.last_exec_size = self.size_host
             st.executions += 1
         overflow = self._deliver(st, result, flags.aggregation) if deliver else None
         return ExecutionReport(
@@ -1594,7 +1750,8 @@ class BADEngine:
                      spatial_chs: List[ChannelState],
                      plan: plans.ChannelPlan, max_cand: int,
                      deliver: bool = False, p_stream: int = 0,
-                     s_stream: int = 0) -> Callable:
+                     s_stream: int = 0,
+                     donate_rings: bool = False) -> Tuple[Callable, tuple]:
         """ONE compiled plan for every channel of a plan-group: stacked
         candidate discovery per join group (param / spatial), vmapped joins,
         fused broker accounting. With a pallas-family backend the discovery
@@ -1608,15 +1765,21 @@ class BADEngine:
         ``deliver`` the broker convert+send stages (``deliver_all``) run in
         the SAME call — no host round-trip between discovery and fanout.
 
-        Returns ``(res_p, res_s, del_p, del_s, (tot_p, tot_s))`` — the
-        totals are the pre-truncation live-candidate counts (0 on the padded
-        backends), read by the grow loop to detect stream overflow."""
+        The compiled function runs ``(res_p, res_s, del_p, del_s,
+        (tot_p, tot_s))`` — the totals are the pre-truncation live-candidate
+        counts (0 on the padded backends), read by the grow loop to detect
+        stream overflow. With ``donate_rings`` the retry-ring arguments are
+        donated, so at steady state the ring buffers update in place (the
+        dispatcher stores the OUTPUT ring and never re-presents the input
+        handle; the compact grow loop must NOT donate — it re-presents the
+        same ring to the re-run). Returns ``(fn, key)``."""
         key = ("all", plan, max_cand, deliver, p_stream, s_stream,
+               donate_rings,
                tuple((st.spec, st.index) for st in param_chs),
                tuple((st.spec, st.index) for st in spatial_chs))
         cached = self._exec_cache.get(key)
         if cached is not None:
-            return cached
+            return cached, key
         conds = self._conds
         max_window = self.max_window
         num_brokers = self.brokers.num_brokers
@@ -1676,7 +1839,7 @@ class BADEngine:
         mn, sc = self.max_notify, self.max_spill
         maint = self.maintenance
 
-        def run(ds, index_state, p_in, s_in):
+        def run(ds, index_state, p_in, s_in, p_ring, s_ring):
             maint.traces += 1          # trace-time side effect: counts traces
             res_p = res_s = del_p = del_s = None
             tot_p = tot_s = jnp.zeros((), jnp.int32)
@@ -1706,7 +1869,7 @@ class BADEngine:
                         target_brokers=p_in["targets"].brokers,
                         num_brokers=num_brokers,
                         counts=p_in["targets"].counts,
-                        ring=p_in.get("ring"), epochs=p_in.get("epochs"))
+                        ring=p_ring, epochs=p_in.get("epochs"))
             if s_static is not None:
                 cand = discover(ds, index_state, s_static,
                                 s_in["last_ts"], s_in["last_size"])
@@ -1728,12 +1891,13 @@ class BADEngine:
                         res_s, s_in["sids"], pw, mp, mn, sc,
                         target_brokers=s_in["brokers"],
                         num_brokers=num_brokers,
-                        ring=s_in.get("ring"), epochs=s_in.get("epochs"))
+                        ring=s_ring, epochs=s_in.get("epochs"))
             return res_p, res_s, del_p, del_s, (tot_p, tot_s)
 
-        fn = jax.jit(run)
+        fn = (jax.jit(run, donate_argnums=(4, 5)) if donate_rings
+              else jax.jit(run))
         self._cache_put(key, fn)
-        return fn
+        return fn, key
 
     def execute_all(self, flags: Optional[plans.ExecutionFlags] = None,
                     advance: bool = True, timed: bool = True,
@@ -1766,11 +1930,45 @@ class BADEngine:
         ring state through ``_flush_ring`` into the host SpillQueue, so
         delivered + spilled + dropped == produced telescopes across the
         switch.
+
+        Synchronous facade over the dispatch/sync split: equivalent to
+        ``dispatch_all(...).sync()``. The pipelined runtime
+        (``core/runtime.py``) calls ``dispatch_all`` directly and defers the
+        sync one or more ticks.
         """
+        return self.dispatch_all(flags, advance=advance, timed=timed,
+                                 deliver=deliver).sync()
+
+    def dispatch_all(self, flags: Optional[plans.ExecutionFlags] = None,
+                     advance: bool = True, timed: bool = False,
+                     deliver: bool = False,
+                     resolve_spills: bool = False):
+        """Dispatch every plan-group's fused call WITHOUT waiting for the
+        device: returns a ``runtime.PendingExecution`` whose ``.sync()``
+        materializes the per-channel reports (one bulk device->host transfer
+        per join group) and runs the host half of delivery accounting
+        (SpillQueue pushes, conserving DeliveryStats).
+
+        Everything control-plane-visible happens AT DISPATCH: successor
+        retry rings are stored (device handles, no sync), watermarks
+        advance, ``last_exec_*`` snapshots move — so back-to-back dispatches
+        pipeline correctly and a deferred ``sync()`` observes exactly the
+        state its call was dispatched against.
+
+        ``resolve_spills`` captures overflowed pairs into the SpillQueue's
+        epoch-free RESOLVED lane (fanout resolved against the dispatch-time
+        sID tables at sync) — required when syncs are deferred across
+        control-plane churn, where the live epoch may have moved past the
+        dispatch-time one before stats materialize.
+
+        Remaining host sync points, by design: the ``bad_index`` scan mode
+        reads watermark deltas to bucket candidate shapes, and the compact
+        backends read the live-candidate total for the grow-on-overflow
+        protocol (both documented in docs/ARCHITECTURE.md)."""
+        from repro.core.runtime import PendingExecution
         ordered = sorted(self.channels.values(), key=lambda s: s.index)
-        reports: Dict[str, ExecutionReport] = {}
         if not ordered:
-            return reports
+            return PendingExecution(self, [])
         if flags is not None:
             base = plans.ChannelPlan.from_flags(
                 flags, "pallas" if self.use_pallas else "oracle")
@@ -1803,26 +2001,30 @@ class BADEngine:
                                 tuple(st.spec.name for st in schs)))
             for k in [k for k in self._rings if k not in active]:
                 self._flush_ring(*self._rings.pop(k))
-        for plan, (param_chs, spatial_chs) in groups.items():
-            self._execute_plan_group(reports, plan, param_chs, spatial_chs,
-                                     timed, deliver, use_ring)
+        pending = [self._dispatch_plan_group(plan, param_chs, spatial_chs,
+                                             timed, deliver, use_ring,
+                                             resolve_spills)
+                   for plan, (param_chs, spatial_chs) in groups.items()]
         if advance:
+            # watermark advance is a device-side functional update (no
+            # sync); the in-flight calls captured the PRE-advance handle
             self.index_state = bidx.advance_watermarks(
                 self.index_state,
                 jnp.asarray([st.index for st in ordered], jnp.int32))
             for st in ordered:
                 st.last_exec_ts = self.now
-                st.last_exec_size = int(self.dataset.size)
+                st.last_exec_size = self.size_host
                 st.executions += 1
-        return reports
+        return PendingExecution(self, pending)
 
-    def _execute_plan_group(self, reports: Dict[str, ExecutionReport],
-                            plan: plans.ChannelPlan,
-                            param_chs: List[ChannelState],
-                            spatial_chs: List[ChannelState],
-                            timed: bool, deliver: bool,
-                            use_ring: bool) -> None:
-        """Run ONE plan-group's fused call and write its channels' reports."""
+    def _dispatch_plan_group(self, plan: plans.ChannelPlan,
+                             param_chs: List[ChannelState],
+                             spatial_chs: List[ChannelState],
+                             timed: bool, deliver: bool,
+                             use_ring: bool,
+                             resolve_spills: bool) -> "_PendingGroup":
+        """Dispatch ONE plan-group's fused call; reports materialize later
+        in ``_materialize_group``."""
         chans = param_chs + spatial_chs
         max_cand = self.max_candidates
         if plan.scan_mode == "bad_index":
@@ -1846,7 +2048,7 @@ class BADEngine:
             p_layout = plan.aggregation
         p_names = tuple(st.spec.name for st in param_chs)
         s_names = tuple(st.spec.name for st in spatial_chs)
-        p_in = s_in = None
+        p_in = s_in = p_ring = s_ring = None
         if param_chs:
             targets, up_masks, domains = self._stacked_inputs(
                 param_chs, plan.aggregation)
@@ -1863,7 +2065,7 @@ class BADEngine:
             if deliver:
                 p_in["sids"] = self._stacked_sids(param_chs, plan.aggregation)
                 if use_ring:
-                    p_in["ring"] = self._ring_in(
+                    p_ring = self._ring_in(
                         ("param", plan, p_names), p_names, len(param_chs))
                     p_in["epochs"] = jnp.asarray(
                         [st.epoch for st in param_chs], jnp.int32)
@@ -1880,55 +2082,97 @@ class BADEngine:
             if deliver:
                 s_in["sids"] = self._stacked_spatial_sids(spatial_chs)
                 if use_ring:
-                    s_in["ring"] = self._ring_in(
+                    s_ring = self._ring_in(
                         ("spatial", plan, s_names), s_names,
                         len(spatial_chs))
                     s_in["epochs"] = jnp.asarray(
                         [st.epoch for st in spatial_chs], jnp.int32)
-        args = (self.dataset, self.index_state, p_in, s_in)
+        args = (self.dataset, self.index_state, p_in, s_in, p_ring, s_ring)
+        t0 = time.perf_counter()
         if plans.is_compact(plan.backend):
+            # the grow protocol reads the live total (documented sync
+            # point); rings are NOT donated — the loop re-presents them
             res, wall = self._run_compact_group(
                 plan, param_chs, spatial_chs, max_cand, deliver, args, timed)
         else:
-            fn = self._exec_all_fn(param_chs, spatial_chs, plan, max_cand,
-                                   deliver)
-            if timed:  # warm the trace so wall time measures execution
-                jax.block_until_ready(fn(*args))
-            t0 = time.perf_counter()
+            donate = use_ring and (p_ring is not None or s_ring is not None)
+            fn, fkey = self._exec_all_fn(param_chs, spatial_chs, plan,
+                                         max_cand, deliver,
+                                         donate_rings=donate)
+            if timed:
+                # warming would CONSUME the donated rings: hand the warm
+                # call copies, dispatch the real call the originals
+                warm_args = args
+                if donate:
+                    cp = lambda r: (None if r is None
+                                    else jax.tree.map(jnp.copy, r))
+                    warm_args = args[:4] + (cp(p_ring), cp(s_ring))
+                self._warm_if_new(fkey, fn, warm_args)
+                t0 = time.perf_counter()
             res = fn(*args)
-            jax.block_until_ready(res)
-            wall = time.perf_counter() - t0
-        res_p, res_s, del_p, del_s, _tots = res
-        # One bulk device->host transfer per join group, then per-channel
-        # numpy views: the per-channel path's int()/slice pattern would cost
-        # dozens of device round-trips here. Delivery stats arrive the same
-        # way: the fused call already packed/fanned out every channel, so the
-        # host only pushes spills and reads (C,)-shaped counters.
-        share = wall / len(chans)
+            wall = 0.0
+            if timed:
+                jax.block_until_ready(res)
+                wall = time.perf_counter() - t0
+        del_p, del_s = res[2], res[3]
         if use_ring:
-            # persist the successor rings (device-resident: no host
-            # round-trip) so the next fused call re-delivers their content
+            # persist the successor rings AT DISPATCH (device-resident
+            # handles, no sync) so the next dispatch re-delivers their
+            # content while this call is still in flight
             if param_chs:
                 self._rings[("param", plan, p_names)] = (
                     p_names, p_layout, del_p.ring)
             if spatial_chs:
                 self._rings[("spatial", plan, s_names)] = (
                     s_names, plan.aggregation, del_s.ring)
-        for chs, res, dlv, layout in (
-                (param_chs, res_p, del_p, p_layout),
-                (spatial_chs, res_s, del_s, plan.aggregation)):
+        return _PendingGroup(
+            plan=plan, param_chs=param_chs, spatial_chs=spatial_chs,
+            res=res, p_layout=p_layout, s_layout=plan.aggregation,
+            deliver=deliver, wall=wall, t0=t0,
+            p_epochs=[st.epoch for st in param_chs],
+            s_epochs=[st.epoch for st in spatial_chs],
+            p_sids=(p_in or {}).get("sids") if resolve_spills else None,
+            s_sids=(s_in or {}).get("sids") if resolve_spills else None)
+
+    def _materialize_group(self, g: "_PendingGroup",
+                           reports: Dict[str, ExecutionReport]) -> None:
+        """Host half of one dispatched plan-group: one bulk device->host
+        transfer per join group, then per-channel numpy views — the
+        per-channel path's int()/slice pattern would cost dozens of device
+        round-trips here. Delivery stats arrive the same way: the fused call
+        already packed/fanned out every channel, so the host only pushes
+        spills and reads (C,)-shaped counters. ``wall_time_s`` is the timed
+        fused wall amortized per channel, or (untimed) the
+        dispatch-to-materialize latency share."""
+        res_p, res_s, del_p, del_s, _tots = g.res
+        wall = g.wall
+        if not wall:
+            # every output of one executable completes together, so the
+            # totals scalars stand in for the whole call — blocking on the
+            # full tree would touch the successor ring handle, which the
+            # NEXT dispatch may already have consumed (donated)
+            jax.block_until_ready(_tots)
+            wall = time.perf_counter() - g.t0
+        share = wall / max(len(g.param_chs) + len(g.spatial_chs), 1)
+        for chs, res, dlv, layout, epochs, sids in (
+                (g.param_chs, res_p, del_p, g.p_layout, g.p_epochs,
+                 g.p_sids),
+                (g.spatial_chs, res_s, del_s, g.s_layout, g.s_epochs,
+                 g.s_sids)):
             if not chs:
                 continue
             host = jax.tree.map(np.asarray, res)
-            stats = (self._spill_and_stats(chs, layout, dlv)
-                     if deliver else {})
+            stats = (self._spill_and_stats(
+                chs, layout, dlv, epochs=epochs,
+                resolve_tables=None if sids is None else np.asarray(sids))
+                if g.deliver else {})
             pay = noti = None
-            if deliver and self.debug_delivery_buffers:
+            if g.deliver and self.debug_delivery_buffers:
                 pay = np.asarray(dlv.pack.payload)
                 noti = np.asarray(dlv.fan.notify)
             for i, st in enumerate(chs):
                 reports[st.spec.name] = ExecutionReport(
-                    channel=st.spec.name, flags=plan.flags, plan=plan,
+                    channel=st.spec.name, flags=g.plan.flags, plan=g.plan,
                     result=jax.tree.map(lambda a, i=i: a[i], host),
                     wall_time_s=share,
                     num_results=int(host.num_results[i]),
@@ -1964,10 +2208,10 @@ class BADEngine:
                      _pow2_bucket(len(spatial_chs) * width, _STREAM_FLOOR))
                  if spatial_chs else 0)
         while True:
-            fn = self._exec_all_fn(param_chs, spatial_chs, plan, max_cand,
-                                   deliver, p_cap, s_cap)
+            fn, fkey = self._exec_all_fn(param_chs, spatial_chs, plan,
+                                         max_cand, deliver, p_cap, s_cap)
             if timed:  # warm the trace so wall time measures execution
-                jax.block_until_ready(fn(*args))
+                self._warm_if_new(fkey, fn, args)
             t0 = time.perf_counter()
             res = fn(*args)
             jax.block_until_ready(res)
@@ -2124,6 +2368,50 @@ class BADEngine:
                     rep.notify if prev.notify is None else prev.notify)
 
         drained_pairs = set()
+        # resolved lane first: epoch-free entries (fanout captured against
+        # the producing call's own table) re-enter the convert stage with
+        # their recorded sID rows as the table — immune to churn between
+        # spill and drain, which is exactly why the pipelined runtime's
+        # deferred syncs capture into this lane. Shares the one-pair-lane-
+        # per-channel-per-round rule so the payload stays one coherent
+        # buffer.
+        for name in self.spill.resolved_keys():
+            if name in drained_pairs:
+                continue
+            drained_pairs.add(name)
+            rows, tgts, sid_rows = self.spill.pop_resolved(
+                name, self.max_deliver_pairs)
+            dropped = 0
+            payload = None
+            delivered = respilled = 0
+            if name not in self.channels:
+                dropped = len(rows)
+            elif len(rows):
+                n = len(rows)
+                # synthetic targets index the recorded sID rows directly;
+                # the wire header's target word is patched back to the true
+                # targets after packing
+                res = self._synthetic_result(rows,
+                                             np.arange(n, dtype=np.int32))
+                tbl = np.full((_pow2_bucket(n, 6), sid_rows.shape[1]), -1,
+                              np.int32)
+                tbl[:n] = sid_rows
+                buf, dlv, _ = pack_payloads(res, jnp.asarray(tbl),
+                                            self.deliver_payload_words,
+                                            self.max_deliver_pairs)
+                delivered = int(dlv)
+                payload = np.array(buf)   # writable host copy
+                payload[:delivered, 1] = tgts[:delivered]
+                if delivered < n:   # exact in-order prefix delivered
+                    self.spill._push_front_resolved(
+                        name, rows[delivered:], tgts[delivered:],
+                        sid_rows[delivered:])
+                    respilled = n - delivered
+            if delivered or dropped or respilled:
+                merge(name, DrainReport(
+                    DeliveryStats(delivered, respilled, dropped, 0, 0, 0),
+                    payload=payload))
+
         for name, layout in self.spill.pair_keys():
             if name in drained_pairs:
                 # one pair lane per channel per round: a channel spilled

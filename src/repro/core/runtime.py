@@ -1,0 +1,136 @@
+"""§Pipelined tick runtime: overlap host control-plane work with in-flight
+device execution.
+
+The synchronous tick loop serializes host and device: ``execute_all``
+blocks per plan-group, materializes every stat eagerly, and only then lets
+the next tick's aggregator/churn numpy work start. JAX dispatch is
+asynchronous and per-device execution is in-order, so none of that waiting
+is necessary: ``BADEngine.dispatch_all`` enqueues every plan-group's fused
+call and returns device-array HANDLES immediately; this module schedules
+when those handles are finally read.
+
+``PendingExecution`` is one dispatched tick: an idempotent ``sync()``
+materializes its per-channel ``ExecutionReport``s (the first host read of
+the call's outputs) and runs the host half of delivery accounting.
+``TickPipeline`` keeps a bounded window of them in flight — ``step`` at
+depth N dispatches tick t while ticks t-1..t-(N-1) are still executing, and
+only syncs the oldest when the window would exceed N-1 pending entries. The
+control-plane work between ``step`` calls (subscription churn, batch
+synthesis, ingest) therefore runs concurrently with the previous ticks'
+joins and delivery.
+
+Correctness under deferral: device results are dispatch-ordered and
+bit-identical to the synchronous schedule (rings thread device-side from
+dispatch to dispatch; watermarks advance at dispatch), so the ONLY thing
+that moves in time is the host SpillQueue. Deferred captures use the
+queue's epoch-free RESOLVED lane (``dispatch_all(resolve_spills=True)``):
+pair fanout is resolved at sync against the dispatch-time sID tables, so
+draining every ``drain_every`` ticks delivers the identical notification
+multiset as the synchronous drain-every-tick path — including under
+same-channel churn during sustained overflow.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+
+class PendingExecution:
+    """One dispatched ``dispatch_all`` call awaiting materialization.
+
+    ``sync()`` is idempotent: the first call blocks on the device results,
+    runs the host half (report assembly, SpillQueue pushes, conserving
+    DeliveryStats) and caches the reports; later calls return them.
+    ``latency_s`` records the dispatch-to-materialize latency of the first
+    sync."""
+
+    def __init__(self, engine, groups: List):
+        self._engine = engine
+        self._groups = groups
+        self._reports: Optional[Dict] = None
+        self._t0 = time.perf_counter()
+        self.latency_s: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self._reports is not None
+
+    def sync(self) -> Dict:
+        if self._reports is None:
+            reports: Dict = {}
+            for g in self._groups:
+                self._engine._materialize_group(g, reports)
+            self.latency_s = time.perf_counter() - self._t0
+            self._reports = reports
+        return self._reports
+
+    @property
+    def reports(self) -> Dict:
+        return self.sync()
+
+
+class TickPipeline:
+    """Bounded-depth pipeline of engine ticks.
+
+    ``depth`` is the maximum number of ticks simultaneously in flight
+    (depth 1 degenerates to the synchronous schedule: every ``step`` syncs
+    its own dispatch). ``drain_every`` batches ``drain_spilled`` host
+    round-trips every K ticks (default: K == depth) — ``drain_due()``
+    tells the driver when; conservation holds because deferred captures go
+    through the SpillQueue's resolved lane.
+
+    ``step`` returns the (tick_number, reports) pairs that became ready,
+    oldest first — possibly empty while the window fills. ``flush()``
+    syncs everything still in flight (end of run, or before an operation
+    that must observe a quiesced engine). ``max_in_flight`` is the measured
+    pipeline depth actually achieved; ``latencies`` the per-tick
+    dispatch-to-materialize seconds."""
+
+    def __init__(self, engine, depth: int = 2,
+                 drain_every: Optional[int] = None):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.engine = engine
+        self.depth = depth
+        self.drain_every = drain_every or depth
+        self._window: deque = deque()   # (tick_number, PendingExecution)
+        self._tick = 0
+        self.max_in_flight = 0
+        self.latencies: List[float] = []
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._window)
+
+    def step(self, flags=None, deliver: bool = True,
+             timed: bool = False) -> List[Tuple[int, Dict]]:
+        """Dispatch one tick; sync (only) what the depth bound forces out."""
+        pend = self.engine.dispatch_all(flags, timed=timed, deliver=deliver,
+                                        resolve_spills=True)
+        self._window.append((self._tick, pend))
+        self._tick += 1
+        # the dispatch just issued overlaps with every older in-flight tick
+        self.max_in_flight = max(self.max_in_flight, len(self._window))
+        out: List[Tuple[int, Dict]] = []
+        while len(self._window) > self.depth - 1:
+            t, p = self._window.popleft()
+            out.append((t, p.sync()))
+            if p.latency_s is not None:
+                self.latencies.append(p.latency_s)
+        return out
+
+    def flush(self) -> List[Tuple[int, Dict]]:
+        """Sync every in-flight tick, oldest first."""
+        out: List[Tuple[int, Dict]] = []
+        while self._window:
+            t, p = self._window.popleft()
+            out.append((t, p.sync()))
+            if p.latency_s is not None:
+                self.latencies.append(p.latency_s)
+        return out
+
+    def drain_due(self) -> bool:
+        """True when the batched-drain cadence has come around: the driver
+        should loop ``engine.drain_spilled()`` until the queue empties."""
+        return self._tick % self.drain_every == 0

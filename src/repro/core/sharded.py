@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -72,6 +73,44 @@ class ShardedExecutionReport:
     overflow: Optional[DeliveryStats]
     per_shard: List
     routed: Optional[np.ndarray] = None
+
+
+class ShardedPendingExecution:
+    """Every shard's in-flight tick behind one handle: ``sync()``
+    materializes each shard's ``PendingExecution`` under that shard's
+    device context, merges the per-channel reports, and (delivering
+    engines with cross-shard routing) runs the notify shuffle — idempotent,
+    like the single-engine handle it wraps. ``latency_s`` records the
+    dispatch-to-materialize latency of the first sync."""
+
+    def __init__(self, owner, pends: List, deliver: bool):
+        self._owner = owner
+        self._pends = pends
+        self._deliver = deliver
+        self._reports: Optional[Dict[str, ShardedExecutionReport]] = None
+        self._t0 = time.perf_counter()
+        self.latency_s: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self._reports is not None
+
+    def sync(self) -> Dict[str, ShardedExecutionReport]:
+        if self._reports is None:
+            per_shard = []
+            for i, p in enumerate(self._pends):
+                with self._owner._on(i):
+                    per_shard.append(p.sync())
+            merged = self._owner._merge_reports(per_shard)
+            if self._deliver and self._owner.route_cross_shard:
+                self._owner._route(merged)
+            self.latency_s = time.perf_counter() - self._t0
+            self._reports = merged
+        return self._reports
+
+    @property
+    def reports(self) -> Dict[str, ShardedExecutionReport]:
+        return self.sync()
 
 
 class _SpillView:
@@ -396,12 +435,34 @@ class ShardedBADEngine:
         subscriptions (plan-groups, rings, and caches per shard), merged
         per channel. With ``route_cross_shard`` the delivered notify sIDs
         are then regrouped onto their broker-owner shards through the
-        collective shuffle."""
-        per_shard = []
+        collective shuffle.
+
+        Synchronous facade over ``dispatch_all(...).sync()`` — with one
+        behavioral improvement inherited from the split: ALL shards'
+        fused calls dispatch before any shard's results are read, so the
+        per-device queues execute concurrently instead of serializing on
+        each shard's materialization."""
+        return self.dispatch_all(flags, advance=advance, timed=timed,
+                                 deliver=deliver).sync()
+
+    def dispatch_all(self, flags: Optional[plans.ExecutionFlags] = None,
+                     advance: bool = True, timed: bool = False,
+                     deliver: bool = False,
+                     resolve_spills: bool = False
+                     ) -> "ShardedPendingExecution":
+        """Dispatch every shard's plan-group calls without waiting on any of
+        them; the returned handle's ``sync()`` materializes and merges the
+        per-channel reports (and runs the cross-shard notify route)."""
+        pends = []
         for i, e in enumerate(self.shards):
             with self._on(i):
-                per_shard.append(e.execute_all(flags, advance=advance,
-                                               timed=timed, deliver=deliver))
+                pends.append(e.dispatch_all(
+                    flags, advance=advance, timed=timed, deliver=deliver,
+                    resolve_spills=resolve_spills))
+        return ShardedPendingExecution(self, pends, deliver)
+
+    def _merge_reports(self, per_shard: List[Dict]
+                       ) -> Dict[str, ShardedExecutionReport]:
         merged: Dict[str, ShardedExecutionReport] = {}
         for name in self._specs:
             reps = [r[name] for r in per_shard if name in r]
@@ -421,8 +482,6 @@ class ShardedBADEngine:
                 wall_time_s=sum(r.wall_time_s for r in reps),
                 overflow=overflow,
                 per_shard=reps)
-        if deliver and self.route_cross_shard:
-            self._route(merged)
         return merged
 
     def _route(self, merged: Dict[str, ShardedExecutionReport]) -> None:
@@ -525,6 +584,7 @@ class ShardedBADEngine:
                 # row assignment)
                 e.dataset = jax.tree.map(jnp.asarray, dataset_host)
                 e.index_state = jax.tree.map(jnp.asarray, index_host)
+                e.size_host = int(dataset_host.size)   # host mirror follows
                 for name in self._specs:
                     ts, size = exec_marks[name]
                     e.channels[name].last_exec_ts = ts

@@ -1,0 +1,361 @@
+"""Asynchronous pipelined tick runtime (core/runtime.py).
+
+``dispatch_all`` enqueues every plan-group's fused call and returns lazy
+handles; ``PendingExecution.sync()`` materializes them ticks later. These
+tests pin down the contract that makes the overlap safe:
+
+  * content parity — a pipelined ``run_ticks`` (depth >= 2, batched
+    drains through the SpillQueue's epoch-free resolved lane) delivers the
+    identical per-channel (row, sID) pair / sID multisets as the
+    synchronous path, under churn + sustained overflow, both layouts,
+    padded and compact backends;
+  * zero steady-state retraces at depth — the pipeline replays cached
+    traces only;
+  * warm-on-trace-miss — a timed ``execute_all`` executes each group's
+    fused call exactly once when the trace is already warm (the
+    double-execution regression);
+  * host-derived ingest — ``size_host``/row ids mirror the device dataset
+    with no per-tick sync, ring-buffer wraparound included;
+  * buffer donation — steady-state ingest and delivery reuse the dataset /
+    retry-ring device buffers in place;
+  * the resolved spill lane — captures survive control-plane churn between
+    dispatch and a deferred drain, where the epoch lane must drop.
+"""
+import numpy as np
+import pytest
+
+from repro.core.broker import payload_notifications
+from repro.core.channel import tweets_about_crime, tweets_about_drugs
+from repro.core.churn import ChurnWorkload, run_ticks
+from repro.core.engine import BADEngine
+from repro.core.plans import ChannelPlan, ExecutionFlags
+from repro.core.runtime import TickPipeline
+
+from conftest import check_delivery_conservation, make_tweets
+
+PW = 8    # engine default deliver_payload_words
+
+FLAGS_AGG = ExecutionFlags(scan_mode="window", aggregation=True,
+                           param_pushdown=True)
+FLAGS_FLAT = ExecutionFlags(scan_mode="window", aggregation=False,
+                            param_pushdown=False)
+
+
+def _overflow_engine(rng, ring_capacity=24, max_deliver_pairs=12,
+                     max_notify=24, n_subs=200, spatial=False, **kw):
+    """Tightly capped engine: every tick overflows through the ring and
+    cascades into the host SpillQueue, so deferred drains carry content."""
+    eng = BADEngine(dataset_capacity=4096, index_capacity=1024,
+                    max_window=2048, max_candidates=512,
+                    brokers=("B1", "B2"), group_cap=8,
+                    max_deliver_pairs=max_deliver_pairs,
+                    max_notify=max_notify, ring_capacity=ring_capacity, **kw)
+    eng.create_channel(tweets_about_drugs())
+    if spatial:
+        eng.create_channel(tweets_about_crime(1))
+        eng.set_user_locations(
+            (rng.normal(size=(30, 2)) * 30).astype(np.float32),
+            rng.integers(0, 2, 30))
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, n_subs),
+                       rng.integers(0, 2, n_subs))
+    return eng
+
+
+def _collectors(pairs, sids):
+    """(on_tick, on_drain) hooks folding delivered content — tick reports
+    and DrainReports alike — into per-channel (row, sID) / sID multisets."""
+    def on_tick(tick, reports):
+        for name, rep in reports.items():
+            o = rep.overflow
+            if o is None or rep.payload is None:
+                continue
+            pairs.extend((name,) + tuple(x) for x in payload_notifications(
+                np.asarray(rep.payload), o.delivered_pairs, PW).tolist())
+            sids.extend((name, s) for s in
+                        np.asarray(rep.notify)[:o.delivered_sids].tolist())
+
+    def on_drain(drained):
+        for name, dr in drained.items():
+            if dr.payload is not None and dr.stats.delivered_pairs:
+                pairs.extend((name,) + tuple(x) for x in
+                             payload_notifications(
+                                 np.asarray(dr.payload),
+                                 dr.stats.delivered_pairs, PW).tolist())
+            if dr.notify is not None and dr.stats.delivered_sids:
+                sids.extend((name, s) for s in
+                            dr.notify[:dr.stats.delivered_sids].tolist())
+    return on_tick, on_drain
+
+
+def _settle(eng, pairs, sids):
+    """Flush ring residue through the queue and drain to empty (drops from
+    ring-epoch staleness are dispatch-aligned, hence identical per seed)."""
+    eng.flush_rings()
+    rounds = 0
+    while eng.spill.pending_pairs() + eng.spill.pending_sids() > 0:
+        rounds += 1
+        assert rounds < 500, "drain did not converge"
+        for name, dr in eng.drain_spilled().items():
+            if dr.payload is not None and dr.stats.delivered_pairs:
+                pairs.extend((name,) + tuple(x) for x in
+                             payload_notifications(
+                                 np.asarray(dr.payload),
+                                 dr.stats.delivered_pairs, PW).tolist())
+            if dr.notify is not None and dr.stats.delivered_sids:
+                sids.extend((name, s) for s in
+                            dr.notify[:dr.stats.delivered_sids].tolist())
+
+
+def _churn_run(depth, backend, flags, seed=11, ticks=7):
+    """One seeded churn-under-overflow run; returns (report, sorted pair
+    multiset, sorted sID multiset)."""
+    r = np.random.default_rng(seed)
+    eng = _overflow_engine(np.random.default_rng(seed + 1), spatial=True)
+    eng.debug_delivery_buffers = True
+    use_channel_plans = backend is not None
+    if use_channel_plans:
+        plan = ChannelPlan.from_flags(flags, backend)
+        for name in eng.channels:
+            eng.set_plan(name, plan)
+    wl = [ChurnWorkload("TweetsAboutDrugs", adds_per_tick=10,
+                        removes_per_tick=6)]
+    pairs, sids = [], []
+    on_tick, on_drain = _collectors(pairs, sids)
+    rep = run_ticks(
+        eng, wl, ticks, r, flags=None if use_channel_plans else flags,
+        deliver=True, ingest_per_tick=96,
+        make_batch=lambda rr, n, t0: make_tweets(rr, n, t0=t0,
+                                                 match_drugs=0.3),
+        warmup=1, use_channel_plans=use_channel_plans,
+        on_tick=on_tick, on_drain=on_drain, pipeline_depth=depth)
+    _settle(eng, pairs, sids)
+    return rep, sorted(pairs), sorted(sids)
+
+
+@pytest.mark.parametrize("backend", [None, "compact"],
+                         ids=["padded", "compact"])
+@pytest.mark.parametrize("agg", [True, False], ids=["agg", "flat"])
+def test_pipelined_content_parity_vs_sync(backend, agg):
+    """Depth-3 pipelined run (batched resolved-lane drains) delivers the
+    identical per-channel pair/sID multisets — and identical aggregate
+    DeliveryStats — as the synchronous drain-every-tick path, under churn +
+    sustained overflow, spatial channel included."""
+    flags = FLAGS_AGG if agg else FLAGS_FLAT
+    rep_sync, pairs_sync, sids_sync = _churn_run(1, backend, flags)
+    rep_pipe, pairs_pipe, sids_pipe = _churn_run(3, backend, flags)
+    assert pairs_pipe == pairs_sync
+    assert sids_pipe == sids_sync
+    assert rep_pipe.pipeline_depth >= 2
+    assert rep_sync.pipeline_depth == 1
+    # device results are dispatch-aligned: tick aggregates match exactly
+    assert rep_pipe.results == rep_sync.results
+    assert rep_pipe.spilled == rep_sync.spilled
+    assert (rep_pipe.delivered_pairs + rep_pipe.delivered_sids
+            == rep_sync.delivered_pairs + rep_sync.delivered_sids)
+    assert rep_pipe.dropped == rep_sync.dropped
+    # batching actually happened: fewer drain round-trips than sync
+    assert rep_pipe.drain_calls <= rep_sync.drain_calls
+
+
+def test_pipelined_zero_steady_state_retraces(rng):
+    """After warmup the pipelined loop replays cached traces only: the
+    maintenance trace counter delta over the timed ticks is zero and the
+    measured in-flight depth reaches the requested one."""
+    eng = _overflow_engine(rng, ring_capacity=1 << 10,
+                           max_deliver_pairs=1 << 10, max_notify=1 << 12)
+    wl = [ChurnWorkload("TweetsAboutDrugs", adds_per_tick=0,
+                        removes_per_tick=0)]
+    rep = run_ticks(eng, wl, 9, rng, flags=FLAGS_AGG, deliver=True,
+                    ingest_per_tick=64,
+                    make_batch=lambda rr, n, t0: make_tweets(
+                        rr, n, t0=t0, match_drugs=0.3),
+                    warmup=3, pipeline_depth=3)
+    assert rep.maintenance.traces == 0
+    assert rep.pipeline_depth == 3
+    assert rep.dropped == 0
+
+
+def test_tick_pipeline_window_and_flush(rng):
+    """The raw TickPipeline: ``step`` returns nothing while the window
+    fills, then exactly the tick the depth bound forces out (oldest first,
+    numbered by dispatch tick); ``flush`` returns the stragglers; depth < 1
+    is rejected."""
+    eng = _overflow_engine(rng)
+    with pytest.raises(ValueError):
+        TickPipeline(eng, depth=0)
+    pipe = TickPipeline(eng, depth=3)
+    got = []
+    for t in range(5):
+        eng.ingest(make_tweets(rng, 64, t0=100 * (t + 1), match_drugs=0.3))
+        got += pipe.step(FLAGS_AGG, deliver=True)
+    assert [t for t, _ in got] == [0, 1, 2]     # 2 still in flight
+    assert pipe.in_flight == 2
+    rest = pipe.flush()
+    assert [t for t, _ in rest] == [3, 4]
+    assert pipe.in_flight == 0
+    assert pipe.max_in_flight == 3
+    for _, reports in got + rest:
+        rep = reports["TweetsAboutDrugs"]
+        check_delivery_conservation(rep.overflow, rep.num_results,
+                                    rep.num_notified)
+    # depth-K drain cadence: due every K-th dispatched tick
+    assert pipe.drain_due() is False            # _tick == 5, drain_every 3
+    pipe.step(FLAGS_AGG, deliver=True)
+    assert pipe.drain_due() is True
+    pipe.flush()
+
+
+def test_timed_execute_warms_only_on_trace_miss(rng, monkeypatch):
+    """The double-execution regression: a timed ``execute_all`` warms a
+    fused call only on an actual trace-cache miss — steady state runs each
+    group exactly ONCE per tick (counted via a wrapper around the compiled
+    fn, which the shape-keyed warm bookkeeping must tolerate)."""
+    eng = _overflow_engine(rng, ring_capacity=1 << 10)
+    eng.ingest(make_tweets(rng, 200, match_drugs=0.3))
+    calls = []
+    orig = BADEngine._exec_all_fn
+
+    def counting(self, *a, **kw):
+        fn, key = orig(self, *a, **kw)
+
+        def wrapped(*args):
+            calls.append(key)
+            return fn(*args)
+        return wrapped, key
+
+    monkeypatch.setattr(BADEngine, "_exec_all_fn", counting)
+    eng.execute_all(FLAGS_AGG, timed=True, deliver=True)
+    first = len(calls)
+    assert first == 2          # one warm execution + the timed one
+    eng.execute_all(FLAGS_AGG, timed=True, deliver=True)
+    assert len(calls) - first == 1   # warm trace: exactly one execution
+
+
+def test_compact_timed_warms_only_on_trace_miss(rng, monkeypatch):
+    """Same regression on the compact grow-protocol path: once the stream
+    bucket and trace are warm, a timed ``execute_all`` runs the group
+    exactly once."""
+    eng = _overflow_engine(rng, ring_capacity=1 << 10)
+    eng.set_plan("TweetsAboutDrugs",
+                 ChannelPlan.from_flags(FLAGS_AGG, "compact"))
+    eng.ingest(make_tweets(rng, 200, match_drugs=0.3))
+    calls = []
+    orig = BADEngine._exec_all_fn
+
+    def counting(self, *a, **kw):
+        fn, key = orig(self, *a, **kw)
+
+        def wrapped(*args):
+            calls.append(key)
+            return fn(*args)
+        return wrapped, key
+
+    monkeypatch.setattr(BADEngine, "_exec_all_fn", counting)
+    eng.execute_all(timed=True, deliver=True)   # may grow + warm
+    eng.execute_all(timed=True, deliver=True)   # bucket stable, trace warm
+    before = len(calls)
+    eng.execute_all(timed=True, deliver=True)
+    assert len(calls) - before == 1
+
+
+def test_size_host_mirrors_device_size(rng):
+    """``ingest`` derives row ids and ``size_host`` on the host (no device
+    sync); the mirror tracks the device counter exactly, ring-buffer
+    wraparound past the dataset capacity included."""
+    eng = BADEngine(dataset_capacity=256, index_capacity=256,
+                    max_window=256, max_candidates=128,
+                    brokers=("B1",), group_cap=8)
+    eng.create_channel(tweets_about_drugs())
+    total = 0
+    for t in range(5):
+        rows = eng.ingest(make_tweets(rng, 100, t0=100 * (t + 1)))
+        assert rows.tolist() == list(range(total, total + 100))
+        total += 100
+        assert eng.size_host == total
+        assert eng.size_host == int(eng.dataset.size)
+    assert total > 256      # wrapped the 256-slot ring buffer
+
+
+def _ptr(arr):
+    return arr.unsafe_buffer_pointer()
+
+
+def test_ingest_donates_dataset_buffers(rng):
+    """Steady-state ingest updates the dataset/index in place: the donated
+    field buffer is reused for the output (same device pointer)."""
+    eng = _overflow_engine(rng)
+    eng.ingest(make_tweets(rng, 64, t0=100))     # traces
+    if not hasattr(eng.dataset.fields, "unsafe_buffer_pointer"):
+        pytest.skip("jax.Array.unsafe_buffer_pointer unavailable")
+    before = _ptr(eng.dataset.fields)
+    eng.ingest(make_tweets(rng, 64, t0=200))
+    assert _ptr(eng.dataset.fields) == before
+
+
+def test_delivery_donates_ring_buffers(rng):
+    """Steady-state fused delivery donates the retry-ring lanes: the
+    successor ring's buffers come from the presented ring's allocation
+    (XLA may permute same-shaped aliases, so assert on the pointer sets)."""
+    eng = _overflow_engine(rng, ring_capacity=64)
+    eng.ingest(make_tweets(rng, 300, match_drugs=0.3))
+    eng.execute_all(FLAGS_AGG, deliver=True)     # traces + seeds the ring
+    [(_, _, ring)] = list(eng._rings.values())
+    if not hasattr(ring.pair_rows, "unsafe_buffer_pointer"):
+        pytest.skip("jax.Array.unsafe_buffer_pointer unavailable")
+    before = {_ptr(x) for x in ring}
+    eng.ingest(make_tweets(rng, 64, t0=500, match_drugs=0.3))
+    eng.execute_all(FLAGS_AGG, deliver=True)
+    [(_, _, ring2)] = list(eng._rings.values())
+    after = {_ptr(x) for x in ring2}
+    assert before & after, "no ring buffer was reused in place"
+
+
+def test_resolved_lane_survives_churn_before_deferred_drain(rng):
+    """Pipelined captures go through the epoch-free resolved lane: churn
+    between dispatch and the deferred drain must not stale them. The
+    epoch-lane control run drops under the identical schedule."""
+    outcomes = {}
+    for lane in ("resolved", "epoch"):
+        r = np.random.default_rng(3)
+        eng = _overflow_engine(r, ring_capacity=4, max_deliver_pairs=8,
+                               max_notify=16)
+        eng.ingest(make_tweets(r, 300, match_drugs=0.3))
+        if lane == "resolved":
+            rep = eng.dispatch_all(FLAGS_AGG, deliver=True,
+                                   resolve_spills=True).sync()
+        else:
+            rep = eng.execute_all(FLAGS_AGG, deliver=True)
+        o = rep["TweetsAboutDrugs"].overflow
+        check_delivery_conservation(o, rep["TweetsAboutDrugs"].num_results,
+                                    rep["TweetsAboutDrugs"].num_notified)
+        queued = eng.spill.pending_pairs()
+        assert queued > 0        # ring overflowed into the host queue
+        eng.subscribe("TweetsAboutDrugs", 3, "B1")      # epoch bump
+        delivered = dropped = 0
+        rounds = 0
+        while eng.spill.pending_pairs() + eng.spill.pending_sids() > 0:
+            rounds += 1
+            assert rounds < 500
+            for dr in eng.drain_spilled().values():
+                delivered += dr.stats.delivered_pairs
+                dropped += dr.stats.dropped_pairs
+        outcomes[lane] = (queued, delivered, dropped)
+    queued, delivered, dropped = outcomes["resolved"]
+    assert dropped == 0 and delivered == queued
+    # the control shows the gap is real: epoch-lane pairs went stale
+    assert outcomes["epoch"][2] > 0
+
+
+def test_run_ticks_depth_one_equals_sync_path(rng):
+    """``pipeline_depth=1`` is rejected into the classic synchronous body:
+    the report says depth 1 and drain cadence is per-tick."""
+    eng = _overflow_engine(rng)
+    wl = [ChurnWorkload("TweetsAboutDrugs", adds_per_tick=4,
+                        removes_per_tick=2)]
+    rep = run_ticks(eng, wl, 4, rng, flags=FLAGS_AGG, deliver=True,
+                    ingest_per_tick=64,
+                    make_batch=lambda rr, n, t0: make_tweets(
+                        rr, n, t0=t0, match_drugs=0.3),
+                    warmup=1, pipeline_depth=1)
+    assert rep.pipeline_depth == 1
+    assert rep.drain_calls > 0

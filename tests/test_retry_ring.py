@@ -251,6 +251,37 @@ def test_spatial_ring_redelivers_and_goes_stale_on_cohort_change(rng):
     assert o.dropped_pairs >= left_p     # stale pairs dropped, not misrouted
 
 
+def test_ring_donation_reuses_buffers_and_preserves_conservation(rng):
+    """The fused delivery call donates the presented retry ring: steady
+    state reuses the ring allocation in place (pointer-set overlap), and
+    the donated path's multi-tick conservation is unchanged — delivered +
+    spilled + dropped == produced at every tick, drain included."""
+    eng = _ring_engine(rng, ring_capacity=32)
+    eng.ingest(make_tweets(rng, 400, match_drugs=0.3))
+    rep = eng.execute_all(FLAGS, timed=False, deliver=True)["TweetsAboutDrugs"]
+    check_delivery_conservation(rep.overflow, rep.num_results,
+                                rep.num_notified)
+    [(_, _, ring)] = list(eng._rings.values())
+    if not hasattr(ring.pair_rows, "unsafe_buffer_pointer"):
+        pytest.skip("jax.Array.unsafe_buffer_pointer unavailable")
+    before = {x.unsafe_buffer_pointer() for x in ring}
+    for tick in range(4):
+        eng.ingest(make_tweets(rng, 60, t0=100 * (tick + 2),
+                               match_drugs=0.3))
+        rep = eng.execute_all(FLAGS, timed=False,
+                              deliver=True)["TweetsAboutDrugs"]
+        check_delivery_conservation(rep.overflow, rep.num_results,
+                                    rep.num_notified)
+        assert rep.overflow.dropped_pairs == 0
+        [(_, _, ring)] = list(eng._rings.values())
+        after = {x.unsafe_buffer_pointer() for x in ring}
+        assert before & after, f"tick {tick}: ring reallocated from scratch"
+        before = after
+    while eng.spill.pending_pairs() + eng.spill.pending_sids() > 0:
+        for dr in eng.drain_spilled().values():
+            assert dr.stats.dropped_pairs == dr.stats.dropped_sids == 0
+
+
 def test_ring_counts_pass_matches_table_derivation(rng):
     """Threading TargetArrays.counts into deliver_all is a pure
     optimization: stats and buffers are identical to deriving the member
