@@ -1,0 +1,134 @@
+"""Enrichment/ranking stage overhead (core/enrich.py).
+
+The post-join hook scores every candidate slot and budget-prunes the pair
+grid INSIDE the fused tick call, so its cost rides the same jit as join +
+delivery. Two phases:
+
+  * parity — a NoopScorer engine (budget never binding) must deliver the
+    IDENTICAL per-channel (row, sID) pair multisets and DeliveryStats as a
+    scorer-less engine on the same seeded data (asserted, not trended);
+  * overhead — steady-state tick wall with the heuristic scorer ranking
+    under a binding budget vs the unranked tick, plus a budget sweep
+    (tight -> loose) showing the cost is budget-insensitive (one argsort
+    per channel, not per kept pair). Zero steady-state retraces are
+    asserted with the stage attached.
+
+Acceptance: ranked budgeted delivery within 1.3x of the unranked tick —
+tracked in benchmarks/thresholds.json as ``enrich/ranked_tick/speedup``
+(the ratio unranked/ranked, >= ~0.77 when the criterion holds).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_rng, scale
+from repro.core import enrich
+from repro.core import records as R
+from repro.core.broker import payload_notifications
+from repro.core.channel import most_threatening_tweets, tweets_about_drugs
+from repro.core.engine import BADEngine
+from repro.core.plans import ExecutionFlags
+from repro.data.synthetic import drug_tweak, tweet_batch
+
+PW = 8    # engine default deliver_payload_words
+FLAGS = ExecutionFlags(scan_mode="window", aggregation=True,
+                       param_pushdown=True)
+TICKS = 10
+WARMUP = 4
+
+
+def _batch(rng, n, t0):
+    batch = tweet_batch(rng, n, t0)
+    fields = drug_tweak(np.asarray(batch.fields).copy(), rng, 0.3)
+    return R.RecordBatch.from_numpy(fields, np.asarray(batch.location))
+
+
+def _engine(n_subs, stage=None, debug=False):
+    rng = fresh_rng("enrich_engine")
+    eng = BADEngine(dataset_capacity=1 << 15, index_capacity=1 << 13,
+                    max_window=1 << 13, max_candidates=1 << 11,
+                    brokers=("Broker1", "Broker2"), group_cap=8,
+                    max_deliver_pairs=2048, max_notify=4096,
+                    ring_capacity=0)
+    eng.debug_delivery_buffers = debug
+    eng.create_channel(tweets_about_drugs())
+    eng.create_channel(most_threatening_tweets())
+    for name in ("TweetsAboutDrugs", "MostThreateningTweets"):
+        eng.subscribe_bulk(name, rng.integers(0, 50, n_subs),
+                           rng.integers(0, 2, n_subs))
+    if stage is not None:
+        eng.set_enrichment(stage)
+    return eng
+
+
+def _tick_wall(eng, batch_n, ticks, warmup):
+    """Steady-state mean tick wall (ingest excluded); returns (wall_s,
+    retraces-in-timed-window)."""
+    rng = fresh_rng("enrich_ticks")
+    wall = 0.0
+    snap = eng.maintenance.snapshot()
+    for tick in range(ticks):
+        eng.ingest(_batch(rng, batch_n, t0=eng.now + 1))
+        if tick == warmup:
+            snap = eng.maintenance.snapshot()
+        t0 = time.perf_counter()
+        reps = eng.execute_all(FLAGS, timed=False, deliver=True)
+        next(iter(reps.values()))   # reports are already materialized
+        if tick >= warmup:
+            wall += time.perf_counter() - t0
+    return wall / max(ticks - warmup, 1), eng.maintenance.since(snap).traces
+
+
+def _delivered(reports):
+    out = {}
+    for name, rep in reports.items():
+        o = rep.overflow
+        out[name] = (sorted(map(tuple, payload_notifications(
+            np.asarray(rep.payload), o.delivered_pairs, PW).tolist())),
+            o)
+    return out
+
+
+def run(rng) -> None:
+    n_subs = scale(4000)
+    batch_n = scale(2048)
+
+    # --- phase 1: no-op parity (asserted) -----------------------------
+    base = _engine(n_subs, debug=True)
+    noop = _engine(n_subs, stage=enrich.NoopScorer(budget=1 << 20),
+                   debug=True)
+    b_rng, n_rng = fresh_rng("enrich_parity"), fresh_rng("enrich_parity")
+    base.ingest(_batch(b_rng, batch_n, t0=1))
+    noop.ingest(_batch(n_rng, batch_n, t0=1))
+    want = _delivered(base.execute_all(FLAGS, deliver=True))
+    got = _delivered(noop.execute_all(FLAGS, deliver=True))
+    assert got == want, "no-op scorer broke delivery parity"
+    emit("enrich/noop_parity/channels", 0.0,
+         f"ok={len(want)} delivered_pairs="
+         f"{sum(o.delivered_pairs for _, o in want.values())}")
+
+    # --- phase 2: ranked vs unranked steady tick ----------------------
+    plain = _engine(n_subs)
+    t_plain, r_plain = _tick_wall(plain, batch_n, TICKS, WARMUP)
+    budget = scale(256, floor=32)
+    ranked = _engine(n_subs, stage=enrich.HeuristicScorer(budget=budget))
+    t_ranked, r_ranked = _tick_wall(ranked, batch_n, TICKS, WARMUP)
+    assert r_plain == 0 and r_ranked == 0, (
+        f"steady-state retraces: plain={r_plain} ranked={r_ranked}")
+    ratio = t_plain / t_ranked
+    assert t_ranked <= 1.3 * t_plain, (
+        f"ranked tick {t_ranked * 1e3:.2f}ms exceeds 1.3x unranked "
+        f"{t_plain * 1e3:.2f}ms")
+    emit("enrich/ranked_tick/speedup", t_ranked,
+         f"x{ratio:.2f} unranked={t_plain * 1e6:.0f}us budget={budget}")
+
+    # --- phase 3: budget sweep (cost is budget-insensitive) -----------
+    for b in (scale(32, floor=8), scale(256, floor=32),
+              scale(2048, floor=256)):
+        eng = _engine(n_subs, stage=enrich.HeuristicScorer(budget=b))
+        t_b, _ = _tick_wall(eng, batch_n, TICKS // 2 + WARMUP // 2,
+                            WARMUP // 2)
+        emit(f"enrich/budget_sweep/b{b}", t_b,
+             f"x{t_plain / t_b:.2f} vs unranked")

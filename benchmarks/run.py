@@ -21,7 +21,7 @@ import time
 import numpy as np
 
 from benchmarks import (aggregation, bad_index, broker_ops, churn, common,
-                        compact_join, group_size, kernel_perf,
+                        compact_join, enrich, group_size, kernel_perf,
                         max_subscriptions, multi_channel, pipeline,
                         query_plan, real_world, scaling, sharded)
 
@@ -40,6 +40,7 @@ SUITES = {
     "compact_join": compact_join.run,
     "sharded_scaling": sharded.run,
     "pipeline_overlap": pipeline.run,
+    "enrich_ranked": enrich.run,
 }
 
 

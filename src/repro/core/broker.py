@@ -82,6 +82,14 @@ class DeliveryStats:
     # telescopes across ticks (ring-resident entries count as spilled)
     retried_pairs: int = 0
     retried_sids: int = 0
+    # pairs (and their member sIDs) the enrichment stage's budget rank
+    # dropped BEFORE the convert stage ran (core/enrich.py): the
+    # lowest-scoring pairs past the per-channel budget. These are a subset
+    # of dropped_* — ranked drops are intentional filtering, never
+    # recoverable through the ring/queue — so the per-stage conservation
+    # identity above is unchanged
+    ranked_pairs: int = 0
+    ranked_sids: int = 0
 
     @property
     def overflow_pairs(self) -> int:
@@ -113,7 +121,9 @@ class DeliveryStats:
             self.dropped_sids + other.dropped_sids,
             self.delivered_pairs_broker or other.delivered_pairs_broker,
             self.retried_pairs + other.retried_pairs,
-            self.retried_sids + other.retried_sids)
+            self.retried_sids + other.retried_sids,
+            self.ranked_pairs + other.ranked_pairs,
+            self.ranked_sids + other.ranked_sids)
 
 
 # ---------------------------------------------------------------------------

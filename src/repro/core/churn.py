@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.engine import MaintenanceStats
 from repro.core.plans import ExecutionFlags
+from repro.core.runtime import EngineProtocol
 from repro.data.synthetic import tweet_batch
 
 
@@ -121,7 +122,7 @@ class ChurnWorkload:
     user_churn_per_tick: int = 0
 
 
-def run_ticks(engine,
+def run_ticks(engine: "EngineProtocol",
               workloads: List[ChurnWorkload],
               ticks: int,
               rng: np.random.Generator,
@@ -142,11 +143,13 @@ def run_ticks(engine,
     run the fused ``execute_all`` (optionally with fused delivery), and
     drain any spilled notifications.
 
-    ``engine`` is any object with the BADEngine control/data-plane surface
+    ``engine`` is anything satisfying ``runtime.EngineProtocol`` — the
+    typed extraction of the shared control/data-plane surface
     (subscribe_bulk / remove_subscriptions / ingest / execute_all /
-    drain_spilled / spill / maintenance / ring_pending_*) — the single-device
-    ``BADEngine`` or the mesh-sharded ``core.sharded.ShardedBADEngine``; the
-    driver never reaches into engine internals.
+    drain_spilled / spill / maintenance / ring_pending_*) — the
+    single-device ``BADEngine`` or the mesh-sharded
+    ``core.sharded.ShardedBADEngine``; the driver never reaches into
+    engine internals.
 
     ``live_sids`` (channel -> sID array) seeds the removable population —
     pass the sIDs of a preloaded engine; it is updated in place. The first

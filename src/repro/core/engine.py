@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bad_index as bidx
+from repro.core import enrich
 from repro.core import plans
 from repro.core import records as R
 from repro.core import subscriptions as subs
@@ -465,7 +466,7 @@ class _PendingGroup:
     plan: plans.ChannelPlan
     param_chs: List
     spatial_chs: List
-    res: tuple                       # (res_p, res_s, del_p, del_s, tots)
+    res: tuple                # (res_p, res_s, del_p, del_s, tots, ranks)
     p_layout: object
     s_layout: object
     deliver: bool
@@ -517,7 +518,8 @@ class BADEngine:
                  max_spill: int = 1 << 13,
                  spill_capacity: int = 1 << 16,
                  incremental: bool = True,
-                 ring_capacity: int = 1 << 12):
+                 ring_capacity: int = 1 << 12,
+                 enrichment: Optional[enrich.EnrichmentStage] = None):
         self.schema = schema
         self.dataset = R.ActiveDataset.create(dataset_capacity, schema)
         self.index_capacity = index_capacity
@@ -581,6 +583,12 @@ class BADEngine:
         # behavior, kept as the benchmark baseline)
         self._stacked_cache: Dict = {}
         self.incremental = incremental
+        # post-join enrichment/ranking stage (core/enrich.py): scores the
+        # fused candidate slots and budget-prunes pairs before deliver_all,
+        # inside the same jitted call. Its ``identity`` is stamped into the
+        # dispatched plans (``ChannelPlan.scorer``) so every plan-keyed
+        # cache — and the retry rings — key on the scorer too.
+        self.enrichment = enrichment
         self.maintenance = MaintenanceStats()
         self._patch_groups_jit: Optional[Callable] = None
         self._patch_flat_jit: Optional[Callable] = None
@@ -646,6 +654,24 @@ class BADEngine:
     def plan_assignment(self) -> Dict[str, plans.ChannelPlan]:
         """Every channel's effective plan (assigned or engine default)."""
         return {name: self.channel_plan(name) for name in self.channels}
+
+    def set_enrichment(self,
+                       stage: Optional[enrich.EnrichmentStage]) -> bool:
+        """Attach (or detach, with None) the post-join enrichment stage;
+        returns True when it changed.
+
+        Purely a host-side assignment, like ``set_plan``: the NEXT fused
+        dispatch stamps the stage's ``identity`` into every dispatched
+        plan, so the previous plan-groups' retry rings (keyed by the
+        untagged/differently tagged plans) migrate through the existing
+        flush path into the host SpillQueue — no notification is lost or
+        re-ranked across the switch."""
+        if stage is not None and not callable(getattr(stage, "score", None)):
+            raise TypeError(f"expected an EnrichmentStage, got {stage!r}")
+        if self.enrichment is stage:
+            return False
+        self.enrichment = stage
+        return True
 
     def subscribe(self, channel: str, param: int, broker: str = "BrokerA",
                   sid: Optional[int] = None) -> int:
@@ -1110,7 +1136,8 @@ class BADEngine:
     def _spill_and_stats(self, chs: List[ChannelState], layout,
                          d: FusedDelivery,
                          epochs: Optional[List[int]] = None,
-                         resolve_tables: Optional[np.ndarray] = None
+                         resolve_tables: Optional[np.ndarray] = None,
+                         ranked: Optional[Tuple[np.ndarray, np.ndarray]] = None
                          ) -> Dict[str, DeliveryStats]:
         """Host side of a delivery: push the captured flat spill streams into
         the SpillQueue per channel (entries past the queue's capacity — or
@@ -1126,7 +1153,12 @@ class BADEngine:
         tables, host-materialized) switches pair capture to the epoch-free
         RESOLVED lane: each spilled pair's fanout is resolved here, against
         the table its producing call joined, so deferred batched drains
-        cannot go stale."""
+        cannot go stale.
+
+        ``ranked`` (per-channel pruned pair / member-sID counts from the
+        enrichment stage) re-enters budget-pruned pairs as counted drops:
+        delivery saw the PRUNED result, so its produced counters undershoot
+        the report's by exactly these amounts."""
         pack_d = np.asarray(d.pack.delivered)
         pack_p = np.asarray(d.pack.produced)
         fan_d = np.asarray(d.fan.delivered)
@@ -1160,14 +1192,17 @@ class BADEngine:
             spilled_s = self.spill.push_sids(name, svals[sel])
             ov_p = int(pack_p[i] - pack_d[i])
             ov_s = int(fan_p[i] - fan_d[i])
+            rk_p = int(ranked[0][i]) if ranked is not None else 0
+            rk_s = int(ranked[1][i]) if ranked is not None else 0
             if cnt is None:
                 out[name] = DeliveryStats(
                     delivered_pairs=int(pack_d[i]), spilled_pairs=spilled_p,
-                    dropped_pairs=ov_p - spilled_p,
+                    dropped_pairs=ov_p - spilled_p + rk_p,
                     delivered_sids=int(fan_d[i]), spilled_sids=spilled_s,
-                    dropped_sids=ov_s - spilled_s,
+                    dropped_sids=ov_s - spilled_s + rk_s,
                     delivered_pairs_broker=tuple(int(x)
-                                                 for x in per_broker[i]))
+                                                 for x in per_broker[i]),
+                    ranked_pairs=rk_p, ranked_sids=rk_s)
             else:
                 # ring-resident entries count as spilled; overflow past the
                 # ring that also missed the queue (or went epoch-stale in
@@ -1178,14 +1213,16 @@ class BADEngine:
                 out[name] = DeliveryStats(
                     delivered_pairs=int(pack_d[i]),
                     spilled_pairs=int(ring_p[i]) + spilled_p,
-                    dropped_pairs=int(stale_p[i]) + host_want_p - spilled_p,
+                    dropped_pairs=(int(stale_p[i]) + host_want_p - spilled_p
+                                   + rk_p),
                     delivered_sids=int(fan_d[i]),
                     spilled_sids=int(ring_s[i]) + spilled_s,
-                    dropped_sids=host_want_s - spilled_s,
+                    dropped_sids=host_want_s - spilled_s + rk_s,
                     delivered_pairs_broker=tuple(int(x)
                                                  for x in per_broker[i]),
                     retried_pairs=int(retried_p[i]),
-                    retried_sids=int(retried_s[i]))
+                    retried_sids=int(retried_s[i]),
+                    ranked_pairs=rk_p, ranked_sids=rk_s)
         return out
 
     def execute_channel(self, channel: str,
@@ -1765,14 +1802,23 @@ class BADEngine:
         ``deliver`` the broker convert+send stages (``deliver_all``) run in
         the SAME call — no host round-trip between discovery and fanout.
 
-        The compiled function runs ``(res_p, res_s, del_p, del_s,
-        (tot_p, tot_s))`` — the totals are the pre-truncation live-candidate
-        counts (0 on the padded backends), read by the grow loop to detect
-        stream overflow. With ``donate_rings`` the retry-ring arguments are
-        donated, so at steady state the ring buffers update in place (the
-        dispatcher stores the OUTPUT ring and never re-presents the input
-        handle; the compact grow loop must NOT donate — it re-presents the
-        same ring to the re-run). Returns ``(fn, key)``."""
+        The compiled function returns ``(res_p, res_s, del_p, del_s,
+        (tot_p, tot_s), (rank_p, rank_s))`` — the totals are the
+        pre-truncation live-candidate counts (0 on the padded backends),
+        read by the grow loop to detect stream overflow; the rank entries
+        are each ``(ranked_pairs, ranked_sids)`` (C,) counters from the
+        enrichment stage's budget prune (None when no stage is active).
+        When the dispatched plan carries a ``scorer`` tag the engine's
+        ``enrichment`` stage scores each join group's candidate slots and
+        prunes the lowest-scoring pairs past the budget BEFORE
+        ``deliver_all`` — in the same call, so the hook adds no sync; the
+        reports still carry the FULL join result (``num_results`` stays the
+        produced count; ranked drops land in DeliveryStats). With
+        ``donate_rings`` the retry-ring arguments are donated, so at steady
+        state the ring buffers update in place (the dispatcher stores the
+        OUTPUT ring and never re-presents the input handle; the compact
+        grow loop must NOT donate — it re-presents the same ring to the
+        re-run). Returns ``(fn, key)``."""
         key = ("all", plan, max_cand, deliver, p_stream, s_stream,
                donate_rings,
                tuple((st.spec, st.index) for st in param_chs),
@@ -1838,10 +1884,16 @@ class BADEngine:
         pw, mp = self.deliver_payload_words, self.max_deliver_pairs
         mn, sc = self.max_notify, self.max_spill
         maint = self.maintenance
+        # the enrichment stage binds at trace time, keyed by the plan's
+        # scorer tag (stamped by ``dispatch``); a tagged plan on an engine
+        # whose stage was detached mid-flight falls back to no-op
+        stage = (self.enrichment
+                 if deliver and plan.scorer is not None else None)
 
         def run(ds, index_state, p_in, s_in, p_ring, s_ring):
             maint.traces += 1          # trace-time side effect: counts traces
             res_p = res_s = del_p = del_s = None
+            rank_p = rank_s = None
             tot_p = tot_s = jnp.zeros((), jnp.int32)
             if p_static is not None:
                 cand = discover(ds, index_state, p_static,
@@ -1864,8 +1916,14 @@ class BADEngine:
                         p_in["up_masks"] if pushdown else None, aggregated,
                         p_in["domains"])
                 if deliver:
+                    res_del = res_p
+                    if stage is not None:
+                        res_del, rkp, rks = enrich.rank_result(
+                            stage, ds, res_p, p_static[2], p_in["sids"],
+                            counts=p_in["targets"].counts)
+                        rank_p = (rkp, rks)
                     del_p = deliver_all(
-                        res_p, p_in["sids"], pw, mp, mn, sc,
+                        res_del, p_in["sids"], pw, mp, mn, sc,
                         target_brokers=p_in["targets"].brokers,
                         num_brokers=num_brokers,
                         counts=p_in["targets"].counts,
@@ -1887,12 +1945,18 @@ class BADEngine:
                         ds, cand, s_in["locs"], s_in["brokers"], radii,
                         s_in["payload"], num_brokers, spatial_fn)
                 if deliver:
+                    res_del = res_s
+                    if stage is not None:
+                        res_del, rkp, rks = enrich.rank_result(
+                            stage, ds, res_s, s_static[2], s_in["sids"])
+                        rank_s = (rkp, rks)
                     del_s = deliver_all(
-                        res_s, s_in["sids"], pw, mp, mn, sc,
+                        res_del, s_in["sids"], pw, mp, mn, sc,
                         target_brokers=s_in["brokers"],
                         num_brokers=num_brokers,
                         ring=s_ring, epochs=s_in.get("epochs"))
-            return res_p, res_s, del_p, del_s, (tot_p, tot_s)
+            return (res_p, res_s, del_p, del_s, (tot_p, tot_s),
+                    (rank_p, rank_s))
 
         fn = (jax.jit(run, donate_argnums=(4, 5)) if donate_rings
               else jax.jit(run))
@@ -1931,23 +1995,47 @@ class BADEngine:
         delivered + spilled + dropped == produced telescopes across the
         switch.
 
-        Synchronous facade over the dispatch/sync split: equivalent to
-        ``dispatch_all(...).sync()``. The pipelined runtime
-        (``core/runtime.py``) calls ``dispatch_all`` directly and defers the
-        sync one or more ticks.
+        Thin wrapper over ``execute(ExecutionRequest(...))`` — the single
+        execution surface; equivalent to ``dispatch_all(...).sync()``. The
+        pipelined runtime (``core/runtime.py``) calls ``dispatch_all``
+        directly and defers the sync one or more ticks.
         """
-        return self.dispatch_all(flags, advance=advance, timed=timed,
-                                 deliver=deliver).sync()
+        return self.execute(plans.ExecutionRequest(
+            flags=flags, advance=advance, timed=timed, deliver=deliver))
+
+    def execute(self, request: plans.ExecutionRequest
+                ) -> Dict[str, ExecutionReport]:
+        """Run one ``ExecutionRequest`` synchronously: ``dispatch(...)``
+        then ``sync()`` — the single execution surface every facade
+        (``execute_all``, ``dispatch_all``) routes through."""
+        return self.dispatch(request).sync()
 
     def dispatch_all(self, flags: Optional[plans.ExecutionFlags] = None,
                      advance: bool = True, timed: bool = False,
                      deliver: bool = False,
                      resolve_spills: bool = False):
+        """``dispatch`` under the legacy keyword surface (``flags`` forces
+        one homogeneous plan; None runs the per-channel assignments)."""
+        return self.dispatch(plans.ExecutionRequest(
+            flags=flags, advance=advance, timed=timed, deliver=deliver,
+            resolve_spills=resolve_spills))
+
+    def dispatch(self, request: plans.ExecutionRequest):
         """Dispatch every plan-group's fused call WITHOUT waiting for the
         device: returns a ``runtime.PendingExecution`` whose ``.sync()``
         materializes the per-channel reports (one bulk device->host transfer
         per join group) and runs the host half of delivery accounting
         (SpillQueue pushes, conserving DeliveryStats).
+
+        The request resolves to one plan per requested channel
+        (``ExecutionRequest.forced_plan`` — explicit plan/flags/backend
+        override — falling back to each channel's assignment), and channels
+        sharing a plan run in ONE fused call; a homogeneous resolution
+        reduces to a single group, which is exactly the legacy
+        ``execute_all(flags)`` behavior. With an ``enrichment`` stage
+        attached and ``deliver=True`` every dispatched plan is stamped with
+        the stage's identity, so compiled executables, stream buckets, and
+        retry rings all key on the scorer.
 
         Everything control-plane-visible happens AT DISPATCH: successor
         retry rings are stored (device handles, no sync), watermarks
@@ -1966,16 +2054,28 @@ class BADEngine:
         backends read the live-candidate total for the grow-on-overflow
         protocol (both documented in docs/ARCHITECTURE.md)."""
         from repro.core.runtime import PendingExecution
+        deliver = request.deliver
         ordered = sorted(self.channels.values(), key=lambda s: s.index)
+        if request.channels is not None:
+            unknown = set(request.channels) - set(self.channels)
+            if unknown:
+                raise KeyError(f"unknown channels: {sorted(unknown)}")
+            want = set(request.channels)
+            ordered = [st for st in ordered if st.spec.name in want]
         if not ordered:
             return PendingExecution(self, [])
-        if flags is not None:
-            base = plans.ChannelPlan.from_flags(
-                flags, "pallas" if self.use_pallas else "oracle")
-            plan_for = {st.spec.name: base for st in ordered}
-        else:
-            plan_for = {st.spec.name: (st.plan or self.default_plan())
-                        for st in ordered}
+        forced = request.forced_plan(
+            "pallas" if self.use_pallas else "oracle")
+        plan_for = {}
+        for st in ordered:
+            p = forced or (st.plan or self.default_plan())
+            if forced is None and request.backend is not None:
+                p = dataclasses.replace(p, backend=request.backend)
+            plan_for[st.spec.name] = p
+        if self.enrichment is not None and deliver:
+            tag = self.enrichment.identity
+            plan_for = {n: dataclasses.replace(p, scorer=tag)
+                        for n, p in plan_for.items()}
         # plan-groups in first-channel order: Dict preserves insertion
         # order, so homogeneous assignments reduce to one group == the
         # legacy single fused call
@@ -1983,8 +2083,10 @@ class BADEngine:
         for st in ordered:
             g = groups.setdefault(plan_for[st.spec.name], ([], []))
             (g[0] if st.spec.join == "param" else g[1]).append(st)
+        # a channel-subset dispatch must not treat the other groups' rings
+        # as superseded — only full-engine dispatches prune inactive rings
         use_ring = deliver and self.ring_capacity > 0
-        if use_ring:
+        if use_ring and request.channels is None:
             # plan-switch ring migration: a ring keyed by a (kind, plan,
             # membership) no longer executing hands its resident entries to
             # the host SpillQueue — tagged with the layout they were
@@ -2002,10 +2104,11 @@ class BADEngine:
             for k in [k for k in self._rings if k not in active]:
                 self._flush_ring(*self._rings.pop(k))
         pending = [self._dispatch_plan_group(plan, param_chs, spatial_chs,
-                                             timed, deliver, use_ring,
-                                             resolve_spills)
+                                             request.timed, deliver,
+                                             use_ring,
+                                             request.resolve_spills)
                    for plan, (param_chs, spatial_chs) in groups.items()]
-        if advance:
+        if request.advance:
             # watermark advance is a device-side functional update (no
             # sync); the in-flight calls captured the PRE-advance handle
             self.index_state = bidx.advance_watermarks(
@@ -2144,7 +2247,8 @@ class BADEngine:
         spills and reads (C,)-shaped counters. ``wall_time_s`` is the timed
         fused wall amortized per channel, or (untimed) the
         dispatch-to-materialize latency share."""
-        res_p, res_s, del_p, del_s, _tots = g.res
+        res_p, res_s, del_p, del_s, _tots, ranks = g.res
+        rank_p, rank_s = ranks
         wall = g.wall
         if not wall:
             # every output of one executable completes together, so the
@@ -2154,17 +2258,19 @@ class BADEngine:
             jax.block_until_ready(_tots)
             wall = time.perf_counter() - g.t0
         share = wall / max(len(g.param_chs) + len(g.spatial_chs), 1)
-        for chs, res, dlv, layout, epochs, sids in (
+        for chs, res, dlv, layout, epochs, sids, rank in (
                 (g.param_chs, res_p, del_p, g.p_layout, g.p_epochs,
-                 g.p_sids),
+                 g.p_sids, rank_p),
                 (g.spatial_chs, res_s, del_s, g.s_layout, g.s_epochs,
-                 g.s_sids)):
+                 g.s_sids, rank_s)):
             if not chs:
                 continue
             host = jax.tree.map(np.asarray, res)
             stats = (self._spill_and_stats(
                 chs, layout, dlv, epochs=epochs,
-                resolve_tables=None if sids is None else np.asarray(sids))
+                resolve_tables=None if sids is None else np.asarray(sids),
+                ranked=None if rank is None else
+                tuple(np.asarray(x) for x in rank))
                 if g.deliver else {})
             pay = noti = None
             if g.deliver and self.debug_delivery_buffers:
@@ -2196,7 +2302,7 @@ class BADEngine:
         run's outputs are discarded before any delivery or ring state
         escapes, so re-presenting the same ring is safe), and halve the
         bucket after ``_STREAM_PATIENCE`` consecutive runs at <= half
-        occupancy. Returns the final run's 5-tuple and its wall time."""
+        occupancy. Returns the final run's 6-tuple and its wall time."""
         width = self.max_window if plan.scan_mode == "window" else max_cand
         floor = 1 << _STREAM_FLOOR
         p_key = ("param", plan, tuple(st.spec.name for st in param_chs))

@@ -1,0 +1,208 @@
+"""Post-join enrichment/ranking: a model-scored delivery budget per channel.
+
+The paper's "early result filtering" (§4) trims results *structurally*
+(indexes, watermarks) before broker fan-out; this module makes the last
+trim *learned*. An ``EnrichmentStage`` plugs into the fused tick as a
+post-join, pre-delivery hook: after the execution join produces each
+plan-group's stacked pair grid and BEFORE ``broker.deliver_all`` packs it,
+the stage scores every candidate record in ONE batched call and the
+lowest-scoring pairs past a per-channel delivery budget are dropped —
+inside the same jitted call as discovery, join, and delivery, so the hook
+adds no host sync and composes with the pipelined runtime and the sharded
+engine (scores are shard-local; the budget applies per shard, i.e. per
+device delivery capacity, like every other cap).
+
+Contract (asserted by tests/test_enrich.py):
+
+  * scoring granularity is the CANDIDATE RECORD: one ``score`` call per
+    (channel, candidate-row) slot of the stacked result — the same slots
+    the compacted CSR stream scatters back into — and every pair of a slot
+    inherits its score. ``payload_tokens`` is the record's field vector
+    (the out-of-band token payload proxy), ``channel_ids`` the global
+    channel rows, ``sids`` the stable record row ids.
+  * under-budget channels are BIT-IDENTICAL to the scorer-less engine:
+    when a channel's produced pairs fit its budget the pruned mask equals
+    the original validity mask, so the FusedDelivery (wire bytes, spill
+    streams, ring state, stats) is unchanged byte for byte.
+  * over-budget channels keep the TOP-``budget`` pairs by (score desc,
+    ravel position asc) — ties resolve to the earlier pair, making the
+    rank deterministic — and deliver them in the usual ravel order. The
+    dropped remainder is counted in ``DeliveryStats.ranked_pairs`` /
+    ``ranked_sids`` (a subset of ``dropped_*``), preserving
+    delivered + spilled + dropped == produced per stage.
+  * a stage's ``identity`` keys every plan-keyed engine cache (the engine
+    stamps it into ``ChannelPlan.scorer`` at dispatch), so a fixed stage
+    retraces nothing at steady state and a swap retraces like a plan
+    switch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import records as R
+from repro.core.broker import _member_counts
+from repro.core.plans import ChannelResult
+
+
+@runtime_checkable
+class EnrichmentStage(Protocol):
+    """A batched post-join scorer with a per-channel delivery budget.
+
+    ``score`` must be pure and jit-compatible: it runs INSIDE the engine's
+    fused tick call. ``budget`` (static python int) caps delivered pairs
+    per channel per execution; None disables pruning (the stage is then a
+    pure tag — scoring is skipped entirely). ``identity`` must be hashable
+    and change whenever scoring semantics change: it keys the engine's
+    compiled-plan caches."""
+
+    @property
+    def budget(self) -> Optional[int]: ...
+
+    @property
+    def identity(self) -> tuple: ...
+
+    def score(self, payload_tokens: jnp.ndarray, channel_ids: jnp.ndarray,
+              sids: jnp.ndarray) -> jnp.ndarray:
+        """(N, F) int32 payload tokens, (N,) int32 channel rows, (N,) int32
+        stable record ids -> (N,) float32 relevance scores."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class NoopScorer:
+    """Constant scores: with any budget the kept set is the ravel-order
+    prefix (stable tie-break), so an under-budget NoopScorer engine is
+    bit-identical to a scorer-less one — the parity baseline."""
+
+    budget: Optional[int] = None
+
+    @property
+    def identity(self) -> tuple:
+        return ("noop", self.budget)
+
+    def score(self, payload_tokens, channel_ids, sids):
+        return jnp.zeros(payload_tokens.shape[:1], jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeuristicScorer:
+    """Pure-jnp payload scorer (tier-1-testable): a fixed urgency weighting
+    over the enriched fields — threat and hate-speech rates dominate,
+    weapon/drug flags and retweet reach break ties."""
+
+    budget: Optional[int] = None
+    weights: Tuple[float, ...] = (3.0, 2.0, 1.0, 0.5, 1e-3)
+
+    @property
+    def identity(self) -> tuple:
+        return ("heuristic", self.budget, self.weights)
+
+    def score(self, payload_tokens, channel_ids, sids):
+        f = payload_tokens.astype(jnp.float32)
+        w = self.weights
+        return (w[0] * f[:, R.THREATENING_RATE]
+                + w[1] * f[:, R.HATE_SPEECH_RATE]
+                + w[2] * f[:, R.WEAPON_MENTIONED]
+                + w[3] * f[:, R.DRUG_ACTIVITY]
+                + w[4] * f[:, R.RETWEET_COUNT])
+
+
+class LMScorer:
+    """Reduced-LM scorer: one batched prefill (``models/lm.forward`` via
+    ``launch/serve.prefill_scores``) over the candidate payload tokens,
+    inside the fused tick call. The record's field vector is the prompt
+    (clipped into the vocab); the pooled final-position logits are the
+    relevance score. Params are initialized once at construction — the
+    stage is functionally frozen, so ``identity`` needs only the config
+    name, seed, and budget."""
+
+    def __init__(self, cfg=None, params=None, budget: Optional[int] = None,
+                 seed: int = 0, lanes: int = 64):
+        from repro import configs
+        from repro.models.model import ModelApi
+        self.cfg = cfg if cfg is not None else configs.get_reduced("qwen2-1.5b")
+        self.api = ModelApi(self.cfg)
+        self.params = (params if params is not None
+                       else self.api.init(jax.random.key(seed)))
+        self.budget = budget
+        self.seed = seed
+        self.lanes = lanes
+
+    @property
+    def identity(self) -> tuple:
+        return ("lm", self.cfg.name, self.seed, self.lanes, self.budget)
+
+    def score(self, payload_tokens, channel_ids, sids):
+        from repro.launch.serve import prefill_scores
+        toks = jnp.clip(payload_tokens, 0, self.cfg.vocab_size - 1)
+        return prefill_scores(self.params, self.cfg, toks, lanes=self.lanes)
+
+
+def rank_result(stage: EnrichmentStage, ds, result: ChannelResult,
+                channel_rows: jnp.ndarray, group_sids: jnp.ndarray,
+                counts: Optional[jnp.ndarray] = None):
+    """Score + budget-prune one stacked ChannelResult (pure, jit-compatible).
+
+    Scores the (C, Rm) candidate slots in one batched ``stage.score`` call,
+    broadcasts scores to the (C, Rm, maxT) pair grid, and invalidates every
+    pair ranked at or past ``stage.budget`` under (score desc, ravel asc).
+    Returns ``(pruned_result, ranked_pairs, ranked_sids)`` — the per-channel
+    (C,) counts of pruned pairs and their member sIDs (via the same
+    member-count pass delivery uses, so sID conservation telescopes).
+
+    When a channel's produced count fits the budget the kept mask equals
+    ``pair_valid`` and the result passes through BIT-identically (pair
+    rows/targets are already -1-masked at invalid slots by both join
+    formulations); ``budget=None`` short-circuits entirely.
+
+    Cost note: because every pair of a slot shares the slot's score and a
+    slot's pairs are CONTIGUOUS in ravel order, the (score desc, ravel asc)
+    pair rank is computed at SLOT granularity, and only the top
+    ``min(budget, Rm)`` slots are ever materialized: every live slot holds
+    >= 1 valid pair, so no slot past the top-``budget`` can receive any
+    budget (and under-budget channels have <= budget live slots, all
+    captured). ``lax.top_k`` breaks score ties toward the LOWER slot index
+    — exactly the ravel-order tie-break — then the budget is allocated
+    down the ranked slots by cumulative valid-pair count and each
+    partially funded slot keeps its first valid pairs in target order.
+    Everything else is elementwise, so the hook's overhead is one
+    top-``budget`` selection + the ``score`` call per fused tick. Scores
+    must be finite (-inf marks pair-less slots internally)."""
+    C, Rm, Tm = result.pair_valid.shape
+    budget = stage.budget
+    if budget is None:
+        zeros = jnp.zeros((C,), jnp.int32)
+        return result, zeros, zeros
+    rows = result.matched_rows                            # (C, Rm), -1 pads
+    tokens = ds.fields[jnp.maximum(rows, 0) % ds.capacity]  # (C, Rm, F)
+    ch = jnp.broadcast_to(channel_rows[:, None], rows.shape)
+    scores = stage.score(tokens.reshape(C * Rm, -1), ch.reshape(-1),
+                         rows.reshape(-1))
+    scores = jnp.asarray(scores, jnp.float32).reshape(C, Rm)
+    valid3 = result.pair_valid
+    vc = jnp.sum(valid3.astype(jnp.int32), axis=2)        # (C, Rm)
+    masked = jnp.where(vc > 0, scores, -jnp.inf)
+    k = min(int(budget), Rm)
+    _, idx = jax.lax.top_k(masked, k)                     # (C, k)
+    vc_top = jnp.take_along_axis(vc, idx, axis=1)
+    before = jnp.cumsum(vc_top, axis=1) - vc_top          # pairs ranked above
+    keep_top = jnp.clip(budget - before, 0, vc_top)
+    chan = jnp.arange(C, dtype=jnp.int32)[:, None]
+    keep_per_slot = jnp.zeros((C, Rm), jnp.int32).at[chan, idx].set(
+        keep_top)
+    rank_in_slot = jnp.cumsum(valid3.astype(jnp.int32), axis=2) - 1
+    keep = valid3 & (rank_in_slot < keep_per_slot[:, :, None])
+    pruned2 = (valid3 & ~keep).reshape(C, -1)
+    ranked_pairs = jnp.sum(pruned2.astype(jnp.int32), axis=1)
+    members = _member_counts(group_sids, pruned2,
+                             result.pair_targets.reshape(C, -1), counts)
+    ranked_sids = jnp.sum(members, axis=1)
+    out = result._replace(
+        pair_valid=keep,
+        pair_rows=jnp.where(keep, result.pair_rows, -1),
+        pair_targets=jnp.where(keep, result.pair_targets, -1))
+    return out, ranked_pairs, ranked_sids

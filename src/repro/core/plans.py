@@ -85,6 +85,14 @@ class ChannelPlan:
     aggregation: bool = False
     param_pushdown: bool = False
     backend: str = "oracle"
+    # dispatch-time enrichment tag: the attached EnrichmentStage's hashable
+    # ``identity`` (core/enrich.py), stamped by the engine when a stage is
+    # active so every plan-keyed cache (compiled executables, stream
+    # buckets, retry rings, warm signatures) keys on the scorer too — a
+    # scorer attach/detach/swap retraces and re-rings exactly like a plan
+    # switch. Never assigned to ``ChannelState.plan`` and never persisted
+    # (``to_dict`` omits it).
+    scorer: Optional[tuple] = None
 
     def __post_init__(self):
         if self.scan_mode not in SCAN_MODES:
@@ -120,6 +128,58 @@ def enumerate_plans(backends=("oracle",), param_pushdown: bool = True):
     return tuple(ChannelPlan(scan, agg, param_pushdown, b)
                  for b in backends for scan in SCAN_MODES
                  for agg in (False, True))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionRequest:
+    """The single execution spec behind ``BADEngine.execute``/``dispatch``.
+
+    One request subsumes what used to be three overlapping entry points:
+
+      * ``flags`` — the legacy homogeneous mode: every requested channel
+        runs ``ChannelPlan.from_flags(flags, backend)``; routed through the
+        SAME plan-group machinery as everything else (one synthetic group).
+      * ``plan`` — an explicit homogeneous ``ChannelPlan`` (full physical
+        plan, backend included). Mutually exclusive with ``flags``.
+      * neither — the planner-driven mode: channels run their assigned
+        ``ChannelPlan`` (``set_plan``) or the engine default, partitioned
+        into plan-groups.
+
+    ``backend`` overrides the kernel backend on whatever plan the above
+    resolves to (the old ``execute_channel(backend=...)`` knob, now
+    available on the fused path). ``channels`` restricts execution to a
+    subset (None = all); restricted dispatches leave the other groups'
+    retry rings resident. The remaining fields carry the per-call execution
+    options previously spread across keyword arguments."""
+
+    flags: Optional[ExecutionFlags] = None
+    plan: Optional[ChannelPlan] = None
+    backend: Optional[str] = None
+    channels: Optional[tuple] = None
+    advance: bool = True
+    timed: bool = False
+    deliver: bool = False
+    resolve_spills: bool = False
+
+    def __post_init__(self):
+        if self.flags is not None and self.plan is not None:
+            raise ValueError("pass flags or plan, not both")
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        if self.channels is not None:
+            object.__setattr__(self, "channels", tuple(self.channels))
+
+    def forced_plan(self, default_backend: str) -> Optional[ChannelPlan]:
+        """The homogeneous plan this request forces on every requested
+        channel, or None for the per-channel-assignment mode (where a
+        ``backend`` override, if any, is applied per channel)."""
+        if self.plan is not None:
+            return (self.plan if self.backend is None
+                    else dataclasses.replace(self.plan, backend=self.backend))
+        if self.flags is not None:
+            return ChannelPlan.from_flags(self.flags,
+                                          self.backend or default_backend)
+        return None
 
 
 class TargetArrays(NamedTuple):

@@ -33,7 +33,57 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class EngineProtocol(Protocol):
+    """The shared ``BADEngine`` / ``ShardedBADEngine`` control surface.
+
+    Everything the tick drivers — ``TickPipeline``, ``core/churn.run_ticks``,
+    and the benchmark harnesses — call on "an engine", extracted so they
+    type-check against ONE interface instead of duck-typing two classes.
+    Both engines satisfy it structurally (asserted by tests/test_enrich.py);
+    new driver code should annotate against this, not a concrete engine.
+
+    The contract mirrors the single-device semantics: ``dispatch`` /
+    ``dispatch_all`` return a pending handle with an idempotent ``sync()``
+    (``ShardedPendingExecution`` merges per-shard reports), ``execute`` /
+    ``execute_all`` are their synchronous composition, and the spill/ring
+    surface drains per-channel regardless of placement."""
+
+    def create_channel(self, spec) -> None: ...
+
+    def subscribe_bulk(self, channel: str, params) -> None: ...
+
+    def remove_subscriptions(self, channel: str, sids) -> None: ...
+
+    def ingest(self, batch) -> None: ...
+
+    def execute(self, request) -> Dict: ...
+
+    def dispatch(self, request): ...
+
+    def execute_all(self, flags=None, advance: bool = True,
+                    timed: bool = True, deliver: bool = False) -> Dict: ...
+
+    def dispatch_all(self, flags=None, advance: bool = True,
+                     timed: bool = False, deliver: bool = False,
+                     resolve_spills: bool = False): ...
+
+    def drain_spilled(self, channel=None, max_entries=None) -> Dict: ...
+
+    def flush_rings(self) -> None: ...
+
+    def ring_pending_pairs(self, channel: str) -> int: ...
+
+    def ring_pending_sids(self, channel: str) -> int: ...
+
+    def set_plan(self, channel: str, plan) -> None: ...
+
+    def set_enrichment(self, stage) -> bool: ...
+
+    def default_plan(self): ...
 
 
 class PendingExecution:
@@ -87,7 +137,7 @@ class TickPipeline:
     pipeline depth actually achieved; ``latencies`` the per-tick
     dispatch-to-materialize seconds."""
 
-    def __init__(self, engine, depth: int = 2,
+    def __init__(self, engine: EngineProtocol, depth: int = 2,
                  drain_every: Optional[int] = None):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")

@@ -198,6 +198,7 @@ class ShardedBADEngine:
         self._plans: Dict[str, plans.ChannelPlan] = {}
         self._cohorts: Dict[str, set] = {}
         self._user_brokers = np.zeros((1,), np.int32)
+        self._enrichment = None
         self.shards: List[BADEngine] = [self._make_engine(i)
                                         for i in range(num_shards)]
         self.spill = _SpillView(self)
@@ -221,6 +222,8 @@ class ShardedBADEngine:
         with self._on(i):
             eng = BADEngine(**self.engine_kwargs)
         eng.debug_delivery_buffers = self._debug or self.route_cross_shard
+        if self._enrichment is not None:  # reshard-built shards inherit
+            eng.set_enrichment(self._enrichment)
         return eng
 
     @property
@@ -303,6 +306,19 @@ class ShardedBADEngine:
                 changed = e.set_plan(name, plan) or changed
         if changed:
             self._plans[name] = plan
+        return changed
+
+    def set_enrichment(self, stage) -> bool:
+        """Attach/detach one ``EnrichmentStage`` mesh-wide. Every shard
+        scores its OWN candidate slots and applies the budget per shard —
+        like every other per-device delivery capacity — so the hook adds no
+        cross-shard sync and the merged ``ranked_*`` stats sum shard-wise.
+        Survives ``reshard`` (rebuilt shards re-attach)."""
+        changed = False
+        for i, e in enumerate(self.shards):
+            with self._on(i):
+                changed = e.set_enrichment(stage) or changed
+        self._enrichment = stage
         return changed
 
     def subscribe(self, channel: str, param: int, broker: str = "BrokerA",
@@ -442,24 +458,35 @@ class ShardedBADEngine:
         fused calls dispatch before any shard's results are read, so the
         per-device queues execute concurrently instead of serializing on
         each shard's materialization."""
-        return self.dispatch_all(flags, advance=advance, timed=timed,
-                                 deliver=deliver).sync()
+        return self.execute(plans.ExecutionRequest(
+            flags=flags, advance=advance, timed=timed, deliver=deliver))
+
+    def execute(self, request: plans.ExecutionRequest
+                ) -> Dict[str, ShardedExecutionReport]:
+        """Run one ``ExecutionRequest`` mesh-wide: ``dispatch`` then
+        ``sync()`` — the same single execution surface as ``BADEngine``."""
+        return self.dispatch(request).sync()
 
     def dispatch_all(self, flags: Optional[plans.ExecutionFlags] = None,
                      advance: bool = True, timed: bool = False,
                      deliver: bool = False,
                      resolve_spills: bool = False
                      ) -> "ShardedPendingExecution":
+        """``dispatch`` under the legacy keyword surface."""
+        return self.dispatch(plans.ExecutionRequest(
+            flags=flags, advance=advance, timed=timed, deliver=deliver,
+            resolve_spills=resolve_spills))
+
+    def dispatch(self, request: plans.ExecutionRequest
+                 ) -> "ShardedPendingExecution":
         """Dispatch every shard's plan-group calls without waiting on any of
         them; the returned handle's ``sync()`` materializes and merges the
         per-channel reports (and runs the cross-shard notify route)."""
         pends = []
         for i, e in enumerate(self.shards):
             with self._on(i):
-                pends.append(e.dispatch_all(
-                    flags, advance=advance, timed=timed, deliver=deliver,
-                    resolve_spills=resolve_spills))
-        return ShardedPendingExecution(self, pends, deliver)
+                pends.append(e.dispatch(request))
+        return ShardedPendingExecution(self, pends, request.deliver)
 
     def _merge_reports(self, per_shard: List[Dict]
                        ) -> Dict[str, ShardedExecutionReport]:

@@ -17,6 +17,20 @@ from repro.launch.steps import build_decode_step
 from repro.models.model import ModelApi
 
 
+def prefill_scores(params, cfg, tokens: jnp.ndarray,
+                   lanes: int = 64) -> jnp.ndarray:
+    """One batched prefill as a relevance scorer: (B, S) int32 prompts ->
+    (B,) float32 scores, the mean of the first ``lanes`` final-position
+    logits. This is the serving path's prefill (``lm.forward`` over the
+    full prompt, no KV cache kept) reshaped for the engine's enrichment
+    hook (``core/enrich.LMScorer``): pure in ``params``/``tokens``, so it
+    traces INTO the engine's fused tick call and batches over the whole
+    candidate stream in one forward."""
+    from repro.models import lm
+    logits, _ = lm.forward(params, cfg, tokens=tokens)
+    return jnp.mean(logits[:, -1, :lanes], axis=-1).astype(jnp.float32)
+
+
 def serve(cfg, batch: int, prompt_len: int, gen: int, greedy: bool = True):
     api = ModelApi(cfg)
     params = api.init(jax.random.key(0))

@@ -1,0 +1,429 @@
+"""Model-enriched notification pipeline (core/enrich.py) + the consolidated
+execution surface (plans.ExecutionRequest, runtime.EngineProtocol).
+
+The enrichment hook's contract, pinned here:
+
+  * no-op parity — a NoopScorer (budget=None or under-budget) engine is
+    delivery-BIT-identical to a scorer-less one: same delivered (row, sID)
+    multisets, same DeliveryStats, across padded/compact x agg/flat and on
+    the sharded engine;
+  * ranked drops — over-budget channels keep the top-``budget`` pairs by
+    (score desc, ravel asc), count the remainder in ``ranked_pairs`` /
+    ``ranked_sids``, and conservation (delivered + spilled + dropped ==
+    produced + retried) still telescopes per stage;
+  * tie determinism — equal scores keep ravel (delivery) order, so a
+    constant scorer with budget B delivers exactly the scorer-less prefix,
+    identically on every run;
+  * zero steady-state retraces — a fixed attached stage keys the compiled
+    plans once; repeated ticks replay cached traces.
+
+The execution-surface contract: ``execute_all``/``dispatch_all`` are thin
+wrappers over one ``ExecutionRequest`` path, and both engines satisfy the
+typed ``EngineProtocol``.
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import enrich
+from repro.core import records as R
+from repro.core.broker import payload_notifications
+from repro.core.channel import most_threatening_tweets, tweets_about_drugs
+from repro.core.engine import BADEngine
+from repro.core.plans import ChannelPlan, ExecutionFlags, ExecutionRequest
+from repro.core.runtime import EngineProtocol, TickPipeline
+from repro.core.sharded import ShardedBADEngine
+
+from conftest import check_delivery_conservation, make_tweets
+
+PW = 8    # engine default deliver_payload_words
+
+FLAGS_AGG = ExecutionFlags(scan_mode="window", aggregation=True,
+                           param_pushdown=True)
+FLAGS_FLAT = ExecutionFlags(scan_mode="window", aggregation=False,
+                            param_pushdown=False)
+
+
+def _engine(seed=0, stage=None, **kw):
+    rng = np.random.default_rng(seed)
+    kw.setdefault("max_deliver_pairs", 256)
+    kw.setdefault("max_notify", 512)
+    kw.setdefault("ring_capacity", 0)
+    eng = BADEngine(dataset_capacity=4096, index_capacity=1024,
+                    max_window=2048, max_candidates=512,
+                    brokers=("B1", "B2"), group_cap=8, **kw)
+    eng.debug_delivery_buffers = True
+    eng.create_channel(tweets_about_drugs())
+    eng.create_channel(most_threatening_tweets())
+    for name in ("TweetsAboutDrugs", "MostThreateningTweets"):
+        eng.subscribe_bulk(name, rng.integers(0, 50, 200),
+                           rng.integers(0, 2, 200))
+    if stage is not None:
+        eng.set_enrichment(stage)
+    eng.ingest(make_tweets(rng, 192, match_drugs=0.3))
+    return eng
+
+
+def _delivered(reports):
+    """Per-channel delivered content + stats: ((row, sID) multiset, sID
+    multiset, DeliveryStats) keyed by channel."""
+    out = {}
+    for name, rep in reports.items():
+        o = rep.overflow
+        pairs = sorted(map(tuple, payload_notifications(
+            np.asarray(rep.payload), o.delivered_pairs, PW).tolist()))
+        sids = sorted(np.asarray(rep.notify)[:o.delivered_sids].tolist())
+        out[name] = (pairs, sids, o)
+    return out
+
+
+@pytest.mark.parametrize("backend", ["oracle", "compact"],
+                         ids=["padded", "compact"])
+@pytest.mark.parametrize("flags", [FLAGS_AGG, FLAGS_FLAT],
+                         ids=["agg", "flat"])
+@pytest.mark.parametrize("stage", [enrich.NoopScorer(),
+                                   enrich.NoopScorer(budget=100_000),
+                                   enrich.HeuristicScorer(budget=100_000)],
+                         ids=["noop-untagged", "noop-budget", "heur-budget"])
+def test_noop_scorer_bit_parity(backend, flags, stage):
+    """Under-budget (or budget-less) stages leave delivery bit-identical to
+    the scorer-less engine: multisets AND full DeliveryStats."""
+    plan = ChannelPlan.from_flags(flags, backend)
+    base = _engine()
+    enriched = _engine(stage=stage)
+    for eng in (base, enriched):
+        for name in eng.channels:
+            eng.set_plan(name, plan)
+    want = _delivered(base.execute_all(None, deliver=True))
+    got = _delivered(enriched.execute_all(None, deliver=True))
+    assert set(want) == set(got)
+    for name in want:
+        assert got[name][0] == want[name][0]
+        assert got[name][1] == want[name][1]
+        assert got[name][2] == want[name][2]
+
+
+def test_budget_rank_drops_lowest():
+    """Over-budget channels deliver exactly the top-``budget`` highest-
+    scored pairs: with RETWEET_COUNT as the only differentiating field, the
+    survivors are the records with the largest counts."""
+    rng = np.random.default_rng(3)
+    eng = BADEngine(dataset_capacity=4096, index_capacity=1024,
+                    max_window=2048, max_candidates=512,
+                    brokers=("B1",), group_cap=8,
+                    max_deliver_pairs=256, max_notify=512, ring_capacity=0)
+    eng.debug_delivery_buffers = True
+    eng.create_channel(most_threatening_tweets())
+    eng.subscribe_bulk("MostThreateningTweets",
+                       np.zeros(1, np.int32), np.zeros(1, np.int32))
+    n = 24
+    batch = make_tweets(rng, n)
+    fields = np.asarray(batch.fields).copy()
+    fields[:, R.STATE] = 0                      # all match the subscription
+    fields[:, R.THREATENING_RATE] = 10          # all pass the predicate
+    fields[:, R.HATE_SPEECH_RATE] = 0
+    fields[:, R.WEAPON_MENTIONED] = 0
+    fields[:, R.DRUG_ACTIVITY] = 0
+    fields[:, R.RETWEET_COUNT] = np.arange(n) * 100  # score ~ ingest order
+    rows = eng.ingest(
+        R.RecordBatch.from_numpy(fields, np.asarray(batch.location)))
+    budget = 5
+    eng.set_enrichment(enrich.HeuristicScorer(budget=budget))
+    rep = eng.execute_all(FLAGS_FLAT, deliver=True)["MostThreateningTweets"]
+    o = rep.overflow
+    assert rep.num_results == n and o.delivered_pairs == budget
+    assert o.ranked_pairs == n - budget
+    got_rows = sorted(payload_notifications(
+        np.asarray(rep.payload), o.delivered_pairs, PW)[:, 0].tolist())
+    # the delivered record rows are exactly the ``budget`` records with the
+    # largest retweet counts — the last ``budget`` ingested rows
+    assert got_rows == sorted(np.asarray(rows)[-budget:].tolist())
+    check_delivery_conservation(o, rep.num_results, rep.num_notified)
+
+
+def _delivered_ordered(reports):
+    """Like ``_delivered`` but keeps delivery order (prefix comparisons)."""
+    out = {}
+    for name, rep in reports.items():
+        o = rep.overflow
+        out[name] = list(map(tuple, payload_notifications(
+            np.asarray(rep.payload), o.delivered_pairs, PW).tolist()))
+    return out
+
+
+def test_budget_rank_tie_determinism():
+    """Constant scores + budget B: the kept set is the first B pairs in
+    ravel (delivery) order — exactly the scorer-less delivered PREFIX (flat
+    mode: one sID per pair) — and the outcome is identical run to run."""
+    runs = []
+    for _ in range(2):
+        base = _engine(seed=7)
+        want = _delivered_ordered(base.execute_all(FLAGS_FLAT, deliver=True))
+        eng = _engine(seed=7, stage=enrich.NoopScorer(budget=9))
+        reports = eng.execute_all(FLAGS_FLAT, deliver=True)
+        got = _delivered_ordered(reports)
+        for name in got:
+            o = reports[name].overflow
+            assert o.delivered_pairs <= 9
+            assert got[name] == want[name][:len(got[name])]
+            if reports[name].num_results > 9:
+                assert o.ranked_pairs == reports[name].num_results - 9
+        runs.append(got)
+    assert runs[0] == runs[1]
+
+
+def test_conservation_with_ranked_drops_and_overflow():
+    """Ranked drops compose with capacity overflow (tight caps + ring):
+    conservation still telescopes per stage and ranked_* is a subset of
+    dropped_*."""
+    stage = enrich.HeuristicScorer(budget=6)
+    eng = _engine(seed=5, stage=stage, max_deliver_pairs=4, max_notify=8,
+                  ring_capacity=16)
+    for _ in range(3):
+        rng = np.random.default_rng(eng.now + 1)
+        eng.ingest(make_tweets(rng, 96, t0=eng.now + 1, match_drugs=0.3))
+        reports = eng.execute_all(FLAGS_AGG, deliver=True)
+        for rep in reports.values():
+            o = rep.overflow
+            check_delivery_conservation(o, rep.num_results, rep.num_notified)
+            assert o.ranked_pairs <= o.dropped_pairs
+            assert o.ranked_sids <= o.dropped_sids
+            assert o.delivered_pairs <= min(6, 4)
+
+
+def test_detach_and_swap_stage():
+    """set_enrichment(None) restores scorer-less delivery; a swapped stage
+    re-keys the dispatched plans (different identity) without error."""
+    base = _engine(seed=2)
+    want = _delivered(base.execute_all(FLAGS_AGG, deliver=True))
+    eng = _engine(seed=2, stage=enrich.HeuristicScorer(budget=3))
+    eng.execute_all(FLAGS_AGG, deliver=True)
+    assert eng.set_enrichment(None)
+    assert not eng.set_enrichment(None)
+    rng = np.random.default_rng(99)
+    base.ingest(make_tweets(rng, 64, t0=base.now + 1))
+    rng = np.random.default_rng(99)
+    eng.ingest(make_tweets(rng, 64, t0=eng.now + 1))
+    w2 = _delivered(base.execute_all(FLAGS_AGG, deliver=True))
+    g2 = _delivered(eng.execute_all(FLAGS_AGG, deliver=True))
+    for name in w2:
+        assert g2[name][0] == w2[name][0]
+        assert g2[name][2] == w2[name][2]
+    with pytest.raises(TypeError):
+        eng.set_enrichment(object())
+
+
+def test_zero_steady_state_retraces_with_scorer():
+    """A fixed attached stage traces once per plan-group shape; subsequent
+    ticks replay cached executables (traces counter flat)."""
+    eng = _engine(seed=4, stage=enrich.HeuristicScorer(budget=8))
+    for tick in range(4):
+        rng = np.random.default_rng(100 + tick)
+        eng.ingest(make_tweets(rng, 96, t0=eng.now + 1, match_drugs=0.3))
+        eng.execute_all(FLAGS_AGG, timed=False, deliver=True)
+        if tick == 1:
+            snap = eng.maintenance.snapshot()
+    assert eng.maintenance.since(snap).traces == 0
+
+
+def test_pipelined_dispatch_with_scorer():
+    """The stage rides the asynchronous pipeline: dispatch_all defers the
+    sync, rank stats land lazily, conservation holds."""
+    eng = _engine(seed=6, stage=enrich.HeuristicScorer(budget=8))
+    pipe = TickPipeline(eng, depth=3)
+    seen = []
+    for tick in range(5):
+        rng = np.random.default_rng(200 + tick)
+        eng.ingest(make_tweets(rng, 96, t0=eng.now + 1, match_drugs=0.3))
+        seen.extend(pipe.step(FLAGS_AGG, deliver=True))
+    seen.extend(pipe.flush())
+    assert len(seen) == 5 and pipe.max_in_flight == 3
+    ranked = 0
+    for _, reports in seen:
+        for rep in reports.values():
+            o = rep.overflow
+            check_delivery_conservation(o, rep.num_results, rep.num_notified)
+            ranked += o.ranked_pairs
+    assert ranked > 0
+
+
+# ---------------------------------------------------------------------------
+# sharded engine
+# ---------------------------------------------------------------------------
+
+def _sharded(num_shards, stage=None, seed=0):
+    rng = np.random.default_rng(seed)
+    eng = ShardedBADEngine(num_shards=num_shards,
+                           dataset_capacity=4096, index_capacity=1024,
+                           max_window=2048, max_candidates=512,
+                           brokers=("B1", "B2"), group_cap=8,
+                           max_deliver_pairs=256, max_notify=512,
+                           ring_capacity=0)
+    eng.debug_delivery_buffers = True
+    eng.create_channel(tweets_about_drugs())
+    eng.subscribe_bulk("TweetsAboutDrugs", rng.integers(0, 50, 200),
+                       rng.integers(0, 2, 200))
+    if stage is not None:
+        eng.set_enrichment(stage)
+    eng.ingest(make_tweets(rng, 192, match_drugs=0.3))
+    return eng
+
+
+def _sharded_delivered(reports):
+    out = {}
+    for name, rep in reports.items():
+        pairs, sids = [], []
+        for shard_rep in rep.per_shard:
+            o = shard_rep.overflow
+            pairs.extend(map(tuple, payload_notifications(
+                np.asarray(shard_rep.payload), o.delivered_pairs,
+                PW).tolist()))
+            sids.extend(np.asarray(shard_rep.notify)[:o.delivered_sids]
+                        .tolist())
+        out[name] = (sorted(pairs), sorted(sids), rep.overflow)
+    return out
+
+
+@pytest.mark.multidevice
+def test_sharded_noop_parity(multidevice):
+    """NoopScorer on the mesh: per-shard budgets never bind, so delivered
+    content and merged stats equal the scorer-less mesh exactly."""
+    base = _sharded(3)
+    enriched = _sharded(3, stage=enrich.NoopScorer(budget=100_000))
+    want = _sharded_delivered(base.execute_all(FLAGS_AGG, deliver=True))
+    got = _sharded_delivered(enriched.execute_all(FLAGS_AGG, deliver=True))
+    for name in want:
+        assert got[name] == want[name]
+
+
+@pytest.mark.multidevice
+def test_sharded_ranked_budget_per_shard(multidevice):
+    """The budget binds PER SHARD (a per-device delivery capacity): merged
+    delivered pairs <= shards * budget, merged ranked_* sums shard-wise,
+    and global conservation telescopes."""
+    budget = 4
+    eng = _sharded(3, stage=enrich.HeuristicScorer(budget=budget))
+    rep = eng.execute_all(FLAGS_AGG, deliver=True)["TweetsAboutDrugs"]
+    o = rep.overflow
+    assert o.delivered_pairs <= 3 * budget
+    assert o.ranked_pairs > 0
+    check_delivery_conservation(o, rep.num_results, rep.num_notified)
+    assert o.ranked_pairs == sum(
+        r.overflow.ranked_pairs for r in rep.per_shard)
+
+
+@pytest.mark.multidevice
+def test_sharded_enrichment_survives_reshard(multidevice):
+    """reshard rebuilds shards with the stage attached (identity preserved),
+    so post-reshard ticks still rank."""
+    eng = _sharded(2, stage=enrich.HeuristicScorer(budget=4))
+    eng.execute_all(FLAGS_AGG, deliver=True)
+    eng.reshard(3)
+    assert all(e.enrichment is eng._enrichment for e in eng.shards)
+    rng = np.random.default_rng(42)
+    eng.ingest(make_tweets(rng, 96, t0=eng.now + 1, match_drugs=0.3))
+    rep = eng.execute_all(FLAGS_AGG, deliver=True)["TweetsAboutDrugs"]
+    assert rep.overflow.ranked_pairs > 0
+
+
+# ---------------------------------------------------------------------------
+# execution-surface consolidation
+# ---------------------------------------------------------------------------
+
+def test_engine_protocol_satisfied():
+    """Both engines structurally satisfy the typed driver surface."""
+    eng = _engine()
+    sh = ShardedBADEngine(num_shards=1, dataset_capacity=1024,
+                          index_capacity=256, max_window=512,
+                          max_candidates=128)
+    assert isinstance(eng, EngineProtocol)
+    assert isinstance(sh, EngineProtocol)
+    assert not isinstance(object(), EngineProtocol)
+
+
+def test_execution_request_validation():
+    with pytest.raises(ValueError):
+        ExecutionRequest(flags=FLAGS_AGG,
+                         plan=ChannelPlan.from_flags(FLAGS_AGG))
+    with pytest.raises(ValueError):
+        ExecutionRequest(backend="not-a-backend")
+    req = ExecutionRequest(channels=["a", "b"])
+    assert req.channels == ("a", "b")
+
+
+def test_execution_request_equivalence():
+    """The legacy facades and the explicit request produce identical
+    reports; plan and flags+backend spellings of the same plan agree."""
+    a = _engine(seed=8)
+    b = _engine(seed=8)
+    c = _engine(seed=8)
+    want = _delivered(a.execute_all(FLAGS_AGG, deliver=True))
+    via_req = _delivered(b.execute(
+        ExecutionRequest(flags=FLAGS_AGG, deliver=True)))
+    plan = ChannelPlan.from_flags(FLAGS_AGG, "oracle")
+    via_plan = _delivered(c.execute(
+        ExecutionRequest(plan=plan, deliver=True)))
+    for name in want:
+        assert via_req[name] == want[name]
+        assert via_plan[name] == want[name]
+
+
+def test_execution_request_channel_subset():
+    """channels= restricts execution; unknown channels raise; the other
+    channel's watermark does not advance."""
+    eng = _engine(seed=9)
+    reports = eng.execute(ExecutionRequest(
+        channels=("TweetsAboutDrugs",), deliver=True))
+    assert set(reports) == {"TweetsAboutDrugs"}
+    assert eng.channels["TweetsAboutDrugs"].executions == 1
+    assert eng.channels["MostThreateningTweets"].executions == 0
+    with pytest.raises(KeyError):
+        eng.execute(ExecutionRequest(channels=("NoSuchChannel",)))
+    empty = eng.execute(ExecutionRequest(channels=()))
+    assert empty == {}
+
+
+def test_execution_request_backend_override():
+    """backend= overrides the kernel backend on assigned plans — the old
+    execute_channel(backend=...) knob on the fused path."""
+    eng = _engine(seed=10)
+    for name in eng.channels:
+        eng.set_plan(name, ChannelPlan.from_flags(FLAGS_AGG, "oracle"))
+    want = _delivered(eng.execute_all(None, deliver=True))
+    eng2 = _engine(seed=10)
+    for name in eng2.channels:
+        eng2.set_plan(name, ChannelPlan.from_flags(FLAGS_AGG, "oracle"))
+    got = _delivered(eng2.execute(ExecutionRequest(
+        backend="compact", deliver=True)))
+    for name in want:   # compact join is content-identical to padded
+        assert got[name][0] == want[name][0]
+        assert got[name][2] == want[name][2]
+    assert all(r.plan.backend == "compact"
+               for r in eng2.execute(ExecutionRequest(
+                   backend="compact")).values())
+
+
+# ---------------------------------------------------------------------------
+# examples smoke (reduced size, slow job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_enriched_pipeline_example_smoke():
+    """The example runs end to end at reduced size on the heuristic path
+    and ranks against the budget."""
+    path = (pathlib.Path(__file__).resolve().parents[1] / "examples"
+            / "enriched_pipeline.py")
+    spec = importlib.util.spec_from_file_location("enriched_pipeline", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    out = mod.run(periods=2, batch=128, budget=8, heuristic=True,
+                  n_subs=100, capacity=1 << 12)
+    assert len(out) == 2
+    ranked = sum(rep.overflow.ranked_pairs
+                 for reports in out for rep in reports.values())
+    assert ranked > 0
+    for reports in out:
+        for rep in reports.values():
+            assert rep.overflow.delivered_pairs <= 8
